@@ -1,0 +1,57 @@
+"""Shared helpers for the benchmark suite (1-core CPU dev box: keep tiny)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.llama_paper import smoke
+from repro.core import (CommType, CommunicationChannel, ExecutorController,
+                        GeneratorExecutor, RewardExecutor, TrainerExecutor,
+                        WeightsCommunicationChannel)
+from repro.rl.data import ArithmeticTasks
+
+
+def tiny_cfg(**kw):
+    base = dict(n_layers=2, d_model=64, n_heads=4, n_kv_heads=2,
+                head_dim=16, d_ff=128, vocab=64)
+    base.update(kw)
+    return smoke().replace(**base)
+
+
+def build_pipeline(cfg, *, mode="async", staleness=1, clip_mode="aipo",
+                   lr=5e-3, n_prompts=8, n_per_prompt=4, max_new=6,
+                   max_steps=20, seed=0, quantize=False,
+                   weights=CommType.DDMA_WEIGHTS_UPDATE, max_operand=9):
+    tasks = ArithmeticTasks(prompt_len=10, max_operand=max_operand, ops="+",
+                            seed=seed)
+    gen = GeneratorExecutor(cfg, tasks, n_prompts=n_prompts,
+                            n_per_prompt=n_per_prompt, max_new=max_new,
+                            temperature=1.0, seed=seed, quantize=quantize)
+    rew = RewardExecutor(n_per_prompt=n_per_prompt)
+    trn = TrainerExecutor(cfg, lr=lr, clip_mode=clip_mode, seed=seed)
+    ctl = ExecutorController(
+        [gen, rew, trn],
+        [WeightsCommunicationChannel("policy_model", trn, gen, weights),
+         CommunicationChannel("completions", gen, rew, CommType.GATHER),
+         CommunicationChannel("completions_with_reward", rew, trn,
+                              CommType.SCATTER)],
+        max_steps=max_steps, mode=mode, staleness=staleness)
+    return ctl
+
+
+def timeit(fn, *args, repeats=5, **kw):
+    fn(*args, **kw)                      # warmup / compile
+    ts = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        out = fn(*args, **kw)
+        jax.block_until_ready(out) if out is not None else None
+        ts.append(time.perf_counter() - t0)
+    return float(np.min(ts))            # min = least scheduler interference
+
+
+def emit(name: str, us_per_call: float, derived: str = ""):
+    print(f"{name},{us_per_call:.1f},{derived}")

@@ -1,0 +1,50 @@
+"""Paper Fig. 5: per-sample processing time decreases with batch size
+(Assumption 7.1) -- measured for both training steps and generation on the
+tiny model, then fitted to eta(b) = alpha + beta/b."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, timeit, tiny_cfg
+from repro.core.theory import fit_eta
+from repro.rl.rollout import generate
+from repro.train.trainstep import init_train_state, make_train_step
+
+
+def main():
+    cfg = tiny_cfg()
+    state = init_train_state(cfg, jax.random.PRNGKey(0), jnp.float32)
+    step = jax.jit(make_train_step(cfg, lr=1e-3))
+    S = 24
+    etas_t, etas_g, bs = [], [], [4, 8, 16, 32]
+    for b in bs:
+        batch = {
+            "tokens": jnp.ones((b, S), jnp.int32),
+            "behavior_logp": jnp.zeros((b, S)),
+            "advantages": jnp.ones((b, S)),
+            "mask": jnp.ones((b, S)),
+        }
+        t = timeit(lambda: step(state, batch)[1]["loss"])
+        etas_t.append(t / b)
+        emit(f"fig5/train_eta_b{b}", t / b * 1e6)
+    params = state.params
+    for b in bs:
+        prompts = jnp.ones((b, 8), jnp.int32) * 5
+        t = timeit(lambda: generate(params, cfg, prompts, max_new=8,
+                                    key=jax.random.PRNGKey(1)).tokens)
+        etas_g.append(t / b)
+        emit(f"fig5/gen_eta_b{b}", t / b * 1e6)
+    mono_t = all(etas_t[i + 1] <= etas_t[i] * 1.05 for i in range(3))
+    mono_g = all(etas_g[i + 1] <= etas_g[i] * 1.05 for i in range(3))
+    ct = fit_eta(bs, etas_t)
+    cg = fit_eta(bs, etas_g)
+    emit("fig5/assumption_7_1", 0.0,
+         f"train_monotone={mono_t};gen_monotone={mono_g};"
+         f"eta_t=({ct.alpha:.2e}+{ct.beta:.2e}/b);"
+         f"eta_g=({cg.alpha:.2e}+{cg.beta:.2e}/b)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,75 @@
+"""Generate EXPERIMENTS.md dry-run/roofline tables from the JSON records."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from repro import configs
+from repro.configs.base import INPUT_SHAPES, param_count
+
+
+def load(pattern):
+    out = {}
+    for f in sorted(glob.glob(pattern)):
+        r = json.load(open(f))
+        out[(r["arch"], r["shape"], r.get("mesh_name", "pod1"),
+             os.path.basename(f))] = r
+    return out
+
+
+def useful(rec):
+    cfg = configs.get_config(rec["arch"])
+    shape = INPUT_SHAPES[rec["shape"]]
+    _, active = param_count(cfg)
+    tokens = shape.global_batch * (1 if shape.kind == "decode"
+                                   else shape.seq_len)
+    mult = 6 if shape.kind == "train" else 2
+    return mult * active * tokens / max(
+        rec["flops_per_device"] * rec["n_chips"], 1.0)
+
+
+def roofline_table():
+    rows = ["| arch | shape | compute_s | memory_s | collective_s | "
+            "dominant | useful | peak GB/chip | fits 16GB |",
+            "|---|---|---|---|---|---|---|---|---|"]
+    for (arch, shape, mesh, _), r in sorted(
+            load("experiments/dryrun/*_pod1.json").items()):
+        t = r["roofline"]
+        rows.append(
+            f"| {arch} | {shape} | {t['compute_s']:.3f} | "
+            f"{t['memory_s']:.3f} | {t['collective_s']:.3f} | "
+            f"{r['dominant'][:-2]} | {useful(r):.2f} | "
+            f"{r['peak_bytes_per_device']/1e9:.1f} | "
+            f"{'yes' if r['fits_hbm'] else 'NO'} |")
+    return "\n".join(rows)
+
+
+def dryrun_table():
+    rows = ["| arch | shape | mesh | chips | compile_s | "
+            "args GB/chip | temps GB/chip | collectives |",
+            "|---|---|---|---|---|---|---|---|"]
+    for mesh in ("pod1", "pod2"):
+        for (arch, shape, m, _), r in sorted(
+                load(f"experiments/dryrun/*_{mesh}.json").items()):
+            cols = ",".join(f"{k.split('-')[1] if '-' in k else k}:"
+                            f"{v/1e9:.0f}G"
+                            for k, v in sorted(r["collectives"].items(),
+                                               key=lambda kv: -kv[1])[:3])
+            rows.append(
+                f"| {arch} | {shape} | {m} | {r['n_chips']} | "
+                f"{r['compile_s']} | {r['argument_bytes']/1e9:.2f} | "
+                f"{r['temp_bytes']/1e9:.1f} | {cols} |")
+    return "\n".join(rows)
+
+
+def inject(md_path, marker, table):
+    s = open(md_path).read()
+    s = s.replace(f"<!-- {marker} -->", table)
+    open(md_path, "w").write(s)
+
+
+if __name__ == "__main__":
+    inject("EXPERIMENTS.md", "ROOFLINE_TABLE", roofline_table())
+    inject("EXPERIMENTS.md", "DRYRUN_TABLE", dryrun_table())
+    print("tables injected")

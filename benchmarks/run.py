@@ -1,0 +1,34 @@
+# One function per paper table/figure. Prints ``name,us_per_call,derived``
+# CSV rows.  Keep everything tiny: 1-core CPU dev box.
+import importlib
+import sys
+import traceback
+
+MODULES = [
+    "benchmarks.table3_step_time",   # Table 3: sync vs async step time
+    "benchmarks.table4_weight_sync", # Table 4: DDMA vs parameter-server
+    "benchmarks.fig5_batch_scaling", # Fig 5: Assumption 7.1
+    "benchmarks.fig6_quality",       # Fig 6: quality parity
+    "benchmarks.fig7_scaling",       # Fig 7: speedup vs scale
+    "benchmarks.fig8_offpolicy",     # Fig 8: off-policy corrections
+    "benchmarks.thm75_check",        # Theorem 7.5 numeric check
+    "benchmarks.roofline",           # deliverable (g) report
+]
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    failures = 0
+    for mod in MODULES:
+        try:
+            importlib.import_module(mod).main()
+        except Exception as e:  # noqa: BLE001
+            failures += 1
+            print(f"{mod},0.0,ERROR:{type(e).__name__}:{e}")
+            traceback.print_exc(file=sys.stderr)
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == '__main__':
+    main()

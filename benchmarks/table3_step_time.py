@@ -1,0 +1,79 @@
+"""Paper Table 3: RL step-time, synchronous baseline vs LlamaRL async.
+
+Two parts:
+  (a) MEASURED at CPU dev-box scale: wall-clock per RL step for the sync
+      (Fig. 2a) vs async (Fig. 2b) controller on the same tiny model --
+      the async win comes from overlapping generation with training.
+  (b) ANALYTIC at paper scale: Section-7 solvers with eta curves calibrated
+      so the synchronous baseline matches Table 3's measured step times
+      (22.45 / 82.32 / 635.8 s), then the async optimum is *predicted* and
+      compared against the paper's measured LlamaRL rows.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import build_pipeline, emit, tiny_cfg
+from repro.core.theory import EtaCurve, llama_hw, solve_async, solve_sync
+
+PAPER_ROWS = [
+    # size_B, gpus, T_sync (paper), best T_async (paper)
+    (8, 256, 22.45, 8.90),
+    (70, 256, 82.32, 20.67),
+    (405, 1024, 635.8, 59.5),
+]
+
+
+def measured_cpu_scale(steps=6):
+    cfg = tiny_cfg()
+    out = {}
+    for mode in ("sync", "async"):
+        ctl = build_pipeline(cfg, mode=mode, max_steps=steps, lr=1e-3)
+        t0 = time.perf_counter()
+        hist = ctl.run()
+        # skip step 0 (compile)
+        per = [h["step_time"] for h in hist[1:]]
+        out[mode] = float(np.mean(per))
+    return out
+
+
+def analytic_paper_scale():
+    rows = []
+    for size, gpus, t_sync_paper, t_async_paper in PAPER_ROWS:
+        hw = llama_hw(size, gpus)
+        # calibrate eta curves: alpha from paper sync time, mild 1/b term
+        base = t_sync_paper * gpus / (hw.B0 * 5 * (4 * hw.W0 + hw.W0)
+                                      / hw.M0) / 2
+        eta_t = EtaCurve(alpha=base, beta=base * 16)
+        eta_g = EtaCurve(alpha=base * 3, beta=base * 64)
+        s = solve_sync(hw, eta_t, eta_g)
+        a = solve_async(hw, eta_t, eta_g)
+        scale = t_sync_paper / s["T"]          # calibrate to paper sync row
+        rows.append({
+            "size": size,
+            "T_sync": s["T"] * scale,
+            "T_async_pred": a["T"] * scale,
+            "speedup_pred": s["T"] / a["T"],
+            "speedup_paper": t_sync_paper / t_async_paper,
+        })
+    return rows
+
+
+def main():
+    m = measured_cpu_scale()
+    emit("table3/measured_sync_step", m["sync"] * 1e6)
+    emit("table3/measured_async_step", m["async"] * 1e6,
+         f"speedup={m['sync'] / m['async']:.2f}x;"
+         "note=1 CPU device => gen/train cannot overlap, async pays pure "
+         "pipeline overhead; the speedup needs disjoint device groups "
+         "(analytic rows + Thm 7.5)")
+    for r in analytic_paper_scale():
+        emit(f"table3/analytic_{r['size']}B_sync", r["T_sync"] * 1e6)
+        emit(f"table3/analytic_{r['size']}B_async", r["T_async_pred"] * 1e6,
+             f"pred={r['speedup_pred']:.2f}x;paper={r['speedup_paper']:.2f}x")
+
+
+if __name__ == "__main__":
+    main()

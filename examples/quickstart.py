@@ -1,0 +1,48 @@
+"""Quickstart: asynchronous off-policy RL (AIPO) on a toy arithmetic task.
+
+    PYTHONPATH=src python examples/quickstart.py
+
+Builds the paper's full pipeline -- generator, rule-based reward, AIPO
+trainer, DDMA weight channel, single controller -- on a ~1M-param policy
+and runs 20 async RL steps.  Watch mean_reward rise and mean_ratio hover
+just off 1.0 (that's the 1-step off-policyness AIPO corrects)."""
+import jax.numpy as jnp
+
+from repro.configs.llama_paper import smoke
+from repro.core import (CommType, CommunicationChannel, ExecutorController,
+                        GeneratorExecutor, RewardExecutor, TrainerExecutor,
+                        WeightsCommunicationChannel)
+from repro.rl.data import ArithmeticTasks
+
+
+def main():
+    cfg = smoke().replace(n_layers=2, d_model=128, n_heads=4, n_kv_heads=2,
+                          head_dim=32, d_ff=256, vocab=64)
+    tasks = ArithmeticTasks(prompt_len=10, max_operand=9, ops="+")
+
+    generator = GeneratorExecutor(cfg, tasks, n_prompts=8, n_per_prompt=4,
+                                  max_new=6, temperature=1.0)
+    reward = RewardExecutor(n_per_prompt=4)
+    trainer = TrainerExecutor(cfg, lr=2e-3, rho=4.0, clip_mode="aipo")
+
+    controller = ExecutorController(
+        executor_group=[generator, reward, trainer],
+        communication_channels=[
+            WeightsCommunicationChannel("policy_model", trainer, generator),
+            CommunicationChannel("completions", generator, reward,
+                                 CommType.GATHER),
+            CommunicationChannel("completions_with_reward", reward, trainer,
+                                 CommType.SCATTER),
+        ],
+        max_steps=20, mode="async", staleness=1)
+
+    history = controller.run()
+    print(f"{'step':>4} {'reward':>7} {'loss':>8} {'ratio':>6} {'time':>6}")
+    for h in history:
+        print(f"{h['step']:>4} {h['mean_reward']:>7.3f} "
+              f"{h['loss']:>8.4f} {h['mean_ratio']:>6.3f} "
+              f"{h['step_time']:>6.2f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,23 @@
+"""Lazy exports (avoids aipo<->executor<->trainstep import cycles)."""
+_EXPORTS = {
+    "aipo_loss": "repro.core.aipo",
+    "importance_weights": "repro.core.aipo",
+    "token_logprobs": "repro.core.aipo",
+    "CommType": "repro.core.channels",
+    "CommunicationChannel": "repro.core.channels",
+    "WeightsCommunicationChannel": "repro.core.channels",
+    "ExecutorController": "repro.core.controller",
+    "Executor": "repro.core.executor",
+    "GeneratorExecutor": "repro.core.executor",
+    "RewardExecutor": "repro.core.executor",
+    "TrainerExecutor": "repro.core.executor",
+    "RefPolicyExecutor": "repro.core.executor",
+}
+
+
+def __getattr__(name):
+    if name in _EXPORTS:
+        import importlib
+        mod = importlib.import_module(_EXPORTS[name])
+        return getattr(mod, name)
+    raise AttributeError(name)

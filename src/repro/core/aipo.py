@@ -1,0 +1,88 @@
+"""AIPO: Asynchronous Importance-weighted Policy Optimization (paper Sec. 6).
+
+The learner update is
+
+    sum_t  min(pi(y_t|x,y_<t) / mu(y_t|x,y_<t), rho) * A(x, y_<=t)
+           * grad log pi(y_t|x,y_<t)
+
+with a *one-sided* clip at rho (paper recommends rho in [2, 10]); the clipped
+importance weight is a stop-gradient coefficient.  ``clip_mode`` also
+implements the ablations of Fig. 8 / App. A:
+
+  * "aipo"  -- the paper's one-sided clipped IS weight.
+  * "ppo"   -- PPO/GRPO double-sided clipping (trust-region style).
+  * "none"  -- no IS correction (the unstable naive asynchronous baseline).
+  * "onpolicy" -- weight == 1; identical to "none" but named for the
+    synchronous baseline where mu == pi by construction.
+
+The RLOO-style group-mean baseline (paper's v(x) = mean_i r(x, y_i)) lives in
+``repro.rl.rewards``; this module consumes per-token advantages.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def token_logprobs(logits, tokens):
+    """log pi(token) per position.  logits: [B, T, V]; tokens: [B, T]."""
+    logz = jax.nn.logsumexp(logits.astype(jnp.float32), axis=-1)
+    tok_logit = jnp.take_along_axis(
+        logits.astype(jnp.float32), tokens[..., None], axis=-1)[..., 0]
+    return tok_logit - logz
+
+
+def importance_weights(logp, behavior_logp, *, rho: float,
+                       clip_mode: str = "aipo", ppo_eps: float = 0.2):
+    """Clipped IS coefficient (stop-gradient applied by the caller's loss)."""
+    ratio = jnp.exp(logp - behavior_logp)
+    if clip_mode == "aipo":
+        return jnp.minimum(ratio, rho)
+    if clip_mode == "ppo":
+        return jnp.clip(ratio, 1.0 - ppo_eps, 1.0 + ppo_eps)
+    if clip_mode == "is_unclipped":
+        return ratio                    # full IS: unbiased, unbounded var
+    if clip_mode in ("none", "onpolicy"):
+        return jnp.ones_like(ratio)
+    raise ValueError(clip_mode)
+
+
+def aipo_loss(logits, tokens, behavior_logp, advantages, mask, *,
+              rho: float = 4.0, clip_mode: str = "aipo",
+              ppo_eps: float = 0.2, kl_coef: float = 0.0,
+              ref_logp: Optional[jax.Array] = None):
+    """Scalar AIPO loss (negative clipped-IS policy gradient surrogate).
+
+    logits: [B, T, V] for *action* positions; tokens/behavior_logp/
+    advantages/mask: [B, T].  Returns (loss, metrics).
+    """
+    logp = token_logprobs(logits, tokens)
+    adv = advantages.astype(jnp.float32)
+    if kl_coef and ref_logp is not None:
+        # k1 estimator of KL(pi || pi_base), added as a per-token penalty
+        adv = adv - kl_coef * (logp - ref_logp)
+    w = importance_weights(logp, behavior_logp, rho=rho, clip_mode=clip_mode,
+                           ppo_eps=ppo_eps)
+    w = jax.lax.stop_gradient(w)
+    if clip_mode == "ppo":
+        # PPO surrogate (min of clipped/unclipped ratio objectives)
+        ratio = jnp.exp(logp - jax.lax.stop_gradient(behavior_logp))
+        unclipped = ratio * adv
+        clipped = jnp.clip(ratio, 1 - ppo_eps, 1 + ppo_eps) * adv
+        per_tok = -jnp.minimum(unclipped, clipped)
+    else:
+        per_tok = -w * adv * logp
+    m = mask.astype(jnp.float32)
+    denom = jnp.maximum(jnp.sum(m), 1.0)
+    loss = jnp.sum(per_tok * m) / denom
+    ratio_raw = jnp.exp(logp - behavior_logp)
+    metrics = {
+        "loss": loss,
+        "mean_ratio": jnp.sum(ratio_raw * m) / denom,
+        "clip_frac": jnp.sum((ratio_raw > rho) * m) / denom,
+        "mean_logp": jnp.sum(logp * m) / denom,
+        "mean_adv": jnp.sum(adv * m) / denom,
+    }
+    return loss, metrics

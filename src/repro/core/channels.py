@@ -1,0 +1,79 @@
+"""Communication channels (paper Sec. 5.1.2).
+
+A channel is a named, directed link between an outbound and an inbound
+executor with a communication type:
+
+  BROADCAST -- outbound data replicated to the inbound executor's devices
+  SCATTER   -- outbound data partitioned along the batch axis
+  GATHER    -- data aggregated (fully replicated single copy) at inbound
+  DDMA_WEIGHTS_UPDATE -- model weights resharded trainer->generator via
+                         direct device-to-device transfer (repro.core.ddma)
+
+With meshes attached, array payloads are moved with a resharding
+``jax.device_put`` (the ICI/DCN zero-copy path); without meshes (single-
+device dev box) transfers degrade gracefully to no-ops.
+"""
+from __future__ import annotations
+
+import enum
+from dataclasses import dataclass, field
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.core import ddma
+from repro.core.executor import Executor
+
+
+class CommType(enum.Enum):
+    BROADCAST = "broadcast"
+    SCATTER = "scatter"
+    GATHER = "gather"
+    DDMA_WEIGHTS_UPDATE = "ddma_weights_update"
+    PS_WEIGHTS_UPDATE = "ps_weights_update"   # slow baseline, for benches
+
+
+def _payload_sharding(mesh, comm_type: CommType, x):
+    if mesh is None:
+        return None
+    if comm_type == CommType.SCATTER and hasattr(x, "ndim") and x.ndim >= 1:
+        axes = mesh.axis_names
+        return NamedSharding(mesh, P(axes[0]))
+    return NamedSharding(mesh, P())            # replicated
+
+
+@dataclass
+class CommunicationChannel:
+    name: str
+    outbound: Executor
+    inbound: Executor
+    comm_type: CommType
+
+    def communicate(self):
+        data = self.outbound.get_output(self.name)
+        mesh = self.inbound.mesh
+        if self.comm_type in (CommType.DDMA_WEIGHTS_UPDATE,
+                              CommType.PS_WEIGHTS_UPDATE):
+            if mesh is not None:
+                sharding = NamedSharding(mesh, P())
+                sync = (ddma.ddma_weight_sync
+                        if self.comm_type == CommType.DDMA_WEIGHTS_UPDATE
+                        else ddma.ps_weight_sync)
+                data = sync(data, sharding)
+            self.inbound.set_weights(data)
+            return
+        if mesh is not None:
+            data = jax.tree.map(
+                lambda x: jax.device_put(
+                    x, _payload_sharding(mesh, self.comm_type, x))
+                if isinstance(x, (jax.Array, jnp.ndarray)) else x,
+                data)
+        self.inbound.put_input(self.name, data)
+
+
+def WeightsCommunicationChannel(name, outbound, inbound,
+                                comm_type=CommType.DDMA_WEIGHTS_UPDATE):
+    """Paper Algorithm 2's WeightsCommunicationChannel constructor."""
+    return CommunicationChannel(name, outbound, inbound, comm_type)

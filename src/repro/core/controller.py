@@ -1,0 +1,122 @@
+"""Single-controller event loop (paper Sec. 5.1.3, Algorithm 1).
+
+Two execution modes, matching Fig. 2:
+
+  * mode="sync"  -- synchronous on-policy RL: generate -> score -> train,
+    each stage blocking the next; weights synced every tick (the
+    DeepSpeed-Chat-like baseline, up to the distributed placement).
+  * mode="async" -- asynchronous off-policy RL: the next generation batch is
+    *dispatched before* the trainer consumes the current one; on disjoint
+    submeshes XLA overlaps them (JAX async dispatch).  The trainer thus
+    trains on samples >= 1 step stale; ``staleness`` deepens the lag
+    (Fig. 2's 1..n-step delay), absorbed by AIPO's off-policy correction.
+
+Because executors are jitted onto their own submeshes and dispatch is
+asynchronous, the controller -- exactly as the paper puts it -- is
+essentially just an event loop.
+"""
+from __future__ import annotations
+
+import collections
+import time
+from typing import Dict, List
+
+from repro.core.channels import CommType, CommunicationChannel
+from repro.core.executor import Executor
+
+
+class ExecutorController:
+    def __init__(self, executor_group: List[Executor],
+                 communication_channels: List[CommunicationChannel],
+                 max_steps: int, mode: str = "async", staleness: int = 1,
+                 checkpoint_every: int = 0, checkpoint_path: str = ""):
+        assert mode in ("sync", "async")
+        self.executors = {e.name: e for e in executor_group}
+        self.channels = communication_channels
+        self.max_steps = max_steps
+        self.mode = mode
+        self.staleness = max(1, staleness)
+        self.checkpoint_every = checkpoint_every
+        self.checkpoint_path = checkpoint_path
+        self.history: List[Dict] = []
+        self._weight_queue = collections.deque()
+
+    def _data_channels(self):
+        return [c for c in self.channels
+                if c.comm_type in (CommType.BROADCAST, CommType.SCATTER,
+                                   CommType.GATHER)]
+
+    def _weight_channels(self):
+        return [c for c in self.channels
+                if c.comm_type in (CommType.DDMA_WEIGHTS_UPDATE,
+                                   CommType.PS_WEIGHTS_UPDATE)]
+
+    def _sync_weights(self, step: int):
+        """Queue trainer weights; deliver them ``staleness`` ticks late."""
+        for ch in self._weight_channels():
+            self._weight_queue.append(ch.outbound.get_output(ch.name))
+            while len(self._weight_queue) > self.staleness:
+                self._weight_queue.popleft()
+            stale = self._weight_queue[0]
+            mesh = ch.inbound.mesh
+            if mesh is not None:
+                from jax.sharding import NamedSharding, PartitionSpec as P
+                from repro.core import ddma
+                sync = (ddma.ddma_weight_sync
+                        if ch.comm_type == CommType.DDMA_WEIGHTS_UPDATE
+                        else ddma.ps_weight_sync)
+                stale = sync(stale, NamedSharding(mesh, P()))
+            ch.inbound.set_weights(stale)
+
+    def _pipeline(self, gen=None, captured=None):
+        """Walk data channels in declared order; each inbound executor steps
+        right after its channel delivers (gen -> reward -> trainer ...)."""
+        for ch in self._data_channels():
+            if gen is not None and ch.outbound is gen and captured is not None:
+                ch.inbound.put_input(ch.name, captured[ch.name])
+            else:
+                ch.communicate()
+            ch.inbound.step()
+
+    def init(self):
+        for e in self.executors.values():
+            e.init()
+        self._sync_weights(step=-1)   # initial weights -> generator
+
+    def run(self) -> List[Dict]:
+        self.init()
+        gen = next((e for e in self.executors.values()
+                    if getattr(e, "role", "") == "generator"), None)
+        trainer = next((e for e in self.executors.values()
+                        if getattr(e, "role", "") == "trainer"), None)
+
+        if self.mode == "async" and gen is not None:
+            gen.step()                      # prime: batch 0, initial weights
+
+        for step in range(self.max_steps):
+            t0 = time.perf_counter()
+            for e in self.executors.values():
+                e.set_step(step)
+
+            if self.mode == "sync":
+                if gen is not None:
+                    gen.step()
+                self._pipeline()
+            else:
+                captured = dict(gen._outputs) if gen is not None else None
+                if gen is not None:
+                    gen.step()              # dispatch batch step+1 (overlaps)
+                self._pipeline(gen=gen, captured=captured)
+
+            self._sync_weights(step)
+            metrics = dict(trainer.metrics_history[-1]) if trainer and \
+                trainer.metrics_history else {}
+            metrics["step"] = step
+            metrics["step_time"] = time.perf_counter() - t0
+            self.history.append(metrics)
+
+            if self.checkpoint_every and \
+                    (step + 1) % self.checkpoint_every == 0:
+                for e in self.executors.values():
+                    e.save_checkpoint(self.checkpoint_path, step)
+        return self.history

@@ -1,0 +1,88 @@
+"""DDMA: distributed direct-memory-access weight synchronization (Sec. 5.2).
+
+The paper's DDMA does zero-copy GPU-to-GPU transfers (NVLink/IB) from the
+trainer's FSDP shards to the generator's TP shards, never staging through
+host memory.  The JAX/TPU-native equivalent is a *resharding device_put*:
+
+    jax.device_put(params, NamedSharding(generator_mesh, generator_spec))
+
+XLA turns this into direct ICI/DCN device-to-device copies.  For contrast
+(Table 4's OpenRLHF-style baseline and the parameter-server discussion) we
+also implement ``ps_weight_sync``: gather to host, then scatter back --
+the data path DDMA exists to avoid.
+
+``quantize_dequant`` provides the generator-side low-precision weights
+(paper: fp8; TPU-native analogue: int8 symmetric per-channel).  The real
+int8 matmul path lives in ``repro.kernels.int8_matmul``.
+"""
+from __future__ import annotations
+
+import time
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def ddma_weight_sync(params, target_shardings) -> Any:
+    """Direct device-to-device resharding transfer (the DDMA path).
+
+    target_shardings: pytree of jax.sharding.Sharding (or a single sharding
+    applied to every leaf)."""
+    if not isinstance(target_shardings, (dict, list, tuple)):
+        target_shardings = jax.tree.map(lambda _: target_shardings, params)
+    return jax.device_put(params, target_shardings)
+
+
+def ps_weight_sync(params, target_shardings) -> Any:
+    """Parameter-server-style baseline: host gather + host scatter.
+
+    This is the slow path the paper contrasts against (Sec. 5.2): every
+    leaf is pulled to host memory, then re-uploaded."""
+    host = jax.tree.map(lambda x: np.asarray(x), params)   # device -> host
+    if not isinstance(target_shardings, (dict, list, tuple)):
+        target_shardings = jax.tree.map(lambda _: target_shardings, host)
+    return jax.device_put(host, target_shardings)          # host -> device
+
+
+def timed_sync(fn: Callable, params, shardings, repeats: int = 3):
+    """Benchmark helper: median wall-clock of a sync path."""
+    times = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        out = fn(params, shardings)
+        jax.block_until_ready(out)
+        times.append(time.perf_counter() - t0)
+    return float(np.median(times)), out
+
+
+# -------------------------------------------------- generator quantization -
+
+def quantize_int8(w: jax.Array):
+    """Symmetric per-output-channel int8 quantization of a 2-D weight."""
+    scale = jnp.max(jnp.abs(w.astype(jnp.float32)), axis=0, keepdims=True)
+    scale = jnp.maximum(scale, 1e-8) / 127.0
+    q = jnp.clip(jnp.round(w.astype(jnp.float32) / scale), -127, 127)
+    return q.astype(jnp.int8), scale.astype(jnp.float32)
+
+
+def dequantize_int8(q: jax.Array, scale: jax.Array, dtype=jnp.bfloat16):
+    return (q.astype(jnp.float32) * scale).astype(dtype)
+
+
+def quantize_dequant(params, min_size: int = 1 << 16, dtype=None):
+    """Fake-quantize every large 2-D matmul weight (fp8-generator analogue).
+
+    The returned pytree has the same dtypes/shapes, but values have been
+    through int8: this is how the *generator* policy mu ends up numerically
+    different from the learner pi -- one of the off-policyness sources AIPO
+    corrects for (paper Sec. 6, 'quantized ... behavior policy')."""
+    def qd(x):
+        if x.ndim >= 2 and x.size >= min_size and \
+                jnp.issubdtype(x.dtype, jnp.floating):
+            mat = x.reshape(-1, x.shape[-1])
+            q, s = quantize_int8(mat)
+            return dequantize_int8(q, s, dtype or x.dtype).reshape(x.shape)
+        return x
+    return jax.tree.map(qd, params)

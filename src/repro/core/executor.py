@@ -1,0 +1,229 @@
+"""Executors (paper Sec. 5.1.1): self-contained units owning a model, a
+device (sub)mesh, and one RL pipeline stage.
+
+Mirrors the paper's base-class contract: init / step / save_checkpoint /
+get_output(+get_model).  Each executor jits its computation onto its own
+submesh, which is what lets the controller's async dispatch overlap trainer
+and generator work on disjoint devices.
+"""
+from __future__ import annotations
+
+import os
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import ddma
+from repro.rl import data as rl_data
+from repro.rl import rewards as rl_rewards
+from repro.rl.rollout import action_mask, generate
+from repro.train.trainstep import TrainState, init_train_state, \
+    make_train_step
+
+
+class Executor:
+    """Base executor (paper Sec. 5.1.1)."""
+
+    role = "generic"
+
+    def __init__(self, name: str, mesh=None):
+        self.name = name
+        self.mesh = mesh
+        self.curr_step = 0
+        self._outputs: Dict[str, Any] = {}
+        self._inputs: Dict[str, Any] = {}
+
+    def init(self):
+        pass
+
+    def set_step(self, i: int):
+        self.curr_step = i
+
+    def step(self):
+        raise NotImplementedError
+
+    def get_output(self, name: str):
+        return self._outputs[name]
+
+    def put_input(self, name: str, value):
+        self._inputs[name] = value
+
+    def save_checkpoint(self, path: str, step: int):
+        pass
+
+
+class GeneratorExecutor(Executor):
+    """Policy inference: rollouts + behavior logprobs (+ optional int8)."""
+
+    role = "generator"
+
+    def __init__(self, cfg, tasks: rl_data.ArithmeticTasks, *,
+                 n_prompts: int, n_per_prompt: int, max_new: int,
+                 temperature: float = 1.0, quantize: bool = False,
+                 chunk: int = 0, seed: int = 0, mesh=None,
+                 name: str = "generator"):
+        super().__init__(name, mesh)
+        self.cfg = cfg
+        self.tasks = tasks
+        self.n_prompts = n_prompts
+        self.n_per_prompt = n_per_prompt
+        self.max_new = max_new
+        self.temperature = temperature
+        self.quantize = quantize
+        self.chunk = chunk
+        self.key = jax.random.PRNGKey(seed)
+        self.params = None
+
+    def set_weights(self, params):
+        """Receives DDMA'd trainer weights; applies generator quantization."""
+        self.params = ddma.quantize_dequant(params) if self.quantize \
+            else params
+
+    def step(self):
+        assert self.params is not None, "weights never synchronized"
+        batch = self.tasks.sample(self.n_prompts, self.n_per_prompt)
+        prompts = jnp.asarray(batch.prompts)
+        self.key, sub = jax.random.split(self.key)
+        state = generate(self.params, self.cfg, prompts,
+                         max_new=self.max_new, key=sub,
+                         temperature=self.temperature, chunk=self.chunk)
+        self._outputs["completions"] = {
+            "tokens": state.tokens,
+            "behavior_logp": state.behavior_logp,
+            "mask": action_mask(state),
+            "prompt_len": state.prompt_len,
+            "answers": batch.answers,
+        }
+        self.curr_step += 1
+        return self._outputs["completions"]
+
+
+class RewardExecutor(Executor):
+    """Rule-based scorers (lightweight python, as in the paper's Fig. 1)."""
+
+    role = "reward"
+
+    def __init__(self, *, n_per_prompt: int, scorer: str = "numeric",
+                 leave_one_out: bool = False, name: str = "reward",
+                 mesh=None):
+        super().__init__(name, mesh)
+        self.n_per_prompt = n_per_prompt
+        self.scorer = scorer
+        self.leave_one_out = leave_one_out
+
+    def step(self):
+        comp = self._inputs.get("completions_with_ref") \
+            or self._inputs["completions"]
+        toks = np.asarray(comp["tokens"])
+        Sp = int(comp["prompt_len"])
+        texts = [rl_data.decode_ids(t[Sp:]) for t in toks]
+        rewards = rl_rewards.score_group(comp["answers"], texts, self.scorer)
+        adv = rl_rewards.group_advantages(rewards, self.n_per_prompt,
+                                          self.leave_one_out)
+        mask = np.asarray(comp["mask"])
+        advantages = adv[:, None] * mask
+        out = {
+            "tokens": comp["tokens"],
+            "behavior_logp": comp["behavior_logp"],
+            "advantages": jnp.asarray(advantages),
+            "mask": comp["mask"],
+            "mean_reward": float(rewards.mean()),
+        }
+        if "ref_logp" in comp:
+            out["ref_logp"] = comp["ref_logp"]
+        self._outputs["completions_with_reward"] = out
+        self.curr_step += 1
+        return self._outputs["completions_with_reward"]
+
+
+class RefPolicyExecutor(Executor):
+    """Frozen reference policy pi_base: computes per-token ref logprobs for
+    the KL regularization term (paper Sec. 6: reward is often combined with
+    lambda_KL * D_KL(pi, pi_base)).  Weights are set once at init from the
+    trainer's initial policy and never updated."""
+
+    role = "reference"
+
+    def __init__(self, cfg, *, name: str = "ref", mesh=None):
+        super().__init__(name, mesh)
+        self.cfg = cfg
+        self.params = None
+        self._jitted = None
+
+    def set_weights(self, params):
+        # only the FIRST sync sticks: the reference stays frozen
+        if self.params is None:
+            self.params = params
+
+    def step(self):
+        assert self.params is not None
+        comp = self._inputs["completions"]
+        from repro.core.aipo import token_logprobs
+        from repro.models import forward_train
+
+        if self._jitted is None:
+            def ref_logp(params, tokens):
+                logits, _ = forward_train(params, self.cfg,
+                                          {"tokens": tokens})
+                lp = token_logprobs(logits[:, :-1], tokens[:, 1:])
+                return jnp.pad(lp, ((0, 0), (1, 0)))
+            self._jitted = jax.jit(ref_logp)
+        out = dict(comp)
+        out["ref_logp"] = self._jitted(self.params, comp["tokens"])
+        self._outputs["completions_with_ref"] = out
+        self.curr_step += 1
+        return out
+
+
+class TrainerExecutor(Executor):
+    """Policy training: AIPO update on scored completions."""
+
+    role = "trainer"
+
+    def __init__(self, cfg, *, lr=1e-3, rho=4.0, clip_mode="aipo",
+                 kl_coef=0.0, seed=0, dtype=jnp.float32, mesh=None,
+                 name: str = "trainer"):
+        super().__init__(name, mesh)
+        self.cfg = cfg
+        self.state: Optional[TrainState] = None
+        self.seed = seed
+        self.dtype = dtype
+        self._train_step = make_train_step(cfg, lr=lr, rho=rho,
+                                           clip_mode=clip_mode,
+                                           kl_coef=kl_coef)
+        self._jitted = jax.jit(self._train_step)
+        self.metrics_history = []
+
+    def init(self):
+        self.state = init_train_state(self.cfg, jax.random.PRNGKey(self.seed),
+                                      self.dtype)
+        self._outputs["policy_model"] = self.state.params
+
+    def get_model(self):
+        return self.state.params
+
+    def step(self):
+        scored = self._inputs["completions_with_reward"]
+        batch = {
+            "tokens": scored["tokens"],
+            "behavior_logp": scored["behavior_logp"],
+            "advantages": scored["advantages"],
+            "mask": scored["mask"],
+        }
+        if "ref_logp" in scored:
+            batch["ref_logp"] = scored["ref_logp"]
+        self.state, metrics = self._jitted(self.state, batch)
+        metrics = {k: float(v) for k, v in metrics.items()}
+        metrics["mean_reward"] = scored.get("mean_reward", 0.0)
+        self.metrics_history.append(metrics)
+        self._outputs["policy_model"] = self.state.params
+        self.curr_step += 1
+        return metrics
+
+    def save_checkpoint(self, path: str, step: int):
+        from repro.train.checkpoint import save_checkpoint
+        os.makedirs(path, exist_ok=True)
+        save_checkpoint(os.path.join(path, f"{self.name}_{step}"),
+                        self.state.params)

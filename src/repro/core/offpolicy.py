@@ -1,0 +1,76 @@
+"""Off-policy bookkeeping: staleness buffer + partial-rollout cache.
+
+``StalenessBuffer`` is the controller-side queue that realizes Fig. 2's
+1..n-step delay between the policy that *generated* a batch and the policy
+that *trains* on it.  ``PartialRolloutCache`` stores incomplete
+``RolloutState``s across iterations (paper Sec. 4.2, after Kimi k1.5) so
+long generations never block a training tick.
+"""
+from __future__ import annotations
+
+import collections
+from dataclasses import dataclass, field
+from typing import Any, Deque, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+from repro.rl.rollout import RolloutState
+
+
+class StalenessBuffer:
+    """FIFO of (version, batch); pop returns batches exactly ``delay``
+    versions behind the latest push."""
+
+    def __init__(self, delay: int = 1):
+        self.delay = max(0, delay)
+        self._q: Deque[Tuple[int, Any]] = collections.deque()
+        self.latest_version = -1
+
+    def push(self, version: int, batch: Any):
+        self.latest_version = version
+        self._q.append((version, batch))
+
+    def pop(self) -> Optional[Tuple[int, Any]]:
+        if not self._q:
+            return None
+        version, batch = self._q[0]
+        if self.latest_version - version >= self.delay or \
+                len(self._q) > self.delay:
+            self._q.popleft()
+            return version, batch
+        return None
+
+    def __len__(self):
+        return len(self._q)
+
+
+class PartialRolloutCache:
+    """Holds unfinished rollouts keyed by an id; ``split`` separates finished
+    sequences (done or token budget exhausted) from resumable ones."""
+
+    def __init__(self):
+        self._store: Dict[int, RolloutState] = {}
+        self._next_id = 0
+
+    def put(self, state: RolloutState) -> int:
+        rid = self._next_id
+        self._next_id += 1
+        self._store[rid] = state
+        return rid
+
+    def get(self, rid: int) -> RolloutState:
+        return self._store.pop(rid)
+
+    def pending(self) -> List[int]:
+        return list(self._store)
+
+    @staticmethod
+    def finished_mask(state: RolloutState) -> np.ndarray:
+        """True where the sequence is complete (EOS seen or buffer full)."""
+        done = np.asarray(state.done)
+        full = int(np.asarray(state.cache["pos"])) >= state.tokens.shape[1]
+        return done | full
+
+    def __len__(self):
+        return len(self._store)

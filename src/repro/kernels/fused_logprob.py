@@ -1,0 +1,83 @@
+"""Fused per-token log-prob kernel: log pi(y_t) over a large vocabulary.
+
+The RL trainer's hot spot (paper Sec. 6: per-token importance ratios need
+log pi and log mu): computing ``log_softmax(logits)[token]`` naively
+materializes a [T, V] fp32 log-softmax (V up to 256k here).  This kernel
+streams vocab tiles through VMEM with an online (max, sumexp) reduction and
+picks out the target logit on the fly -- one pass, no [T, V] intermediate.
+
+Grid: (T/bt, V/bv); vocab is the *innermost* (sequential) axis so the
+scratch accumulators carry across vocab tiles for a fixed token tile.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(tokens_ref, logits_ref, out_ref, m_ref, s_ref, t_ref, *,
+            bv: int, n_vblocks: int):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref[...], NEG_INF)
+        s_ref[...] = jnp.zeros_like(s_ref[...])
+        t_ref[...] = jnp.full_like(t_ref[...], NEG_INF)
+
+    block = logits_ref[...].astype(jnp.float32)          # [bt, bv]
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(block, axis=-1))
+    s_ref[...] = s_ref[...] * jnp.exp(m_prev - m_new) + \
+        jnp.sum(jnp.exp(block - m_new[:, None]), axis=-1)
+    m_ref[...] = m_new
+
+    tok = tokens_ref[...]                                # [bt] global ids
+    local = tok - j * bv
+    in_blk = (local >= 0) & (local < bv)
+    idx = jnp.clip(local, 0, bv - 1)
+    vals = jnp.take_along_axis(block, idx[:, None], axis=1)[:, 0]
+    t_ref[...] = jnp.where(in_blk, vals, t_ref[...])
+
+    @pl.when(j == n_vblocks - 1)
+    def _fin():
+        out_ref[...] = t_ref[...] - (m_ref[...] + jnp.log(s_ref[...]))
+
+
+def fused_logprob(logits, tokens, *, block_t: int = 256,
+                  block_v: int = 2048, interpret: bool = True):
+    """logits: [T, V]; tokens: [T] int32 -> logprobs [T] fp32."""
+    T, V = logits.shape
+    bt = min(block_t, T)
+    bv = min(block_v, V)
+    pad_t = (-T) % bt
+    pad_v = (-V) % bv
+    if pad_t or pad_v:
+        logits = jnp.pad(logits, ((0, pad_t), (0, pad_v)),
+                         constant_values=NEG_INF)
+        tokens = jnp.pad(tokens, (0, pad_t))
+    Tp, Vp = logits.shape
+    n_vblocks = Vp // bv
+    out = pl.pallas_call(
+        functools.partial(_kernel, bv=bv, n_vblocks=n_vblocks),
+        grid=(Tp // bt, n_vblocks),
+        in_specs=[
+            pl.BlockSpec((bt,), lambda i, j: (i,)),
+            pl.BlockSpec((bt, bv), lambda i, j: (i, j)),
+        ],
+        out_specs=pl.BlockSpec((bt,), lambda i, j: (i,)),
+        out_shape=jax.ShapeDtypeStruct((Tp,), jnp.float32),
+        scratch_shapes=[
+            pltpu.VMEM((bt,), jnp.float32),
+            pltpu.VMEM((bt,), jnp.float32),
+            pltpu.VMEM((bt,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(tokens, logits)
+    return out[:T]

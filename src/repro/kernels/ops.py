@@ -1,0 +1,41 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+On this CPU dev box kernels execute with interpret=True (the Pallas
+interpreter runs the kernel body with jax ops -- bit-accurate semantics,
+no Mosaic); on TPU set ``REPRO_PALLAS_COMPILE=1`` to lower through Mosaic.
+The pure-jnp fallbacks in ``ref.py`` remain the lowering path used by the
+512-device dry-run (interpret-mode tracing unrolls the grid, which would
+bloat HLO at vocab=256k scale).
+"""
+from __future__ import annotations
+
+import functools
+import os
+
+import jax
+
+from repro.kernels.flash_attention import flash_attention as _flash
+from repro.kernels.fused_logprob import fused_logprob as _logprob
+from repro.kernels.int8_matmul import int8_matmul as _int8mm
+
+INTERPRET = os.environ.get("REPRO_PALLAS_COMPILE", "0") != "1"
+
+
+@functools.partial(jax.jit, static_argnames=("block_t", "block_v"))
+def fused_logprob(logits, tokens, block_t: int = 256, block_v: int = 2048):
+    return _logprob(logits, tokens, block_t=block_t, block_v=block_v,
+                    interpret=INTERPRET)
+
+
+@functools.partial(jax.jit, static_argnames=("block_q", "block_k"))
+def flash_attention(q, k, v, block_q: int = 256, block_k: int = 256):
+    return _flash(q, k, v, block_q=block_q, block_k=block_k,
+                  interpret=INTERPRET)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("block_m", "block_n", "block_k"))
+def int8_matmul(x, w_q, scale, block_m: int = 256, block_n: int = 256,
+                block_k: int = 512):
+    return _int8mm(x, w_q, scale, block_m=block_m, block_n=block_n,
+                   block_k=block_k, interpret=INTERPRET)

@@ -1,0 +1,32 @@
+"""Pure-jnp oracles for every Pallas kernel (tests assert allclose)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def fused_logprob_ref(logits, tokens):
+    """logits: [T, V]; tokens: [T] -> [T] fp32 log-softmax gather."""
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    return jnp.take_along_axis(logp, tokens[:, None], axis=-1)[:, 0]
+
+
+def flash_attention_ref(q, k, v):
+    """Naive causal GQA attention.  q: [B,S,H,hd]; k/v: [B,S,K,hd]."""
+    B, S, H, hd = q.shape
+    K = k.shape[2]
+    g = H // K
+    qf = q.reshape(B, S, K, g, hd).astype(jnp.float32)
+    s = jnp.einsum("bqkgh,bskh->bkgqs", qf, k.astype(jnp.float32))
+    s = s * hd ** -0.5
+    mask = jnp.tril(jnp.ones((S, S), bool))
+    s = jnp.where(mask[None, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqs,bskh->bqkgh", p, v.astype(jnp.float32))
+    return o.reshape(B, S, H, hd).astype(q.dtype)
+
+
+def int8_matmul_ref(x, w_q, scale, out_dtype=jnp.float32):
+    """Dequantize-then-matmul oracle."""
+    w = w_q.astype(jnp.float32) * scale[None, :]
+    return (x.astype(jnp.float32) @ w).astype(out_dtype)

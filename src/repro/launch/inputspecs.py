@@ -1,0 +1,66 @@
+"""ShapeDtypeStruct stand-ins for every dry-run input: weak-type-correct,
+shardable, zero allocation."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, ShapeSpec
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def frontend_specs(cfg: ArchConfig, B: int, dtype=jnp.bfloat16):
+    out = {}
+    if cfg.frontend == "vision":
+        out["patch_embeds"] = _sds((B, cfg.frontend_tokens, cfg.d_model),
+                                   dtype)
+    if cfg.frontend == "audio":
+        out["frame_embeds"] = _sds((B, cfg.frontend_tokens, cfg.d_model),
+                                   dtype)
+    return out
+
+
+def train_batch_specs(cfg: ArchConfig, shape: ShapeSpec,
+                      dtype=jnp.bfloat16):
+    B, S = shape.global_batch, shape.seq_len
+    batch = {
+        "tokens": _sds((B, S), jnp.int32),
+        "behavior_logp": _sds((B, S), jnp.float32),
+        "advantages": _sds((B, S), jnp.float32),
+        "mask": _sds((B, S), jnp.float32),
+    }
+    batch.update(frontend_specs(cfg, B, dtype))
+    return batch
+
+
+def prefill_batch_specs(cfg: ArchConfig, shape: ShapeSpec,
+                        dtype=jnp.bfloat16):
+    B, S = shape.global_batch, shape.seq_len
+    batch = {"tokens": _sds((B, S), jnp.int32)}
+    batch.update(frontend_specs(cfg, B, dtype))
+    return batch
+
+
+def decode_specs(cfg: ArchConfig, shape: ShapeSpec, dtype=jnp.bfloat16):
+    """(cache ShapeDtypeStructs, token specs) for one serve_step."""
+    from repro.models.serve import init_cache
+    B, S = shape.global_batch, shape.seq_len
+    cache = jax.eval_shape(
+        lambda: init_cache(cfg, B, S, dtype))
+    tokens = _sds((B, 1), jnp.int32)
+    return cache, tokens
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeSpec, dtype=jnp.bfloat16):
+    """Dispatch per shape kind -- the dry-run's single entry point."""
+    if shape.kind == "train":
+        return {"batch": train_batch_specs(cfg, shape, dtype)}
+    if shape.kind == "prefill":
+        return {"batch": prefill_batch_specs(cfg, shape, dtype)}
+    if shape.kind == "decode":
+        cache, tokens = decode_specs(cfg, shape, dtype)
+        return {"cache": cache, "tokens": tokens}
+    raise ValueError(shape.kind)

@@ -1,0 +1,35 @@
+"""Production mesh builders.  Functions, not module constants: importing
+this module must never touch jax device state."""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """Single pod: (data=16, model=16) = 256 chips (v5e pod).
+    Multi-pod: (pod=2, data=16, model=16) = 512 chips, 'pod' over DCN."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_dev_mesh(n_devices: int = 0):
+    """Small mesh over whatever devices exist (tests / CPU dev box)."""
+    devs = jax.devices()
+    n = n_devices or len(devs)
+    return jax.make_mesh((1, n), ("data", "model"))
+
+
+def trainer_generator_submeshes(theta: float = 0.5):
+    """Split the device set into disjoint trainer/generator submeshes
+    (paper Def. 7.4's theta fraction).  Requires >= 2 devices."""
+    devs = jax.devices()
+    n = len(devs)
+    n_train = max(1, int(n * theta))
+    if n - n_train < 1:
+        n_train = n - 1
+    from jax.sharding import Mesh
+    import numpy as np
+    t = Mesh(np.array(devs[:n_train]).reshape(1, -1), ("data", "model"))
+    g = Mesh(np.array(devs[n_train:]).reshape(1, -1), ("data", "model"))
+    return t, g

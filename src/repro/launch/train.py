@@ -1,0 +1,115 @@
+"""Production-style RL training launcher.
+
+    PYTHONPATH=src python -m repro.launch.train \
+        --arch starcoder2-3b --smoke --steps 50 --mode async --staleness 1
+
+On a real TPU cluster this builds the production mesh, splits it into
+trainer/generator submeshes (theta fraction, paper Def. 7.4), and runs the
+single-controller loop.  On the CPU dev box (--smoke) it runs the reduced
+config on the local device -- same code path, same executors.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+import jax
+import jax.numpy as jnp
+
+from repro import configs
+from repro.core import (CommType, CommunicationChannel, ExecutorController,
+                        GeneratorExecutor, RewardExecutor, TrainerExecutor,
+                        WeightsCommunicationChannel)
+from repro.rl.data import ArithmeticTasks, VOCAB_SIZE
+
+
+def build_controller(cfg, args):
+    tasks = ArithmeticTasks(prompt_len=args.prompt_len,
+                            max_operand=args.max_operand, ops="+-",
+                            seed=args.seed)
+    gen = GeneratorExecutor(cfg, tasks, n_prompts=args.n_prompts,
+                            n_per_prompt=args.n_per_prompt,
+                            max_new=args.max_new, temperature=args.temp,
+                            quantize=args.quantize_generator,
+                            chunk=args.rollout_chunk, seed=args.seed)
+    rew = RewardExecutor(n_per_prompt=args.n_per_prompt,
+                         leave_one_out=args.rloo)
+    trn = TrainerExecutor(cfg, lr=args.lr, rho=args.rho,
+                          clip_mode=args.clip_mode, kl_coef=args.kl_coef,
+                          seed=args.seed)
+    executors = [gen, rew, trn]
+    channels = [WeightsCommunicationChannel("policy_model", trn, gen)]
+    if args.kl_coef > 0:
+        # paper Sec. 6: KL regularization against a frozen reference policy
+        from repro.core import RefPolicyExecutor
+        ref = RefPolicyExecutor(cfg)
+        executors.insert(1, ref)
+        channels += [
+            WeightsCommunicationChannel("policy_model", trn, ref),
+            CommunicationChannel("completions", gen, ref,
+                                 CommType.BROADCAST),
+            CommunicationChannel("completions_with_ref", ref, rew,
+                                 CommType.GATHER),
+        ]
+    else:
+        channels.append(CommunicationChannel("completions", gen, rew,
+                                             CommType.GATHER))
+    channels.append(CommunicationChannel("completions_with_reward", rew,
+                                         trn, CommType.SCATTER))
+    return ExecutorController(
+        executors, channels,
+        max_steps=args.steps, mode=args.mode, staleness=args.staleness,
+        checkpoint_every=args.checkpoint_every,
+        checkpoint_path=args.checkpoint_path)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="starcoder2-3b",
+                    choices=configs.list_archs() + ["llama31-8b"])
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced config (CPU dev box)")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--mode", default="async", choices=["sync", "async"])
+    ap.add_argument("--staleness", type=int, default=1)
+    ap.add_argument("--clip-mode", default="aipo",
+                    choices=["aipo", "ppo", "none", "is_unclipped"])
+    ap.add_argument("--rho", type=float, default=4.0)
+    ap.add_argument("--kl-coef", type=float, default=0.0)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--n-prompts", type=int, default=8)
+    ap.add_argument("--n-per-prompt", type=int, default=4)
+    ap.add_argument("--max-new", type=int, default=8)
+    ap.add_argument("--prompt-len", type=int, default=12)
+    ap.add_argument("--max-operand", type=int, default=20)
+    ap.add_argument("--temp", type=float, default=1.0)
+    ap.add_argument("--rloo", action="store_true")
+    ap.add_argument("--quantize-generator", action="store_true")
+    ap.add_argument("--rollout-chunk", type=int, default=0)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--checkpoint-every", type=int, default=0)
+    ap.add_argument("--checkpoint-path", default="checkpoints")
+    ap.add_argument("--out", default="")
+    args = ap.parse_args()
+
+    if args.arch == "llama31-8b":
+        from repro.configs.llama_paper import LLAMA31_8B, smoke
+        cfg = smoke() if args.smoke else LLAMA31_8B
+    else:
+        cfg = (configs.get_smoke(args.arch) if args.smoke
+               else configs.get_config(args.arch))
+    # the char tokenizer needs vocab >= VOCAB_SIZE; smoke configs have 512
+    assert cfg.vocab >= VOCAB_SIZE, "config vocab too small for tokenizer"
+
+    ctl = build_controller(cfg, args)
+    history = ctl.run()
+    for h in history:
+        print({k: (round(v, 4) if isinstance(v, float) else v)
+               for k, v in h.items()})
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(history, f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

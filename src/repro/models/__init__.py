@@ -1,0 +1,5 @@
+from repro.models.backbone import init_params, forward_train
+from repro.models.serve import init_cache, prefill, decode_step
+
+__all__ = ["init_params", "forward_train", "init_cache", "prefill",
+           "decode_step"]

@@ -1,0 +1,245 @@
+"""FFN variants: SwiGLU / squared-ReLU / GELU MLPs and Mixture-of-Experts.
+
+MoE uses a sort-based capacity dispatch (NOT one-hot einsum dispatch, whose
+[T, E, C] matmuls would dominate FLOPs at E=256 and poison the roofline):
+
+  route -> top-k -> per-group argsort by expert -> rank-in-expert ->
+  scatter into a [E, C, d] capacity buffer -> two batched expert matmuls ->
+  gather back -> weighted combine (+ shared experts).
+
+Gathers/scatters are memory ops, so HLO FLOPs stay ~= real expert FLOPs
+(x capacity_factor).  Groups are batch rows, so routing sorts/cumsums never
+cross data-parallel shards.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import act_fn, dense_init, split_keys
+
+
+# ------------------------------------------------------------- dense MLP ---
+
+def mlp_params(key, d_model, d_ff, act, dtype, bias=False):
+    ks = split_keys(key, 3)
+    if act == "silu_gated":
+        p = {
+            "w_gate": dense_init(ks[0], (d_model, d_ff), dtype),
+            "w_up": dense_init(ks[1], (d_model, d_ff), dtype),
+            "w_down": dense_init(ks[2], (d_ff, d_model), dtype),
+        }
+    else:
+        p = {
+            "w_in": dense_init(ks[0], (d_model, d_ff), dtype),
+            "w_down": dense_init(ks[1], (d_ff, d_model), dtype),
+        }
+    if bias:
+        p["b_up"] = jnp.zeros((d_ff,), dtype)
+        p["b_down"] = jnp.zeros((d_model,), dtype)
+    return p
+
+
+def mlp_forward(p, x, act, bias=False):
+    if "w_gate" in p:
+        h = jax.nn.silu(x @ p["w_gate"]) * (x @ p["w_up"])
+    else:
+        h = x @ p["w_in"]
+        if bias:
+            h = h + p["b_up"]
+        h = act_fn(h, act)
+    y = h @ p["w_down"]
+    if bias:
+        y = y + p["b_down"]
+    return y
+
+
+# ------------------------------------------------------------------- MoE ---
+
+def moe_params(key, cfg, dtype):
+    m = cfg.moe
+    D = cfg.d_model
+    F = m.d_expert or cfg.d_ff
+    ks = split_keys(key, 5)
+    p = {
+        "w_router": dense_init(ks[0], (D, m.n_experts), jnp.float32),
+        "w_gate": dense_init(ks[1], (m.n_experts, D, F), dtype),
+        "w_up": dense_init(ks[2], (m.n_experts, D, F), dtype),
+        "w_down": dense_init(ks[3], (m.n_experts, F, D), dtype),
+    }
+    if m.n_shared:
+        p["shared"] = mlp_params(ks[4], D, m.n_shared * F, "silu_gated", dtype)
+    return p
+
+
+def _route(p, x, m):
+    """Router probabilities + top-k weights.  x: [..., D] -> fp32."""
+    logits = x.astype(jnp.float32) @ p["w_router"]
+    if m.router == "sigmoid":            # deepseek-v3 style
+        probs = jax.nn.sigmoid(logits)
+        vals, idx = jax.lax.top_k(probs, m.top_k)
+        weights = vals / (jnp.sum(vals, axis=-1, keepdims=True) + 1e-9)
+    else:
+        probs = jax.nn.softmax(logits, axis=-1)
+        vals, idx = jax.lax.top_k(probs, m.top_k)
+        weights = vals
+    return probs, weights, idx
+
+
+def _dispatch_group(x, idx, weights, n_experts, capacity):
+    """Per-group sort-based capacity dispatch.
+
+    x: [S, D]; idx: [S, k]; weights: [S, k].
+    Returns (buffer [E, C, D], dest [S*k], valid [S*k], order [S*k])."""
+    S, k = idx.shape
+    flat_e = idx.reshape(-1)                        # [S*k]
+    order = jnp.argsort(flat_e)                     # stable
+    sorted_e = flat_e[order]
+    token_of = order // k
+    counts = jnp.bincount(flat_e, length=n_experts)
+    offsets = jnp.cumsum(counts) - counts           # exclusive
+    rank = jnp.arange(S * k) - offsets[sorted_e]
+    valid = rank < capacity
+    dest = jnp.where(valid, sorted_e * capacity + rank, n_experts * capacity)
+    buffer = jnp.zeros((n_experts * capacity + 1, x.shape[-1]), x.dtype)
+    buffer = buffer.at[dest].set(x[token_of])
+    return buffer[:-1].reshape(n_experts, capacity, -1), dest, valid, order
+
+
+def _dispatch_group_local(x, idx_shifted, weights, n_local: int,
+                          capacity: int):
+    """Like _dispatch_group, but only experts in [0, n_local) are dispatched;
+    out-of-range (another shard's experts) route to the dump slot."""
+    S, k = idx_shifted.shape
+    flat_e = jnp.clip(idx_shifted.reshape(-1), -1, n_local)
+    flat_e = jnp.where(flat_e < 0, n_local, flat_e)        # dump slot
+    order = jnp.argsort(flat_e)
+    sorted_e = flat_e[order]
+    token_of = order // k
+    counts = jnp.bincount(flat_e, length=n_local + 1)
+    offsets = jnp.cumsum(counts) - counts
+    rank = jnp.arange(S * k) - offsets[sorted_e]
+    valid = (rank < capacity) & (sorted_e < n_local)
+    dest = jnp.where(valid, sorted_e * capacity + rank,
+                     n_local * capacity)
+    buffer = jnp.zeros((n_local * capacity + 1, x.shape[-1]), x.dtype)
+    buffer = buffer.at[dest].set(x[token_of])
+    return buffer[:-1].reshape(n_local, capacity, -1), dest, valid, order
+
+
+def moe_forward_shmap(p, x, cfg, mesh):
+    """Explicit shard_map expert parallelism (moe_mode='ep_shmap').
+
+    Activations are replicated along 'model' (as in the baseline), so each
+    model-shard already HAS every token: it dispatches only to its E/m local
+    experts, computes them with purely local weights, combines its partial
+    per-token outputs, and a single psum over 'model' finishes the layer --
+    one [B_loc, S, D] all-reduce per MoE layer instead of GSPMD's
+    expert-weight gathers / replicated scatters."""
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+    from repro.models.sharding import dp_axes
+    m = cfg.moe
+    B, S, D = x.shape
+    E, k = m.n_experts, m.top_k
+    mm = mesh.shape["model"]
+    assert E % mm == 0, (E, mm)
+    E_l = E // mm
+    C = max(int(S * k / E * m.capacity_factor), 1)
+    dp = dp_axes(mesh)
+
+    probs, weights, idx = _route(p, x, m)
+    onehot_sum = jnp.sum(jax.nn.one_hot(idx, E, dtype=jnp.float32), axis=2)
+    f_e = jnp.mean(onehot_sum, axis=(0, 1)) / k
+    P_e = jnp.mean(probs, axis=(0, 1))
+    aux = E * jnp.sum(f_e * P_e) * m.aux_loss_coef
+
+    def local_fn(xl, wl, il, wg, wu, wd):
+        cidx = jax.lax.axis_index("model")
+        shifted = il - cidx * E_l
+
+        def per_group(xg, ig, wg_):
+            buf, dest, valid, order = _dispatch_group_local(
+                xg, ig, wg_, E_l, C)
+            return buf, dest, valid, order
+
+        buf, dest, valid, order = jax.vmap(per_group)(xl, shifted, wl)
+        h = jnp.einsum("becd,edf->becf", buf, wg)
+        u = jnp.einsum("becd,edf->becf", buf, wu)
+        h = jax.nn.silu(h) * u
+        out = jnp.einsum("becf,efd->becd", h, wd)
+
+        def per_group_combine(outg, destg, validg, orderg, wg_):
+            out_flat = outg.reshape(E_l * C, D)
+            gathered = jnp.where(
+                validg[:, None],
+                out_flat[jnp.clip(destg, 0, E_l * C - 1)], 0.0)
+            unsorted = jnp.zeros((S * k, D), xl.dtype).at[orderg].set(
+                gathered)
+            wflat = wg_.reshape(S * k, 1).astype(xl.dtype)
+            return jnp.sum((unsorted * wflat).reshape(S, k, D), axis=1)
+
+        y_part = jax.vmap(per_group_combine)(out, dest, valid, order, wl)
+        return jax.lax.psum(y_part, "model")
+
+    y = shard_map(
+        local_fn, mesh=mesh,
+        in_specs=(P(dp, None, None), P(dp, None, None), P(dp, None, None),
+                  P("model", None, None), P("model", None, None),
+                  P("model", None, None)),
+        out_specs=P(dp, None, None),
+        check_rep=False,
+    )(x, weights, idx, p["w_gate"], p["w_up"], p["w_down"])
+    if m.n_shared:
+        y = y + mlp_forward(p["shared"], x, "silu_gated")
+    return y, aux
+
+
+def moe_forward(p, x, cfg):
+    """x: [B, S, D] -> (y, aux_loss).  Groups = batch rows."""
+    if cfg.moe_mode == "ep_shmap":
+        from repro.models.sharding import _ACT_MESH
+        mesh = _ACT_MESH["mesh"]
+        if mesh is not None and cfg.moe.n_experts % mesh.shape["model"] == 0:
+            return moe_forward_shmap(p, x, cfg, mesh)
+    m = cfg.moe
+    B, S, D = x.shape
+    E, k = m.n_experts, m.top_k
+    C = max(int(S * k / E * m.capacity_factor), 1)
+    probs, weights, idx = _route(p, x, m)
+
+    # load-balance auxiliary (switch-style): E * sum_e f_e * P_e
+    onehot_sum = jnp.sum(jax.nn.one_hot(idx, E, dtype=jnp.float32), axis=2)
+    f_e = jnp.mean(onehot_sum, axis=(0, 1)) / k
+    P_e = jnp.mean(probs, axis=(0, 1))
+    aux = E * jnp.sum(f_e * P_e) * m.aux_loss_coef
+
+    # dispatch per group (vmapped), expert matmuls batched OUTSIDE the vmap
+    # so expert-parallel sharding constraints can apply (moe_mode='ep').
+    buf, dest, valid, order = jax.vmap(
+        lambda xg, ig, wg: _dispatch_group(xg, ig, wg, E, C))(
+            x, idx, weights)                    # buf: [B, E, C, D]
+    if cfg.moe_mode == "ep":
+        from repro.models.sharding import constrain_experts
+        buf = constrain_experts(buf)            # token-shard -> expert-shard
+    h = jnp.einsum("becd,edf->becf", buf, p["w_gate"])
+    u = jnp.einsum("becd,edf->becf", buf, p["w_up"])
+    h = jax.nn.silu(h) * u
+    out = jnp.einsum("becf,efd->becd", h, p["w_down"])
+    if cfg.moe_mode == "ep":
+        from repro.models.sharding import constrain_batch
+        out = constrain_batch(out)              # expert-shard -> token-shard
+
+    def per_group_combine(outg, destg, validg, orderg, wg):
+        out_flat = outg.reshape(E * C, D)
+        gathered = jnp.where(validg[:, None],
+                             out_flat[jnp.clip(destg, 0, E * C - 1)], 0.0)
+        # un-sort back to (token, k) order
+        unsorted = jnp.zeros((S * k, D), x.dtype).at[orderg].set(gathered)
+        wflat = wg.reshape(S * k, 1).astype(x.dtype)
+        return jnp.sum((unsorted * wflat).reshape(S, k, D), axis=1)
+
+    y = jax.vmap(per_group_combine)(out, dest, valid, order, weights)
+    if m.n_shared:
+        y = y + mlp_forward(p["shared"], x, "silu_gated")
+    return y, aux

@@ -1,0 +1,401 @@
+"""Serving path: KV/state cache construction, prefill, single-token decode.
+
+Cache layout is per-family; attention segments with different window sizes
+(llama4 iRoPE) get separate ring buffers sized ``min(cache_len, window)``.
+``decode_step`` consumes ONE token against a cache of ``cache_len`` slots --
+this is exactly what the decode_32k / long_500k dry-run shapes lower.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import attention as attn
+from repro.models import backbone as bb
+from repro.models import ssm as ssmmod
+from repro.models.common import norm, sinusoidal_positions
+from repro.models.ffn import mlp_forward, moe_forward
+from repro.models.sharding import constrain_batch
+
+Cache = Dict[str, Any]
+
+
+def _seg_cache_len(cache_len: int, window: int) -> int:
+    return min(cache_len, window) if window else cache_len
+
+
+def _kv_seg(cfg, n_layers, B, Sc, dtype):
+    K, hd = cfg.n_kv_heads, cfg.hd
+    return {
+        "k": jnp.zeros((n_layers, B, Sc, K, hd), dtype),
+        "v": jnp.zeros((n_layers, B, Sc, K, hd), dtype),
+        "slot_pos": jnp.full((Sc,), -1, jnp.int32),
+    }
+
+
+def _mla_seg(cfg, n_layers, B, Sc, dtype):
+    m = cfg.mla
+    return {
+        "ckv": jnp.zeros((n_layers, B, Sc, m.kv_lora_rank), dtype),
+        "krope": jnp.zeros((n_layers, B, Sc, m.qk_rope_dim), dtype),
+        "slot_pos": jnp.full((Sc,), -1, jnp.int32),
+    }
+
+
+def attn_segments(cfg: ArchConfig, n_layers: int, offset: int = 0):
+    return bb._segment_windows(cfg, n_layers, offset)
+
+
+def segment_layout(cfg: ArchConfig):
+    """Cache segment layout [(n_layers, window), ...] matching the order in
+    which prefill/decode walk the (possibly multiple) layer stacks."""
+    if cfg.family == "moe":
+        out = []
+        fkd = cfg.moe.first_k_dense
+        if fkd:
+            out += [(j - i, w) for (i, j, w) in attn_segments(cfg, fkd, 0)]
+        out += [(j - i, w) for (i, j, w) in
+                attn_segments(cfg, cfg.n_layers - fkd, fkd)]
+        return out
+    return [(j - i, w) for (i, j, w) in attn_segments(cfg, cfg.n_layers)]
+
+
+def init_cache(cfg: ArchConfig, B: int, cache_len: int,
+               dtype=jnp.bfloat16) -> Cache:
+    cache: Cache = {"pos": jnp.zeros((), jnp.int32)}
+    mk_seg = _mla_seg if cfg.attn_kind == "mla" else _kv_seg
+
+    if cfg.family in ("dense", "vlm", "moe"):
+        cache["segments"] = [
+            mk_seg(cfg, n, B, _seg_cache_len(cache_len, w), dtype)
+            for (n, w) in segment_layout(cfg)]
+    elif cfg.family == "hybrid":
+        k = cfg.shared_attn_every
+        n_groups = (cfg.n_layers + k - 1) // k
+        cache["mamba"] = jax.vmap(
+            lambda _: ssmmod.mamba2_init_state(cfg, B))(
+                jnp.arange(cfg.n_layers))
+        cache["attn"] = _kv_seg(cfg, n_groups, B,
+                                min(cache_len, 4096), dtype)
+    elif cfg.family == "ssm":
+        states = []
+        for i in range(cfg.n_layers):
+            if i in cfg.xlstm.slstm_layers:
+                states.append(ssmmod.slstm_init_state(cfg, B))
+            else:
+                states.append(ssmmod.mlstm_init_state(cfg, B))
+        cache["xlstm"] = states
+    elif cfg.family == "audio":
+        F = cfg.frontend_tokens
+        K, hd = cfg.n_kv_heads, cfg.hd
+        cache["self"] = _kv_seg(cfg, cfg.n_layers, B, cache_len, dtype)
+        cache["cross_k"] = jnp.zeros((cfg.n_layers, B, F, K, hd), dtype)
+        cache["cross_v"] = jnp.zeros((cfg.n_layers, B, F, K, hd), dtype)
+    return cache
+
+
+# ----------------------------------------------------------------- prefill -
+
+def _write_seg(seg, kvs, start: int):
+    """Write prefill KVs (stacked [L,B,S,...]) into a ring segment."""
+    S = kvs[0].shape[2]
+    Sc = seg["slot_pos"].shape[0]
+    take = min(S, Sc)
+    pos = jnp.arange(S - take, S) + start
+    slots = pos % Sc
+    out = dict(seg)
+    keys = ("ckv", "krope") if "ckv" in seg else ("k", "v")
+    for key_name, kv in zip(keys, kvs):
+        out[key_name] = seg[key_name].at[:, :, slots].set(
+            kv[:, :, -take:].astype(seg[key_name].dtype))
+    out["slot_pos"] = seg["slot_pos"].at[slots].set(pos.astype(jnp.int32))
+    return out
+
+
+def _prefill_collect(params, cfg, x, mrope_pos=None):
+    """Run decoder stacks collecting per-segment stacked KVs."""
+    if cfg.family == "moe":
+        stacks = []
+        fkd = cfg.moe.first_k_dense
+        if fkd:
+            stacks.append((params["dense_layers"], fkd, 0))
+        stacks.append((params["moe_layers"], cfg.n_layers - fkd, fkd))
+    else:
+        stacks = [(params["layers"], cfg.n_layers, 0)]
+    kv_segs = []
+    for stacked, n, off in stacks:
+        x, _, kvs = bb._run_decoder_stack(stacked, x, cfg, n, offset=off,
+                                          mrope_pos=mrope_pos,
+                                          collect_kv=True)
+        kv_segs.extend(kvs)
+    return x, kv_segs
+
+
+def prefill(params, cfg: ArchConfig, batch, cache_len: int,
+            dtype=jnp.bfloat16):
+    """batch: {'tokens': [B, S], optional frontend embeds}.
+    Returns (last_logits [B, V], cache)."""
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    x = bb._embed(params, cfg, tokens)
+    cache = init_cache(cfg, B, cache_len, dtype)
+    mrope_pos = None
+    prefix = 0
+
+    if cfg.family == "vlm":
+        patches = batch["patch_embeds"].astype(x.dtype)
+        P = patches.shape[1]
+        prefix = P
+        x = jnp.concatenate([patches, x], axis=1)
+        side = max(int(P ** 0.5), 1)
+        pt = jnp.zeros((B, P), jnp.int32)
+        ph = jnp.broadcast_to((jnp.arange(P) // side)[None], (B, P))
+        pw = jnp.broadcast_to((jnp.arange(P) % side)[None], (B, P))
+        from repro.models.common import text_mrope_positions
+        vis = jnp.stack([pt, ph, pw], axis=0)
+        txt = text_mrope_positions(B, S, offset=side)
+        mrope_pos = jnp.concatenate([vis, txt], axis=-1)
+
+    if cfg.family in ("dense", "vlm", "moe"):
+        x, kv_segs = _prefill_collect(params, cfg, x, mrope_pos=mrope_pos)
+        cache["segments"] = [
+            _write_seg(seg, kvs, start=0)
+            for seg, kvs in zip(cache["segments"], kv_segs)]
+        cache["pos"] = jnp.asarray(S + prefix, jnp.int32)
+        return bb._logits(params, cfg, x[:, -1]), cache
+
+    if cfg.family == "hybrid":
+        k = cfg.shared_attn_every
+        L = cfg.n_layers
+        mamba_states, attn_kvs = [], []
+        i = 0
+        while i < L:
+            h = norm(x, params["shared_attn"]["ln1"], cfg.norm)
+            y, kv = (attn.gqa_forward(params["shared_attn"]["attn"], h, cfg)
+                     if cfg.attn_kind != "mla" else (None, None))
+            x = x + y
+            x, _ = bb._ffn_block(params["shared_attn"], x, cfg)
+            attn_kvs.append(kv)
+            seg = jax.tree.map(lambda a: a[i:min(i + k, L)],
+                               params["mamba_layers"])
+
+            def mamba_body(h, lp):
+                h = constrain_batch(h)
+                y, st = ssmmod.mamba2_forward(
+                    lp["mamba"], norm(h, lp["ln1"], cfg.norm), cfg,
+                    return_state=True)
+                return h + y, st
+
+            x, sts = bb._scan(mamba_body, x, seg, cfg)
+            mamba_states.append(sts)
+            i += k
+        cache["mamba"] = jax.tree.map(
+            lambda *xs: jnp.concatenate(xs, axis=0), *mamba_states)
+        kv_k = jnp.stack([kv[0] for kv in attn_kvs])   # [G,B,S,K,hd]
+        kv_v = jnp.stack([kv[1] for kv in attn_kvs])
+        cache["attn"] = _write_seg(cache["attn"], (kv_k, kv_v), start=0)
+        cache["pos"] = jnp.asarray(S, jnp.int32)
+        return bb._logits(params, cfg, x[:, -1]), cache
+
+    if cfg.family == "ssm":
+        states = []
+        for i, (lp, st0) in enumerate(zip(params["xlstm_layers"],
+                                          cache["xlstm"])):
+            h = norm(x, lp["ln"], cfg.norm)
+            if i in cfg.xlstm.slstm_layers:
+                y, st = ssmmod.slstm_forward(lp["cell"], h, cfg)
+            else:
+                y, st = ssmmod.mlstm_forward(lp["cell"], h, cfg)
+            x = x + y
+            states.append(st)
+        cache["xlstm"] = states
+        cache["pos"] = jnp.asarray(S, jnp.int32)
+        return bb._logits(params, cfg, x[:, -1]), cache
+
+    if cfg.family == "audio":
+        enc = bb._encode(params, cfg, batch["frame_embeds"])
+        x = x + sinusoidal_positions(S, cfg.d_model)[None].astype(x.dtype)
+
+        def body(carry, lp):
+            h = carry
+            hh = norm(h, lp["ln1"], cfg.norm)
+            y, kv = attn.gqa_forward(lp["attn"], hh, cfg, causal=True)
+            h = h + y
+            hc = norm(h, lp["ln_cross"], cfg.norm)
+            ek, ev = bb._enc_kv(lp, enc, cfg)
+            h = h + attn.gqa_cross_forward(lp["cross"], hc, ek, ev, cfg)
+            h, _ = bb._ffn_block(lp, h, cfg)
+            return h, (kv[0], kv[1], ek, ev)
+
+        x, (ks, vs, eks, evs) = bb._scan(body, x, params["dec_layers"], cfg)
+        cache["self"] = _write_seg(cache["self"], (ks, vs), start=0)
+        cache["cross_k"], cache["cross_v"] = eks, evs
+        cache["pos"] = jnp.asarray(S, jnp.int32)
+        return bb._logits(params, cfg, x[:, -1]), cache
+
+    raise ValueError(cfg.family)
+
+
+# ------------------------------------------------------------ decode_step -
+
+def _decode_seg(stacked_params, seg, x, pos, cfg, window, mrope_pos=None):
+    """Scan one attention segment during decode."""
+    if "ckv" in seg:
+        def body(h, inputs):
+            lp, ckv, krope = inputs
+            h = constrain_batch(h)
+            hh = norm(h, lp["ln1"], cfg.norm)
+            y, ckv, krope, sp = attn.mla_decode(
+                lp["attn"], hh, ckv, krope, seg["slot_pos"], pos, cfg)
+            h = h + y
+            h, _ = bb._ffn_block(lp, h, cfg)
+            return h, (ckv, krope, sp)
+
+        x, (ckv, krope, sps) = bb._scan(
+            body, x, (stacked_params, seg["ckv"], seg["krope"]), cfg)
+        new_seg = {"ckv": ckv, "krope": krope, "slot_pos": sps[0]}
+        return x, new_seg
+
+    def body(h, inputs):
+        lp, ck, cv = inputs
+        h = constrain_batch(h)
+        hh = norm(h, lp["ln1"], cfg.norm)
+        y, ck, cv, sp = attn.gqa_decode(lp["attn"], hh, ck, cv,
+                                        seg["slot_pos"], pos, cfg,
+                                        window=window, mrope_pos=mrope_pos)
+        h = h + y
+        h, _ = bb._ffn_block(lp, h, cfg)
+        return h, (ck, cv, sp)
+
+    x, (ck, cv, sps) = bb._scan(body, x, (stacked_params, seg["k"],
+                                seg["v"]), cfg)
+    new_seg = {"k": ck, "v": cv, "slot_pos": sps[0]}
+    return x, new_seg
+
+
+def decode_step(params, cfg: ArchConfig, cache: Cache, tokens):
+    """tokens: [B, 1].  Returns (logits [B, V], new cache)."""
+    pos = cache["pos"]
+    x = bb._embed(params, cfg, tokens)
+    B = tokens.shape[0]
+    mrope_pos = None
+    if cfg.family == "vlm":
+        P = cfg.frontend_tokens
+        side = max(int(P ** 0.5), 1)
+        tp = jnp.broadcast_to((side + pos - P)[None, None], (B, 1))
+        mrope_pos = jnp.stack([tp, tp, tp], axis=0)
+
+    if cfg.family in ("dense", "vlm", "moe"):
+        if cfg.family == "moe":
+            stacks = []
+            fkd = cfg.moe.first_k_dense
+            if fkd:
+                stacks.append((params["dense_layers"], fkd, 0))
+            stacks.append((params["moe_layers"], cfg.n_layers - fkd, fkd))
+        else:
+            stacks = [(params["layers"], cfg.n_layers, 0)]
+        new_segs = []
+        si = 0
+        for stacked, n, off in stacks:
+            for (i, j, w) in attn_segments(cfg, n, off):
+                lp = jax.tree.map(lambda a: a[i:j], stacked)
+                x, new_seg = _decode_seg(lp, cache["segments"][si], x, pos,
+                                         cfg, w, mrope_pos=mrope_pos)
+                new_segs.append(new_seg)
+                si += 1
+        new_cache = {"pos": pos + 1, "segments": new_segs}
+        return bb._logits(params, cfg, x[:, -1]), new_cache
+
+    if cfg.family == "hybrid":
+        k = cfg.shared_attn_every
+        L = cfg.n_layers
+        new_mamba, new_attn_k, new_attn_v = [], [], []
+        sp_out = cache["attn"]["slot_pos"]
+        i, g = 0, 0
+        while i < L:
+            hh = norm(x, params["shared_attn"]["ln1"], cfg.norm)
+            y, ck, cv, sp_out = attn.gqa_decode(
+                params["shared_attn"]["attn"], hh,
+                cache["attn"]["k"][g], cache["attn"]["v"][g],
+                cache["attn"]["slot_pos"], pos, cfg)
+            x = x + y
+            x, _ = bb._ffn_block(params["shared_attn"], x, cfg)
+            new_attn_k.append(ck)
+            new_attn_v.append(cv)
+            lp_seg = jax.tree.map(lambda a: a[i:min(i + k, L)],
+                                  params["mamba_layers"])
+            st_seg = jax.tree.map(lambda a: a[i:min(i + k, L)],
+                                  cache["mamba"])
+
+            def body(h, inputs):
+                lp, st = inputs
+                h = constrain_batch(h)
+                y, st = ssmmod.mamba2_decode(
+                    lp["mamba"], norm(h, lp["ln1"], cfg.norm), st, cfg)
+                return h + y, st
+
+            x, new_st = bb._scan(body, x, (lp_seg, st_seg), cfg)
+            new_mamba.append(new_st)
+            i += k
+            g += 1
+        new_cache = {
+            "pos": pos + 1,
+            "mamba": jax.tree.map(lambda *xs: jnp.concatenate(xs, 0),
+                                  *new_mamba),
+            "attn": {"k": jnp.stack(new_attn_k), "v": jnp.stack(new_attn_v),
+                     "slot_pos": sp_out},
+        }
+        return bb._logits(params, cfg, x[:, -1]), new_cache
+
+    if cfg.family == "ssm":
+        states = []
+        for i, (lp, st) in enumerate(zip(params["xlstm_layers"],
+                                         cache["xlstm"])):
+            h = norm(x, lp["ln"], cfg.norm)
+            if i in cfg.xlstm.slstm_layers:
+                y, st = ssmmod.slstm_decode(lp["cell"], h, st, cfg)
+            else:
+                y, st = ssmmod.mlstm_decode(lp["cell"], h, st, cfg)
+            x = x + y
+            states.append(st)
+        new_cache = dict(cache)
+        new_cache["pos"] = pos + 1
+        new_cache["xlstm"] = states
+        return bb._logits(params, cfg, x[:, -1]), new_cache
+
+    if cfg.family == "audio":
+        x = x + _sin_pos_at(pos, cfg.d_model).astype(x.dtype)
+
+        def body(carry, inputs):
+            h, sp = carry
+            lp, ck, cv, xk, xv = inputs
+            h = constrain_batch(h)
+            hh = norm(h, lp["ln1"], cfg.norm)
+            y, ck, cv, sp = attn.gqa_decode(lp["attn"], hh, ck, cv, sp, pos,
+                                            cfg)
+            h = h + y
+            hc = norm(h, lp["ln_cross"], cfg.norm)
+            h = h + attn.gqa_cross_forward(lp["cross"], hc, xk, xv, cfg)
+            h, _ = bb._ffn_block(lp, h, cfg)
+            return (h, sp), (ck, cv)
+
+        (x, sp), (ks, vs) = bb._scan(
+            body, (x, cache["self"]["slot_pos"]),
+            (params["dec_layers"], cache["self"]["k"], cache["self"]["v"],
+             cache["cross_k"], cache["cross_v"]), cfg)
+        new_cache = dict(cache)
+        new_cache["pos"] = pos + 1
+        new_cache["self"] = {"k": ks, "v": vs, "slot_pos": sp}
+        return bb._logits(params, cfg, x[:, -1]), new_cache
+
+    raise ValueError(cfg.family)
+
+
+def _sin_pos_at(pos, d_model):
+    import numpy as np
+    i = jnp.arange(d_model // 2)
+    ang = pos.astype(jnp.float32) / (10000 ** (2 * i / d_model))
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)])[None, None, :]

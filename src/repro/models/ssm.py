@@ -1,0 +1,383 @@
+"""State-space / recurrent blocks: Mamba2 (SSD) and xLSTM (mLSTM + sLSTM).
+
+Mamba2 uses the chunked SSD algorithm (intra-chunk quadratic + inter-chunk
+state recurrence), so train-time compute is O(S * c) with chunk c.  mLSTM is
+implemented as chunked gated linear attention (same structure).  sLSTM is
+*inherently sequential* (hidden-to-hidden recurrence) and runs as a
+``lax.scan`` over time -- that seriality is its honest roofline story.
+
+Simplifications vs. the source papers (documented per DESIGN.md):
+  * Mamba2 n_groups=1 (B/C shared across heads), no initial-state input.
+  * xLSTM blocks keep the core recurrence + in/out projections; the paper's
+    surrounding conv/ffn trimmings are folded into the projections.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import dense_init, rmsnorm, split_keys
+
+
+# ---------------------------------------------------------------- Mamba2 ---
+
+def mamba2_params(key, cfg, dtype):
+    s, D = cfg.ssm, cfg.d_model
+    d_in = s.expand * D
+    H = s.n_ssm_heads or d_in // s.head_dim_ssm
+    N = s.d_state
+    conv_ch = d_in + 2 * N
+    ks = split_keys(key, 4)
+    return {
+        "w_in": dense_init(ks[0], (D, 2 * d_in + 2 * N + H), dtype),
+        "conv_w": dense_init(ks[1], (s.d_conv, conv_ch), dtype, scale=3.0),
+        "A_log": jnp.zeros((H,), jnp.float32),
+        "D_skip": jnp.ones((H,), jnp.float32),
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+        "gate_norm": jnp.ones((d_in,), dtype),
+        "w_out": dense_init(ks[2], (d_in, D), dtype),
+    }
+
+
+def _mamba_dims(cfg):
+    s = cfg.ssm
+    d_in = s.expand * cfg.d_model
+    H = s.n_ssm_heads or d_in // s.head_dim_ssm
+    return d_in, H, s.head_dim_ssm, s.d_state
+
+
+def _split_in(p, x, cfg):
+    d_in, H, P, N = _mamba_dims(cfg)
+    z, xc, Bc, Cc, dt = jnp.split(
+        x @ p["w_in"], [d_in, 2 * d_in, 2 * d_in + N, 2 * d_in + 2 * N],
+        axis=-1)
+    return z, xc, Bc, Cc, dt
+
+
+def _causal_conv(seq, w, prev=None):
+    """Depthwise causal conv.  seq: [B, S, C]; w: [K, C]; prev: [B, K-1, C]."""
+    K = w.shape[0]
+    if prev is None:
+        prev = jnp.zeros((seq.shape[0], K - 1, seq.shape[2]), seq.dtype)
+    full = jnp.concatenate([prev, seq], axis=1)
+    out = sum(full[:, i:i + seq.shape[1]] * w[i] for i in range(K))
+    new_state = full[:, -(K - 1):] if K > 1 else prev
+    return jax.nn.silu(out), new_state
+
+
+def mamba2_forward(p, x, cfg, return_state: bool = False):
+    """Chunked SSD.  x: [B, S, D] -> y [B, S, D] (optionally + final state)."""
+    s = cfg.ssm
+    d_in, H, P, N = _mamba_dims(cfg)
+    B_, S, _ = x.shape
+    z, xc, Bc, Cc, dt = _split_in(p, x, cfg)
+    conv_in = jnp.concatenate([xc, Bc, Cc], axis=-1)
+    conv_out, _ = _causal_conv(conv_in, p["conv_w"])
+    xc, Bc, Cc = jnp.split(conv_out, [d_in, d_in + N], axis=-1)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])    # [B,S,H]
+    A = -jnp.exp(p["A_log"])                                       # [H]
+    xh = xc.reshape(B_, S, H, P).astype(jnp.float32)
+    Bf = Bc.astype(jnp.float32)                                    # [B,S,N]
+    Cf = Cc.astype(jnp.float32)
+
+    c = min(s.chunk, S)
+    pad = (-S) % c
+    S_orig = S
+    if pad:
+        # dt=0 on padded steps => decay 1, zero state contribution
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        xh = jnp.pad(xh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        Bf = jnp.pad(Bf, ((0, 0), (0, pad), (0, 0)))
+        Cf = jnp.pad(Cf, ((0, 0), (0, pad), (0, 0)))
+        S = S + pad
+    nc = S // c
+
+    def r(t):  # [B, S, ...] -> [B, nc, c, ...]
+        return t.reshape((B_, nc, c) + t.shape[2:])
+
+    dtc, xch, Bch, Cch = r(dt), r(xh), r(Bf), r(Cf)
+    la = dtc * A                                                   # log decay
+    cum = jnp.cumsum(la, axis=2)                                   # [B,nc,c,H]
+
+    # intra-chunk: y[i] = sum_{j<=i} C_i.B_j * exp(cum_i - cum_j) * dt_j * x_j
+    seg = cum[:, :, :, None, :] - cum[:, :, None, :, :]            # [B,nc,c,c,H]
+    causal = jnp.tril(jnp.ones((c, c), bool))
+    decay = jnp.where(causal[None, None, :, :, None], jnp.exp(seg), 0.0)
+    cb = jnp.einsum("bgin,bgjn->bgij", Cch, Bch)                   # [B,nc,c,c]
+    y_intra = jnp.einsum("bgij,bgijh,bgjh,bgjhp->bgihp",
+                         cb, decay, dtc, xch)
+
+    # chunk states: h_g = h_{g-1} * exp(sum la_g) + sum_j B_j dt_j x_j decay
+    decay_to_end = jnp.exp(cum[:, :, -1:, :] - cum)                # [B,nc,c,H]
+    dBx = jnp.einsum("bgjn,bgjh,bgjh,bgjhp->bghpn",
+                     Bch, dtc, decay_to_end, xch)                  # [B,nc,H,P,N]
+    chunk_decay = jnp.exp(cum[:, :, -1, :])                        # [B,nc,H]
+
+    def scan_state(h, inp):
+        dBx_g, dec_g = inp
+        h_new = h * dec_g[:, :, None, None] + dBx_g
+        return h_new, h
+    init = jnp.zeros((B_, H, P, N), jnp.float32)
+    h_final, h_prevs = jax.lax.scan(
+        scan_state, init,
+        (jnp.moveaxis(dBx, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)))
+    # NOTE: only the tiny elementwise state recurrence is inside this scan;
+    # all O(S*c) einsums are batched over chunks OUTSIDE it, so
+    # cost_analysis counts Mamba2 flops fully without unrolling.
+    h_prevs = jnp.moveaxis(h_prevs, 0, 1)                          # [B,nc,H,P,N]
+
+    y_inter = jnp.einsum("bgin,bgih,bghpn->bgihp",
+                         Cch, jnp.exp(cum), h_prevs)
+    y = (y_intra + y_inter).reshape(B_, S, H, P)[:, :S_orig]
+    S = S_orig
+    y = y + p["D_skip"][None, None, :, None] * xh[:, :S_orig]
+    y = y.reshape(B_, S, d_in).astype(x.dtype)
+    y = rmsnorm(y * jax.nn.silu(z), p["gate_norm"])
+    out = y @ p["w_out"]
+    if return_state:
+        state = {"conv": conv_in[:, -(s.d_conv - 1):].astype(jnp.float32),
+                 "ssm": h_final}
+        return out, state
+    return out
+
+
+def mamba2_init_state(cfg, batch, dtype=jnp.float32):
+    s = cfg.ssm
+    d_in, H, P, N = _mamba_dims(cfg)
+    return {
+        "conv": jnp.zeros((batch, s.d_conv - 1, d_in + 2 * N), dtype),
+        "ssm": jnp.zeros((batch, H, P, N), jnp.float32),
+    }
+
+
+def mamba2_decode(p, x, state, cfg):
+    """One-token step.  x: [B, 1, D]."""
+    d_in, H, P, N = _mamba_dims(cfg)
+    B_ = x.shape[0]
+    z, xc, Bc, Cc, dt = _split_in(p, x, cfg)
+    conv_in = jnp.concatenate([xc, Bc, Cc], axis=-1)
+    conv_out, conv_state = _causal_conv(conv_in, p["conv_w"],
+                                        prev=state["conv"].astype(x.dtype))
+    xc, Bc, Cc = jnp.split(conv_out, [d_in, d_in + N], axis=-1)
+
+    dt = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + p["dt_bias"])  # [B,H]
+    A = -jnp.exp(p["A_log"])
+    xh = xc[:, 0].reshape(B_, H, P).astype(jnp.float32)
+    Bf, Cf = Bc[:, 0].astype(jnp.float32), Cc[:, 0].astype(jnp.float32)
+    decay = jnp.exp(dt * A)                                            # [B,H]
+    h = (state["ssm"] * decay[:, :, None, None]
+         + jnp.einsum("bh,bhp,bn->bhpn", dt, xh, Bf))
+    y = jnp.einsum("bhpn,bn->bhp", h, Cf) + p["D_skip"][None, :, None] * xh
+    y = y.reshape(B_, 1, d_in).astype(x.dtype)
+    y = rmsnorm(y * jax.nn.silu(z), p["gate_norm"])
+    return y @ p["w_out"], {"conv": conv_state, "ssm": h}
+
+
+# ----------------------------------------------------------------- mLSTM ---
+
+def mlstm_params(key, cfg, dtype):
+    x = cfg.xlstm
+    D = cfg.d_model
+    d_in = int(x.proj_factor_m * D)
+    H = cfg.n_heads
+    ks = split_keys(key, 4)
+    return {
+        "w_up": dense_init(ks[0], (D, 2 * d_in), dtype),       # value + gate
+        "w_qkv": dense_init(ks[1], (d_in, 3 * d_in), dtype),
+        "w_if": dense_init(ks[2], (d_in, 2 * H), dtype),       # i/f gate logits
+        "norm": jnp.ones((d_in,), dtype),
+        "w_down": dense_init(ks[3], (d_in, D), dtype),
+    }
+
+
+def _mlstm_core_chunked(q, k, v, log_i, log_f, chunk, state=None):
+    """Chunked gated-linear-attention mLSTM core (fp32).
+
+    q/k/v: [B, S, H, P]; log_i/log_f: [B, S, H].
+    Returns y [B,S,H,P] and final (C [B,H,P,N? here P,P], n [B,H,P])."""
+    B_, S, H, P = q.shape
+    c = min(chunk, S)
+    assert S % c == 0
+    nc = S // c
+
+    def r(t):
+        return t.reshape((B_, nc, c) + t.shape[2:])
+
+    qc, kc, vc = r(q), r(k), r(v)
+    lic, lfc = r(log_i), r(log_f)
+    cum_f = jnp.cumsum(lfc, axis=2)                                # [B,nc,c,H]
+
+    # intra-chunk scores: exp(cum_i - cum_j + log_i_j) masked causal
+    seg = cum_f[:, :, :, None, :] - cum_f[:, :, None, :, :] + lic[:, :, None]
+    causal = jnp.tril(jnp.ones((c, c), bool))
+    w = jnp.where(causal[None, None, :, :, None], jnp.exp(seg), 0.0)
+    qk = jnp.einsum("bgihp,bgjhp->bgijh", qc, kc) * (P ** -0.5)
+    y_intra = jnp.einsum("bgijh,bgijh,bgjhp->bgihp", qk, w, vc)
+    n_intra = jnp.einsum("bgijh,bgjhp->bgihp", w, kc)  # normalizer input
+
+    # inter-chunk state
+    dec_end = jnp.exp(cum_f[:, :, -1:, :] - cum_f + lic)           # [B,nc,c,H]
+    kv = jnp.einsum("bgjh,bgjhp,bgjhq->bghpq", dec_end, kc, vc)
+    kn = jnp.einsum("bgjh,bgjhp->bghp", dec_end, kc)
+    chunk_decay = jnp.exp(cum_f[:, :, -1, :])
+
+    C0 = jnp.zeros((B_, H, P, P), jnp.float32)
+    n0 = jnp.zeros((B_, H, P), jnp.float32)
+    if state is not None:
+        C0, n0 = state
+
+    def scan_state(carry, inp):
+        C, n = carry
+        kv_g, kn_g, dec_g = inp
+        C_new = C * dec_g[:, :, None, None] + kv_g
+        n_new = n * dec_g[:, :, None] + kn_g
+        return (C_new, n_new), (C, n)
+
+    (Cf_, nf_), (C_prev, n_prev) = jax.lax.scan(
+        scan_state, (C0, n0),
+        (jnp.moveaxis(kv, 1, 0), jnp.moveaxis(kn, 1, 0),
+         jnp.moveaxis(chunk_decay, 1, 0)))
+    C_prev = jnp.moveaxis(C_prev, 0, 1)
+    n_prev = jnp.moveaxis(n_prev, 0, 1)
+
+    dec_in = jnp.exp(cum_f)                                        # [B,nc,c,H]
+    y_inter = jnp.einsum("bgih,bgihp,bghpq->bgihq",
+                         dec_in, qc * (P ** -0.5), C_prev)
+    n_inter = jnp.einsum("bgih,bgihp,bghp->bgih",
+                         dec_in, qc * (P ** -0.5), n_prev)
+    n_total = jnp.einsum("bgihp,bgihp->bgih", n_intra, qc * (P ** -0.5)) \
+        + n_inter
+    y = (y_intra + y_inter) / jnp.maximum(jnp.abs(n_total), 1.0)[..., None]
+    return y.reshape(B_, S, H, P), (Cf_, nf_)
+
+
+def mlstm_forward(p, x, cfg, state=None):
+    xl = cfg.xlstm
+    D = cfg.d_model
+    d_in = int(xl.proj_factor_m * D)
+    H = cfg.n_heads
+    P = d_in // H
+    B_, S, _ = x.shape
+    up = x @ p["w_up"]
+    val, gate = jnp.split(up, 2, axis=-1)
+    qkv = val @ p["w_qkv"]
+    q, k, v = jnp.split(qkv, 3, axis=-1)
+    q = q.reshape(B_, S, H, P).astype(jnp.float32)
+    k = k.reshape(B_, S, H, P).astype(jnp.float32)
+    v = v.reshape(B_, S, H, P).astype(jnp.float32)
+    gif = (val @ p["w_if"]).astype(jnp.float32)
+    log_i, f_raw = jnp.split(gif, 2, axis=-1)
+    log_f = jax.nn.log_sigmoid(f_raw)
+    y, new_state = _mlstm_core_chunked(q, k, v, log_i, log_f, chunk=64,
+                                       state=state)
+    y = y.reshape(B_, S, d_in).astype(x.dtype)
+    y = rmsnorm(y, p["norm"]) * jax.nn.silu(gate)
+    return y @ p["w_down"], new_state
+
+
+def mlstm_init_state(cfg, batch):
+    d_in = int(cfg.xlstm.proj_factor_m * cfg.d_model)
+    H = cfg.n_heads
+    P = d_in // H
+    return (jnp.zeros((batch, H, P, P), jnp.float32),
+            jnp.zeros((batch, H, P), jnp.float32))
+
+
+def mlstm_decode(p, x, state, cfg):
+    """Single-step mLSTM.  x: [B, 1, D]."""
+    xl = cfg.xlstm
+    d_in = int(xl.proj_factor_m * cfg.d_model)
+    H = cfg.n_heads
+    P = d_in // H
+    B_ = x.shape[0]
+    up = x @ p["w_up"]
+    val, gate = jnp.split(up, 2, axis=-1)
+    qkv = val @ p["w_qkv"]
+    q, k, v = [t[:, 0].reshape(B_, H, P).astype(jnp.float32)
+               for t in jnp.split(qkv, 3, axis=-1)]
+    gif = (val[:, 0] @ p["w_if"]).astype(jnp.float32)
+    log_i, f_raw = jnp.split(gif, 2, axis=-1)
+    log_f = jax.nn.log_sigmoid(f_raw)
+    C, n = state
+    dec = jnp.exp(log_f)
+    inp = jnp.exp(log_i)
+    C = C * dec[:, :, None, None] + jnp.einsum("bh,bhp,bhq->bhpq", inp, k, v)
+    n = n * dec[:, :, None] + inp[:, :, None] * k
+    qs = q * (P ** -0.5)
+    y = jnp.einsum("bhp,bhpq->bhq", qs, C)
+    denom = jnp.maximum(jnp.abs(jnp.einsum("bhp,bhp->bh", qs, n)), 1.0)
+    y = (y / denom[..., None]).reshape(B_, 1, d_in).astype(x.dtype)
+    y = rmsnorm(y, p["norm"]) * jax.nn.silu(gate)
+    return y @ p["w_down"], (C, n)
+
+
+# ----------------------------------------------------------------- sLSTM ---
+
+def slstm_params(key, cfg, dtype):
+    D = cfg.d_model
+    H = cfg.n_heads
+    P = D // H
+    ks = split_keys(key, 3)
+    return {
+        "w_x": dense_init(ks[0], (D, 4 * D), dtype),          # z,i,f,o from x
+        "r_h": dense_init(ks[1], (H, P, 4 * P), dtype),       # block-diag rec
+        "norm": jnp.ones((D,), dtype),
+        "w_out": dense_init(ks[2], (D, D), dtype),
+    }
+
+
+def slstm_init_state(cfg, batch):
+    D, H = cfg.d_model, cfg.n_heads
+    P = D // H
+    z = jnp.zeros((batch, H, P), jnp.float32)
+    return {"h": z, "c": z, "n": z + 1e-6, "m": z}
+
+
+def _slstm_cell(state, wx_t, r_h):
+    """wx_t: [B, H, P, 4] pre-activations from x; r_h: [H, P, 4P]."""
+    h, c, n, m = state["h"], state["c"], state["n"], state["m"]
+    rec = jnp.einsum("bhp,hpq->bhq", h, r_h).reshape(
+        h.shape[0], h.shape[1], h.shape[2], 4)
+    pre = wx_t + rec
+    z_t = jnp.tanh(pre[..., 0])
+    log_i = pre[..., 1]
+    log_f = jax.nn.log_sigmoid(pre[..., 2])
+    o_t = jax.nn.sigmoid(pre[..., 3])
+    m_new = jnp.maximum(log_f + m, log_i)
+    i_p = jnp.exp(log_i - m_new)
+    f_p = jnp.exp(log_f + m - m_new)
+    c_new = f_p * c + i_p * z_t
+    n_new = f_p * n + i_p
+    h_new = o_t * c_new / jnp.maximum(n_new, 1e-6)
+    return {"h": h_new, "c": c_new, "n": n_new, "m": m_new}
+
+
+def slstm_forward(p, x, cfg, state=None):
+    D, H = cfg.d_model, cfg.n_heads
+    P = D // H
+    B_, S, _ = x.shape
+    wx = (x @ p["w_x"]).astype(jnp.float32).reshape(B_, S, H, P, 4)
+    if state is None:
+        state = slstm_init_state(cfg, B_)
+    r_h = p["r_h"].astype(jnp.float32)
+
+    def step(st, wx_t):
+        st = _slstm_cell(st, wx_t, r_h)
+        return st, st["h"]
+
+    state, hs = jax.lax.scan(step, state, jnp.moveaxis(wx, 1, 0))
+    y = jnp.moveaxis(hs, 0, 1).reshape(B_, S, D).astype(x.dtype)
+    y = rmsnorm(y, p["norm"])
+    return y @ p["w_out"], state
+
+
+def slstm_decode(p, x, state, cfg):
+    D, H = cfg.d_model, cfg.n_heads
+    P = D // H
+    B_ = x.shape[0]
+    wx = (x[:, 0] @ p["w_x"]).astype(jnp.float32).reshape(B_, H, P, 4)
+    state = _slstm_cell(state, wx, p["r_h"].astype(jnp.float32))
+    y = state["h"].reshape(B_, 1, D).astype(x.dtype)
+    y = rmsnorm(y, p["norm"])
+    return y @ p["w_out"], state

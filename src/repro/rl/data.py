@@ -1,0 +1,78 @@
+"""Synthetic MATH-like task stream + char-level tokenizer.
+
+Deterministic arithmetic word problems with verifiable answers stand in for
+the paper's MATH dataset: each sample is a fixed-width prompt string like
+``"23+45=?########"`` whose answer is checkable with the numeric scorer.
+Prompts are fixed-width by construction ('#' filler) so the rollout engine
+can prefill a rectangular batch without padding masks.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, List, Tuple
+
+import numpy as np
+
+PAD, BOS, EOS = 0, 1, 2
+_CHARS = "0123456789+-*/=?#<> ()abcdefghijklmnopqrstuvwxyz"
+CHAR_TO_ID = {c: i + 3 for i, c in enumerate(_CHARS)}
+ID_TO_CHAR = {i + 3: c for i, c in enumerate(_CHARS)}
+VOCAB_SIZE = len(_CHARS) + 3
+
+
+def encode(text: str, length: int = 0) -> np.ndarray:
+    ids = [CHAR_TO_ID.get(c, CHAR_TO_ID["#"]) for c in text]
+    if length:
+        ids = ids[:length] + [PAD] * max(0, length - len(ids))
+    return np.asarray(ids, dtype=np.int32)
+
+
+def decode_ids(ids) -> str:
+    out = []
+    for i in np.asarray(ids).tolist():
+        if i == EOS:
+            break
+        if i in (PAD, BOS):
+            continue
+        out.append(ID_TO_CHAR.get(int(i), "#"))
+    return "".join(out)
+
+
+@dataclass
+class TaskBatch:
+    prompts: np.ndarray          # [B, S_p] int32 token ids
+    prompt_texts: List[str]
+    answers: List[str]
+
+
+class ArithmeticTasks:
+    """Deterministic stream of a+b / a-b / a*b problems."""
+
+    def __init__(self, prompt_len: int = 16, max_operand: int = 99,
+                 seed: int = 0, ops: str = "+-"):
+        self.prompt_len = prompt_len
+        self.max_operand = max_operand
+        self.ops = ops
+        self.rng = np.random.default_rng(seed)
+
+    def sample(self, n_prompts: int, n_per_prompt: int = 1) -> TaskBatch:
+        texts, answers = [], []
+        for _ in range(n_prompts):
+            a = int(self.rng.integers(0, self.max_operand + 1))
+            b = int(self.rng.integers(0, self.max_operand + 1))
+            op = self.ops[int(self.rng.integers(0, len(self.ops)))]
+            ans = {"+": a + b, "-": a - b, "*": a * b}[op]
+            t = f"{a}{op}{b}=?"
+            t = t + "#" * (self.prompt_len - len(t))
+            texts.append(t[:self.prompt_len])
+            answers.append(str(ans))
+        texts = [t for t in texts for _ in range(n_per_prompt)]
+        answers = [a for a in answers for _ in range(n_per_prompt)]
+        prompts = np.stack([encode(t, self.prompt_len) for t in texts])
+        return TaskBatch(prompts=prompts, prompt_texts=texts, answers=answers)
+
+
+def iterate_batches(tasks: ArithmeticTasks, n_prompts: int,
+                    n_per_prompt: int):
+    while True:
+        yield tasks.sample(n_prompts, n_per_prompt)

@@ -1,0 +1,57 @@
+"""Rule-based scorers + RLOO-style group baselines (paper Fig. 1, Sec. 6).
+
+The paper trains on MATH with a sympy symbolic-equivalence scorer.  Our
+synthetic arithmetic tasks (repro.rl.data) admit the same interface: a
+scorer maps (prompt_meta, generated_text) -> scalar reward.  Baselines are
+computed per prompt group of n samples: v(x) = mean_i r(x, y_i), broadcast
+to every token of the generation (constant sequence baseline, Sec. 6).
+"""
+from __future__ import annotations
+
+import re
+from typing import List, Sequence
+
+import numpy as np
+
+
+def numeric_equiv_score(expected: str, generated: str) -> float:
+    """Sympy-lite: numeric equivalence of the first number in the answer."""
+    m = re.search(r"-?\d+(?:\.\d+)?", generated)
+    if m is None:
+        return 0.0
+    try:
+        got = float(m.group(0))
+        want = float(expected)
+    except ValueError:
+        return 0.0
+    return 1.0 if abs(got - want) < 1e-6 else 0.0
+
+
+def exact_match_score(expected: str, generated: str) -> float:
+    return 1.0 if generated.strip().startswith(expected.strip()) else 0.0
+
+
+SCORERS = {
+    "numeric": numeric_equiv_score,
+    "exact": exact_match_score,
+}
+
+
+def score_group(expected: Sequence[str], texts: Sequence[str],
+                scorer: str = "numeric") -> np.ndarray:
+    fn = SCORERS[scorer]
+    return np.asarray([fn(e, t) for e, t in zip(expected, texts)],
+                      dtype=np.float32)
+
+
+def group_advantages(rewards: np.ndarray, n_per_prompt: int,
+                     leave_one_out: bool = False) -> np.ndarray:
+    """rewards: [B] with B = n_prompts * n_per_prompt, grouped contiguously.
+    Returns per-sample advantages [B] (constant over tokens)."""
+    r = rewards.reshape(-1, n_per_prompt)
+    if leave_one_out and n_per_prompt > 1:
+        tot = r.sum(axis=1, keepdims=True)
+        base = (tot - r) / (n_per_prompt - 1)
+    else:
+        base = r.mean(axis=1, keepdims=True)
+    return (r - base).reshape(-1)

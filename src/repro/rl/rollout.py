@@ -1,0 +1,119 @@
+"""Rollout engine: prefill + chunked decode with partial-rollout resume.
+
+The paper (Sec. 4.2) mitigates stragglers with partial rollouts (after Kimi
+k1.5): long generations are produced in fixed-size chunks; incomplete
+sequences keep their KV cache + cursor in a ``RolloutState`` and resume next
+iteration.  ``rollout_chunk`` is the resumable unit; ``generate`` is the
+convenience full rollout.
+
+Behavior logprobs mu(y_t | x, y_<t) -- under the *sampling* distribution,
+including temperature -- travel with the sample, exactly as the paper
+communicates them from generator to trainer (Sec. 6).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import prefill, decode_step
+from repro.rl.data import EOS, PAD
+
+
+class RolloutState(NamedTuple):
+    tokens: jax.Array          # [B, total_len] prompt + generated (PAD after)
+    behavior_logp: jax.Array   # [B, total_len] mu logprob per generated token
+    cache: Any
+    last_logits: jax.Array     # [B, V] logits predicting the next token
+    done: jax.Array            # [B] bool
+    prompt_len: int
+
+
+def start_rollout(params, cfg, prompts, total_len: int,
+                  dtype=jnp.float32, extra=None) -> RolloutState:
+    """prompts: [B, S_p] int32 (rectangular)."""
+    B, Sp = prompts.shape
+    batch = {"tokens": prompts}
+    if extra:
+        batch.update(extra)
+    cache_len = total_len + (cfg.frontend_tokens if cfg.family == "vlm" else 0)
+    last_logits, cache = prefill(params, cfg, batch, cache_len=cache_len,
+                                 dtype=dtype)
+    tokens = jnp.zeros((B, total_len), jnp.int32).at[:, :Sp].set(prompts)
+    return RolloutState(
+        tokens=tokens,
+        behavior_logp=jnp.zeros((B, total_len), jnp.float32),
+        cache=cache,
+        last_logits=last_logits,
+        done=jnp.zeros((B,), bool),
+        prompt_len=Sp,
+    )
+
+
+def _sample(logits, key, temperature: float):
+    if temperature == 0.0:
+        tok = jnp.argmax(logits, axis=-1)
+        logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    else:
+        scaled = logits.astype(jnp.float32) / temperature
+        tok = jax.random.categorical(key, scaled, axis=-1)
+        logp = jax.nn.log_softmax(scaled, axis=-1)
+    lp = jnp.take_along_axis(logp, tok[:, None], axis=-1)[:, 0]
+    return tok.astype(jnp.int32), lp
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("cfg", "n_steps", "temperature"))
+def rollout_chunk(params, cfg, state: RolloutState, key, *,
+                  n_steps: int, temperature: float = 1.0) -> RolloutState:
+    """Generate up to n_steps tokens; resumable (partial rollout)."""
+    cursor = state.cache["pos"] - (cfg.frontend_tokens
+                                   if cfg.family == "vlm" else 0)
+
+    def body(carry, k):
+        cache, logits, done = carry
+        tok, lp = _sample(logits, k, temperature)
+        tok = jnp.where(done, PAD, tok)
+        lp = jnp.where(done, 0.0, lp)
+        new_done = done | (tok == EOS)
+        new_logits, cache = decode_step(params, cfg, cache, tok[:, None])
+        return (cache, new_logits, new_done), (tok, lp)
+
+    keys = jax.random.split(key, n_steps)
+    (cache, last_logits, done), (toks, lps) = jax.lax.scan(
+        body, (state.cache, state.last_logits, state.done), keys)
+    toks = jnp.moveaxis(toks, 0, 1)      # [B, n_steps]
+    lps = jnp.moveaxis(lps, 0, 1)
+    tokens = jax.lax.dynamic_update_slice(state.tokens, toks, (0, cursor))
+    blp = jax.lax.dynamic_update_slice(state.behavior_logp, lps, (0, cursor))
+    return RolloutState(tokens=tokens, behavior_logp=blp, cache=cache,
+                        last_logits=last_logits, done=done,
+                        prompt_len=state.prompt_len)
+
+
+def generate(params, cfg, prompts, *, max_new: int, key,
+             temperature: float = 1.0, chunk: int = 0,
+             dtype=jnp.float32, extra=None) -> RolloutState:
+    """Full rollout = start + ceil(max_new/chunk) resumable chunks."""
+    B, Sp = prompts.shape
+    state = start_rollout(params, cfg, prompts, Sp + max_new, dtype=dtype,
+                          extra=extra)
+    chunk = chunk or max_new
+    steps = 0
+    while steps < max_new:
+        n = min(chunk, max_new - steps)
+        key, sub = jax.random.split(key)
+        state = rollout_chunk(params, cfg, state, sub, n_steps=n,
+                              temperature=temperature)
+        steps += n
+    return state
+
+
+def action_mask(state: RolloutState) -> jax.Array:
+    """1.0 on generated (non-PAD) positions after the prompt."""
+    B, T = state.tokens.shape
+    pos = jnp.arange(T)[None, :]
+    gen = pos >= state.prompt_len
+    return (gen & (state.tokens != PAD)).astype(jnp.float32)

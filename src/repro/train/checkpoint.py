@@ -1,0 +1,48 @@
+"""Sharded-aware checkpointing: npz payload + json manifest.
+
+Each leaf is saved host-side (fetching shards transparently); restore
+optionally re-places leaves onto a target sharding, so a checkpoint written
+from the trainer mesh can be restored straight onto the generator mesh.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _flatten(tree):
+    leaves, treedef = jax.tree.flatten(tree)
+    return leaves, treedef
+
+
+def save_checkpoint(path: str, tree: Any) -> None:
+    leaves, treedef = _flatten(tree)
+    arrays = {f"leaf_{i}": np.asarray(x) for i, x in enumerate(leaves)}
+    np.savez(path + ".npz", **arrays)
+    manifest = {
+        "treedef": str(treedef),
+        "n_leaves": len(leaves),
+        "dtypes": [str(np.asarray(x).dtype) for x in leaves],
+        "shapes": [list(np.asarray(x).shape) for x in leaves],
+    }
+    with open(path + ".json", "w") as f:
+        json.dump(manifest, f)
+
+
+def restore_checkpoint(path: str, like: Any,
+                       shardings: Optional[Any] = None) -> Any:
+    """``like``: a pytree with the target structure (values ignored)."""
+    data = np.load(path + ".npz")
+    leaves, treedef = _flatten(like)
+    assert len(leaves) == len(data.files), \
+        f"checkpoint has {len(data.files)} leaves, expected {len(leaves)}"
+    new_leaves = [jnp.asarray(data[f"leaf_{i}"]) for i in range(len(leaves))]
+    tree = treedef.unflatten(new_leaves)
+    if shardings is not None:
+        tree = jax.device_put(tree, shardings)
+    return tree

@@ -1,0 +1,80 @@
+"""Adam(W) in pure JAX (no optax): fp32 moments, bias correction, global-norm
+clipping, linear-warmup/constant/cosine schedules."""
+from __future__ import annotations
+
+from typing import Any, Dict, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamState(NamedTuple):
+    step: jax.Array
+    m: Any
+    v: Any
+
+
+def adam_init(params) -> AdamState:
+    zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    return AdamState(step=jnp.zeros((), jnp.int32), m=zeros,
+                     v=jax.tree.map(jnp.copy, zeros))
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in leaves))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    gn = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-9))
+    return jax.tree.map(lambda g: g * scale.astype(g.dtype), grads), gn
+
+
+def adam_update(params, grads, state: AdamState, *, lr,
+                b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+                weight_decay: float = 0.0, max_grad_norm: float = 1.0):
+    """Returns (new_params, new_state, metrics)."""
+    if max_grad_norm:
+        grads, gn = clip_by_global_norm(grads, max_grad_norm)
+    else:
+        gn = global_norm(grads)
+    step = state.step + 1
+    t = step.astype(jnp.float32)
+    c1 = 1.0 - b1 ** t
+    c2 = 1.0 - b2 ** t
+
+    def upd(p, g, m, v):
+        gf = g.astype(jnp.float32)
+        m_new = b1 * m + (1 - b1) * gf
+        v_new = b2 * v + (1 - b2) * gf * gf
+        update = (m_new / c1) / (jnp.sqrt(v_new / c2) + eps)
+        if weight_decay:
+            update = update + weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * update).astype(p.dtype), \
+            m_new, v_new
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(state.m)
+    flat_v = treedef.flatten_up_to(state.v)
+    out = [upd(p, g, m, v) for p, g, m, v in
+           zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = treedef.unflatten([o[0] for o in out])
+    new_m = treedef.unflatten([o[1] for o in out])
+    new_v = treedef.unflatten([o[2] for o in out])
+    return new_p, AdamState(step, new_m, new_v), {"grad_norm": gn}
+
+
+def lr_schedule(kind: str, base_lr: float, warmup: int = 0,
+                total: int = 0):
+    def fn(step):
+        lr = jnp.asarray(base_lr, jnp.float32)
+        if warmup:
+            lr = lr * jnp.minimum(1.0, (step + 1) / warmup)
+        if kind == "cosine" and total:
+            frac = jnp.clip((step - warmup) / max(total - warmup, 1), 0, 1)
+            lr = lr * 0.5 * (1 + jnp.cos(jnp.pi * frac))
+        return lr
+    return fn

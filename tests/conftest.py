@@ -1,0 +1,13 @@
+import jax
+import pytest
+
+# NOTE: no XLA_FLAGS here on purpose -- smoke tests and benches must see the
+# real single CPU device; only the dry-run forces 512 host devices (in its
+# own process).
+
+jax.config.update("jax_enable_x64", False)
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return jax.random.PRNGKey(0)

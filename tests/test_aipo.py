@@ -1,0 +1,117 @@
+"""Unit + property tests for the AIPO loss (paper Sec. 6 / App. A)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.aipo import aipo_loss, importance_weights, token_logprobs
+
+
+def test_token_logprobs_matches_log_softmax(rng):
+    logits = jax.random.normal(rng, (4, 7, 32)) * 3
+    toks = jax.random.randint(jax.random.PRNGKey(1), (4, 7), 0, 32)
+    got = token_logprobs(logits, toks)
+    want = jnp.take_along_axis(
+        jax.nn.log_softmax(logits, -1), toks[..., None], -1)[..., 0]
+    assert jnp.allclose(got, want, atol=1e-5)
+
+
+@settings(max_examples=50, deadline=None)
+@given(lp=st.floats(-10, 2), blp=st.floats(-10, 2),
+       rho=st.floats(1.0, 10.0))
+def test_aipo_weight_is_one_sided_clip(lp, blp, rho):
+    w = float(importance_weights(jnp.float32(lp), jnp.float32(blp),
+                                 rho=rho, clip_mode="aipo"))
+    ratio = np.exp(lp - blp)
+    assert w <= rho + 1e-5                  # clipped from above
+    if ratio <= rho:
+        assert np.isclose(w, ratio, rtol=1e-4)   # NOT clipped from below
+
+
+@settings(max_examples=30, deadline=None)
+@given(lp=st.floats(-8, 2), blp=st.floats(-8, 2), eps=st.floats(0.05, 0.5))
+def test_ppo_weight_is_double_sided(lp, blp, eps):
+    w = float(importance_weights(jnp.float32(lp), jnp.float32(blp),
+                                 rho=4.0, clip_mode="ppo", ppo_eps=eps))
+    assert 1 - eps - 1e-6 <= w <= 1 + eps + 1e-6
+
+
+def test_onpolicy_equals_no_correction(rng):
+    """When mu == pi, AIPO reduces exactly to the on-policy PG (ratio=1)."""
+    logits = jax.random.normal(rng, (2, 9, 16))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 9), 0, 16)
+    blp = token_logprobs(logits, toks)
+    adv = jax.random.normal(jax.random.PRNGKey(2), (2, 9))
+    mask = jnp.ones((2, 9))
+    l_aipo, m1 = aipo_loss(logits, toks, blp, adv, mask, clip_mode="aipo")
+    l_none, m2 = aipo_loss(logits, toks, blp, adv, mask, clip_mode="none")
+    assert jnp.allclose(l_aipo, l_none, atol=1e-5)
+    assert jnp.allclose(m1["mean_ratio"], 1.0, atol=1e-5)
+
+
+def test_clip_reduces_gradient_magnitude_under_staleness(rng):
+    """With very off-policy samples (ratio >> rho), the one-sided clip caps
+    the gradient far below the full-IS (unclipped) gradient -- the variance-
+    control mechanism -- while staying above the uncorrected w=1 gradient."""
+    logits = jax.random.normal(rng, (2, 9, 16))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 9), 0, 16)
+    blp = token_logprobs(logits, toks) - 5.0     # behavior much less likely
+    adv = jnp.ones((2, 9))
+    mask = jnp.ones((2, 9))
+
+    def gnorm(mode):
+        g = jax.grad(
+            lambda lg: aipo_loss(lg, toks, blp, adv, mask, rho=2.0,
+                                 clip_mode=mode)[0])(logits)
+        return float(jnp.linalg.norm(g))
+
+    assert gnorm("aipo") < gnorm("is_unclipped")
+    assert gnorm("none") < gnorm("aipo") + 1e-6
+
+
+def test_mask_excludes_prompt(rng):
+    logits = jax.random.normal(rng, (1, 8, 16))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (1, 8), 0, 16)
+    blp = token_logprobs(logits, toks)
+    adv = jnp.ones((1, 8)) * 100.0
+    m0 = jnp.zeros((1, 8))
+    loss, _ = aipo_loss(logits, toks, blp, adv, m0)
+    assert float(loss) == 0.0
+
+
+def test_kl_penalty_pulls_toward_reference(rng):
+    logits = jax.random.normal(rng, (1, 6, 12))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (1, 6), 0, 12)
+    blp = token_logprobs(logits, toks)
+    ref = blp + 1.0
+    adv = jnp.zeros((1, 6))
+    mask = jnp.ones((1, 6))
+    l0, _ = aipo_loss(logits, toks, blp, adv, mask, kl_coef=0.0,
+                      ref_logp=ref)
+    l1, _ = aipo_loss(logits, toks, blp, adv, mask, kl_coef=0.5,
+                      ref_logp=ref)
+    assert not jnp.allclose(l0, l1)
+
+
+@settings(max_examples=25, deadline=None)
+@given(n=st.integers(2, 8))
+def test_group_advantages_zero_mean(n):
+    from repro.rl.rewards import group_advantages
+    rng = np.random.default_rng(n)
+    r = rng.random(4 * n).astype(np.float32)
+    adv = group_advantages(r, n)
+    assert adv.shape == r.shape
+    assert np.allclose(adv.reshape(4, n).sum(1), 0.0, atol=1e-5)
+
+
+@settings(max_examples=25, deadline=None)
+@given(n=st.integers(2, 8))
+def test_group_advantages_leave_one_out(n):
+    from repro.rl.rewards import group_advantages
+    rng = np.random.default_rng(n + 100)
+    r = rng.random(2 * n).astype(np.float32)
+    adv = group_advantages(r, n, leave_one_out=True)
+    g = r.reshape(2, n)
+    want = g - (g.sum(1, keepdims=True) - g) / (n - 1)
+    assert np.allclose(adv.reshape(2, n), want, atol=1e-5)

@@ -1,0 +1,84 @@
+"""Units for the dry-run analysis machinery: HLO collective parser,
+counted-layers extrapolation math, sharding rule fitting."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro import configs
+
+
+def test_collective_parser_shapes():
+    from repro.launch.dryrun import _shape_bytes, collective_bytes
+    assert _shape_bytes("f32[2,3,4]") == 96
+    assert _shape_bytes("bf16[10]{0}") == 20
+    assert _shape_bytes("(f32[2,2]{1,0}, s8[4])") == 20
+    hlo = """
+  %ar = f32[8,16]{1,0} all-reduce(%x), replica_groups={}
+  %ag.1 = bf16[4]{0} all-gather(%y)
+  %a2a-start = (f32[2,2]{1,0}, f32[2,2]{1,0}) all-to-all-start(%z)
+  %done = f32[8,16] all-reduce-done(%ar)
+"""
+    got = collective_bytes(hlo)
+    assert got["all-reduce"] == 8 * 16 * 4
+    assert got["all-gather"] == 8
+    assert got["all-to-all"] == 32
+
+
+def test_counted_layers_math():
+    from repro.models.backbone import counted_layers, real_layers
+    cfg = configs.get_config("deepseek-v3-671b")     # segments [3, 58]
+    assert real_layers(cfg) == 61
+    assert counted_layers(cfg, 1) == 2               # 1 per segment
+    # u=2: seg 3 -> 2 + 1 tail; seg 58 -> 2 + 0
+    assert counted_layers(cfg, 2) == 5
+    z = configs.get_config("zamba2-7b")              # 13x6 + 3
+    assert real_layers(z) == 81
+    assert counted_layers(z, 1) == 14
+    assert counted_layers(z, 2) == 2 * 13 + 2 + 1
+
+
+def test_window_merge_at_short_seq():
+    """window >= seq_len must merge segments (train only)."""
+    from repro.models.backbone import segment_lengths
+    l4 = configs.get_config("llama4-scout-17b-a16e")
+    assert segment_lengths(l4, "train", 4096) == [48]       # merged
+    assert len(segment_lengths(l4, "train", 32768)) == 24   # not merged
+    assert len(segment_lengths(l4, "decode")) == 24
+
+
+def test_sharding_fit_drops_indivisible():
+    from repro.models.sharding import _fit
+    from repro.launch.mesh import make_dev_mesh
+    mesh = make_dev_mesh()           # (1, n_devices)
+    n = mesh.shape["model"]
+    spec = _fit(mesh, (n * 4, 3), ("model", "model"))
+    assert spec[0] == "model"        # divisible -> kept
+    if n > 1:
+        assert spec[1] is None       # 3 % n != 0 -> dropped
+
+
+def test_param_specs_cover_all_archs():
+    """Every arch's param tree gets a sharding without error, and 2D+
+    leaves with divisible dims get at least one sharded axis in train."""
+    from repro.launch.mesh import make_dev_mesh
+    from repro.models import init_params
+    from repro.models.sharding import params_shardings
+    mesh = make_dev_mesh()
+    for arch in configs.list_archs():
+        cfg = configs.get_smoke(arch)
+        p = jax.eval_shape(
+            lambda c=cfg: init_params(c, jax.random.PRNGKey(0),
+                                      jnp.float32))
+        sh = params_shardings(p, mesh, mode="train")
+        assert len(jax.tree.leaves(sh)) == len(jax.tree.leaves(p))
+
+
+def test_input_specs_no_allocation():
+    """input_specs returns pure ShapeDtypeStructs for every combo."""
+    from repro.launch.inputspecs import input_specs
+    from repro.configs.base import INPUT_SHAPES
+    for arch, shape_name in configs.combos():
+        cfg = configs.get_config(arch)
+        specs = input_specs(cfg, INPUT_SHAPES[shape_name])
+        for leaf in jax.tree.leaves(specs):
+            assert isinstance(leaf, jax.ShapeDtypeStruct), (arch, shape_name)

@@ -1,0 +1,76 @@
+"""Per-kernel shape/dtype sweeps asserting allclose against ref.py oracles
+(interpret=True executes the Pallas body on CPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.ddma import quantize_int8
+from repro.kernels import ops, ref
+
+
+@pytest.mark.parametrize("T,V,bt,bv", [
+    (64, 512, 32, 128),
+    (100, 1000, 256, 2048),       # blocks larger than dims + ragged pad
+    (33, 257, 16, 64),            # non-divisible everything
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_fused_logprob(T, V, bt, bv, dtype, rng):
+    logits = (jax.random.normal(rng, (T, V)) * 4).astype(dtype)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (T,), 0, V)
+    got = ops.fused_logprob(logits, toks, block_t=bt, block_v=bv)
+    want = ref.fused_logprob_ref(logits, toks)
+    tol = 1e-5 if dtype == jnp.float32 else 3e-2
+    assert jnp.max(jnp.abs(got - want)) < tol
+
+
+@pytest.mark.parametrize("B,S,H,K,hd,bq,bk", [
+    (2, 128, 8, 2, 32, 32, 32),
+    (1, 64, 4, 4, 64, 64, 32),    # MHA (K == H)
+    (2, 256, 8, 1, 16, 128, 64),  # MQA
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention(B, S, H, K, hd, bq, bk, dtype, rng):
+    ks = jax.random.split(rng, 3)
+    q = (jax.random.normal(ks[0], (B, S, H, hd)) * 0.5).astype(dtype)
+    k = (jax.random.normal(ks[1], (B, S, K, hd)) * 0.5).astype(dtype)
+    v = jax.random.normal(ks[2], (B, S, K, hd)).astype(dtype)
+    got = ops.flash_attention(q, k, v, block_q=bq, block_k=bk)
+    want = ref.flash_attention_ref(q, k, v)
+    tol = 1e-5 if dtype == jnp.float32 else 3e-2
+    assert jnp.max(jnp.abs(got.astype(jnp.float32)
+                           - want.astype(jnp.float32))) < tol
+
+
+def test_flash_attention_matches_model_path(rng):
+    """Kernel vs the model's chunked_attention (the dry-run path)."""
+    from repro.models.attention import chunked_attention
+    q = jax.random.normal(rng, (2, 128, 8, 32)) * 0.5
+    k = jax.random.normal(jax.random.PRNGKey(1), (2, 128, 2, 32)) * 0.5
+    v = jax.random.normal(jax.random.PRNGKey(2), (2, 128, 2, 32))
+    got = ops.flash_attention(q, k, v, block_q=32, block_k=32)
+    want = chunked_attention(q, k, v, causal=True, block_q=64)
+    assert jnp.max(jnp.abs(got - want)) < 1e-4
+
+
+@pytest.mark.parametrize("M,K,N,bm,bn,bk", [
+    (64, 128, 96, 32, 32, 64),
+    (50, 70, 90, 16, 32, 32),     # ragged
+    (8, 512, 8, 8, 8, 128),
+])
+def test_int8_matmul(M, K, N, bm, bn, bk, rng):
+    x = jax.random.normal(rng, (M, K))
+    w = jax.random.normal(jax.random.PRNGKey(1), (K, N))
+    wq, sc = quantize_int8(w)
+    got = ops.int8_matmul(x, wq, sc[0], block_m=bm, block_n=bn, block_k=bk)
+    want = ref.int8_matmul_ref(x, wq, sc[0])
+    assert jnp.max(jnp.abs(got - want)) < 1e-3
+
+
+def test_int8_quantization_error_bounded(rng):
+    """Quant-dequant relative error stays within int8 resolution."""
+    w = jax.random.normal(rng, (256, 128))
+    wq, sc = quantize_int8(w)
+    back = wq.astype(jnp.float32) * sc
+    err = jnp.max(jnp.abs(back - w))
+    assert err <= float(jnp.max(jnp.abs(w))) / 127.0 + 1e-6

