@@ -30,6 +30,10 @@ def run(clip_mode, seed=0):
         "grad_med": float(np.median(gnorms)),
         "clip_frac": float(np.mean(clip)),
         "reward": float(np.mean([h.get("mean_reward", 0) for h in hist[-6:]])),
+        "max_staleness": max(ctl.staleness_hist),
+        "staleness_hist": dict(sorted(ctl.staleness_hist.items())),
+        "queue_depth": float(np.mean([h["queue_depth"] for h in hist])),
+        "overlap_s": ctl.stats.get("overlap_s", 0.0),
     }
 
 
@@ -44,6 +48,11 @@ def main():
          f"unclipped={res['is_unclipped']['grad_p95']:.3f};"
          f"corrections_stabilize="
          f"{res['aipo']['grad_p95'] <= res['is_unclipped']['grad_p95']}")
+    r = res["aipo"]
+    emit("fig8/offpolicyness", r["max_staleness"] * 1e6,
+         f"staleness_hist={r['staleness_hist']};"
+         f"mean_queue_depth={r['queue_depth']:.2f};"
+         f"gen_train_overlap_s={r['overlap_s']:.2f}")
 
 
 if __name__ == "__main__":

@@ -37,11 +37,15 @@ def main():
         max_steps=20, mode="async", staleness=1)
 
     history = controller.run()
-    print(f"{'step':>4} {'reward':>7} {'loss':>8} {'ratio':>6} {'time':>6}")
+    print(f"{'step':>4} {'reward':>7} {'loss':>8} {'ratio':>6} "
+          f"{'wv':>3} {'time':>6}")
     for h in history:
         print(f"{h['step']:>4} {h['mean_reward']:>7.3f} "
               f"{h['loss']:>8.4f} {h['mean_ratio']:>6.3f} "
-              f"{h['step_time']:>6.2f}s")
+              f"{h['weight_version']:>3} {h['step_time']:>6.2f}s")
+    s = controller.stats
+    print(f"wall={s['wall_s']:.1f}s  gen/train overlap={s['overlap_s']:.1f}s "
+          f"(threads really do run the generator and trainer concurrently)")
 
 
 if __name__ == "__main__":

@@ -62,28 +62,18 @@ def main():
     t0 = time.time()
     done = 0
     while done < args.steps:
+        # repeated run() calls continue the controller: the generator and
+        # trainer threads are re-spawned, counters/queues persist
         ctl.max_steps = min(args.eval_every, args.steps - done)
-        ctl.run() if done == 0 else ctl_continue(ctl)
+        ctl.run()
         done += ctl.max_steps
         acc = evaluate(trn.state.params, cfg, tasks)
         rew_tr = np.mean([h["mean_reward"]
                           for h in trn.metrics_history[-10:]])
+        ov = ctl.stats.get("overlap_s", 0.0)
         print(f"step {done:4d}  greedy_acc={acc:.3f}  "
-              f"train_reward={rew_tr:.3f}  "
+              f"train_reward={rew_tr:.3f}  gen/train_overlap={ov:.1f}s  "
               f"elapsed={time.time()-t0:.0f}s", flush=True)
-
-
-def ctl_continue(ctl):
-    """Continue an initialized controller for another max_steps ticks."""
-    gen = next(e for e in ctl.executors.values()
-               if hasattr(e, "set_weights"))
-    trainer = next(e for e in ctl.executors.values()
-                   if hasattr(e, "get_model"))
-    for step in range(ctl.max_steps):
-        captured = dict(gen._outputs)
-        gen.step()
-        ctl._pipeline(gen=gen, captured=captured)
-        ctl._sync_weights(step)
 
 
 if __name__ == "__main__":

@@ -7,6 +7,8 @@ _EXPORTS = {
     "CommunicationChannel": "repro.core.channels",
     "WeightsCommunicationChannel": "repro.core.channels",
     "ExecutorController": "repro.core.controller",
+    "AsyncExecutorController": "repro.core.controller",
+    "StalenessBuffer": "repro.core.offpolicy",
     "Executor": "repro.core.executor",
     "GeneratorExecutor": "repro.core.executor",
     "RewardExecutor": "repro.core.executor",

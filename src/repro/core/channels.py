@@ -12,10 +12,19 @@ executor with a communication type:
 With meshes attached, array payloads are moved with a resharding
 ``jax.device_put`` (the ICI/DCN zero-copy path); without meshes (single-
 device dev box) transfers degrade gracefully to no-ops.
+
+Channels are *queue-backed* so the two ends can live on different
+controller threads: ``send`` applies the transfer on the producer thread
+and enqueues, ``recv`` dequeues and delivers to the inbound executor's
+(thread-safe) port.  Weight payloads travel as ``(version, params)`` so
+the generator can pin the exact weight version the bounded-staleness
+schedule prescribes.  The sequential controller paths keep using the
+direct ``communicate``/``deliver`` calls.
 """
 from __future__ import annotations
 
 import enum
+import queue
 from dataclasses import dataclass, field
 from typing import Any, Optional
 
@@ -34,6 +43,11 @@ class CommType(enum.Enum):
     DDMA_WEIGHTS_UPDATE = "ddma_weights_update"
     PS_WEIGHTS_UPDATE = "ps_weights_update"   # slow baseline, for benches
 
+    @property
+    def is_weights(self) -> bool:
+        return self in (CommType.DDMA_WEIGHTS_UPDATE,
+                        CommType.PS_WEIGHTS_UPDATE)
+
 
 def _payload_sharding(mesh, comm_type: CommType, x):
     if mesh is None:
@@ -50,27 +64,79 @@ class CommunicationChannel:
     outbound: Executor
     inbound: Executor
     comm_type: CommType
+    capacity: int = 16          # queue depth bound for the threaded path
 
-    def communicate(self):
-        data = self.outbound.get_output(self.name)
+    def __post_init__(self):
+        self._q: queue.Queue = queue.Queue(maxsize=max(0, self.capacity))
+
+    # ------------------------------------------------------ transfer core --
+
+    def _transfer(self, data):
+        """Move the payload toward the inbound executor's devices.  Runs on
+        the *producer* side so e.g. the DDMA reshard costs the trainer
+        thread, not the generator thread it feeds."""
         mesh = self.inbound.mesh
-        if self.comm_type in (CommType.DDMA_WEIGHTS_UPDATE,
-                              CommType.PS_WEIGHTS_UPDATE):
+        if self.comm_type.is_weights:
             if mesh is not None:
                 sharding = NamedSharding(mesh, P())
                 sync = (ddma.ddma_weight_sync
                         if self.comm_type == CommType.DDMA_WEIGHTS_UPDATE
                         else ddma.ps_weight_sync)
                 data = sync(data, sharding)
-            self.inbound.set_weights(data)
-            return
+            return data
         if mesh is not None:
             data = jax.tree.map(
                 lambda x: jax.device_put(
                     x, _payload_sharding(mesh, self.comm_type, x))
                 if isinstance(x, (jax.Array, jnp.ndarray)) else x,
                 data)
-        self.inbound.put_input(self.name, data)
+        return data
+
+    def _hand_over(self, data, version: Optional[int]):
+        if self.comm_type.is_weights:
+            self.inbound.set_weights(data, version=version)
+        else:
+            self.inbound.put_input(self.name, data)
+
+    # ----------------------------------------------------- sequential path --
+
+    def deliver(self, data, version: Optional[int] = None):
+        """Transfer + hand a given payload to the inbound executor."""
+        self._hand_over(self._transfer(data), version)
+
+    def communicate(self, version: Optional[int] = None):
+        """Sequential path: pull from the outbound port and deliver."""
+        self.deliver(self.outbound.get_output(self.name), version=version)
+
+    # ------------------------------------------------------- threaded path --
+
+    def send(self, data, version: Optional[int] = None,
+             timeout: Optional[float] = None):
+        """Producer side: transfer, then enqueue (blocks when full)."""
+        try:
+            self._q.put((version, self._transfer(data)), timeout=timeout)
+        except queue.Full:
+            raise TimeoutError(
+                f"channel '{self.name}' full for {timeout}s "
+                f"(capacity={self.capacity})")
+
+    def recv(self, timeout: Optional[float] = None):
+        """Consumer side: dequeue and deliver.  Returns (version, data);
+        raises queue.Empty on timeout."""
+        version, data = self._q.get(timeout=timeout)
+        self._hand_over(data, version)
+        return version, data
+
+    def pending(self) -> int:
+        return self._q.qsize()
+
+    def resize(self, capacity: int):
+        """Change the queue bound; only legal before any payload is
+        queued (a fresh Queue would silently drop them)."""
+        assert self._q.empty(), \
+            f"cannot resize channel '{self.name}' with queued payloads"
+        self.capacity = max(0, capacity)
+        self._q = queue.Queue(maxsize=self.capacity)
 
 
 def WeightsCommunicationChannel(name, outbound, inbound,

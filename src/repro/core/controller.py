@@ -1,45 +1,99 @@
-"""Single-controller event loop (paper Sec. 5.1.3, Algorithm 1).
+"""Single-controller RL loop (paper Sec. 5.1.3, Algorithm 1).
 
 Two execution modes, matching Fig. 2:
 
   * mode="sync"  -- synchronous on-policy RL: generate -> score -> train,
     each stage blocking the next; weights synced every tick (the
     DeepSpeed-Chat-like baseline, up to the distributed placement).
-  * mode="async" -- asynchronous off-policy RL: the next generation batch is
-    *dispatched before* the trainer consumes the current one; on disjoint
-    submeshes XLA overlaps them (JAX async dispatch).  The trainer thus
-    trains on samples >= 1 step stale; ``staleness`` deepens the lag
-    (Fig. 2's 1..n-step delay), absorbed by AIPO's off-policy correction.
+  * mode="async" -- asynchronous off-policy RL with *real* threads
+    (``AsyncExecutorController``): the generator executor runs in its own
+    thread producing ``(weight_version, batch)`` pairs into a
+    ``StalenessBuffer``; the reward/reference/trainer stages consume from
+    it on a second thread; the trainer publishes versioned weights back to
+    the generator through the queue-backed ``WeightsCommunicationChannel``.
 
-Because executors are jitted onto their own submeshes and dispatch is
-asynchronous, the controller -- exactly as the paper puts it -- is
-essentially just an event loop.
+Bounded-staleness schedule (AIPO's assumption, paper Sec. 6): batch ``n``
+is generated with weights version ``max(0, n - staleness)`` and trained
+when the trainer has performed exactly ``n`` updates, so the trained
+sample is never more than ``staleness`` versions behind.  Versions are
+pinned *by count*, not by wall-clock arrival, which makes the threaded
+controller bit-for-bit identical to the sequential reference
+(``run_sequential``) at every staleness -- threading changes wall-clock
+overlap, never numerics.
+
+``history`` records, per trained step: the trainer metrics plus
+``weight_version`` (of the batch's generator weights), ``trainer_version``,
+``sample_staleness``, ``queue_depth`` and per-executor idle time;
+``stats`` aggregates wall-clock busy/idle/overlap per run and
+``staleness_hist`` counts observed staleness values.
 """
 from __future__ import annotations
 
 import collections
+import queue
+import threading
 import time
-from typing import Dict, List
+from typing import Dict, List, Optional
 
 from repro.core.channels import CommType, CommunicationChannel
 from repro.core.executor import Executor
+from repro.core.offpolicy import StalenessBuffer
+
+
+def _interval_overlap(a, b) -> float:
+    """Total pairwise intersection of two sorted interval lists."""
+    i = j = 0
+    tot = 0.0
+    while i < len(a) and j < len(b):
+        lo = max(a[i][0], b[j][0])
+        hi = min(a[i][1], b[j][1])
+        if hi > lo:
+            tot += hi - lo
+        if a[i][1] < b[j][1]:
+            i += 1
+        else:
+            j += 1
+    return tot
 
 
 class ExecutorController:
+    """Sequential controller; constructing with mode="async" returns the
+    threaded ``AsyncExecutorController`` subclass."""
+
+    def __new__(cls, executor_group=None, communication_channels=None,
+                max_steps=0, mode: str = "async", *args, **kwargs):
+        if cls is ExecutorController and mode == "async":
+            return super().__new__(AsyncExecutorController)
+        return super().__new__(cls)
+
     def __init__(self, executor_group: List[Executor],
                  communication_channels: List[CommunicationChannel],
                  max_steps: int, mode: str = "async", staleness: int = 1,
-                 checkpoint_every: int = 0, checkpoint_path: str = ""):
+                 checkpoint_every: int = 0, checkpoint_path: str = "",
+                 timeout: float = 600.0):
         assert mode in ("sync", "async")
         self.executors = {e.name: e for e in executor_group}
         self.channels = communication_channels
         self.max_steps = max_steps
         self.mode = mode
-        self.staleness = max(1, staleness)
+        # sync mode is the on-policy baseline: weights delivered fresh
+        self.staleness = max(1, staleness) if mode == "async" else 0
         self.checkpoint_every = checkpoint_every
         self.checkpoint_path = checkpoint_path
+        self.timeout = timeout
         self.history: List[Dict] = []
-        self._weight_queue = collections.deque()
+        self.stats: Dict[str, float] = {}
+        self.staleness_hist: collections.Counter = collections.Counter()
+        self.generator = next((e for e in self.executors.values()
+                               if getattr(e, "role", "") == "generator"),
+                              None)
+        self.trainer = next((e for e in self.executors.values()
+                             if getattr(e, "role", "") == "trainer"), None)
+        self._initialized = False
+        self._tick = 0                       # trained steps == weight version
+        self._weight_bufs: Dict[int, StalenessBuffer] = {}
+
+    # ------------------------------------------------------------ plumbing --
 
     def _data_channels(self):
         return [c for c in self.channels
@@ -47,76 +101,296 @@ class ExecutorController:
                                    CommType.GATHER)]
 
     def _weight_channels(self):
-        return [c for c in self.channels
-                if c.comm_type in (CommType.DDMA_WEIGHTS_UPDATE,
-                                   CommType.PS_WEIGHTS_UPDATE)]
+        return [c for c in self.channels if c.comm_type.is_weights]
 
-    def _sync_weights(self, step: int):
-        """Queue trainer weights; deliver them ``staleness`` ticks late."""
-        for ch in self._weight_channels():
-            self._weight_queue.append(ch.outbound.get_output(ch.name))
-            while len(self._weight_queue) > self.staleness:
-                self._weight_queue.popleft()
-            stale = self._weight_queue[0]
-            mesh = ch.inbound.mesh
-            if mesh is not None:
-                from jax.sharding import NamedSharding, PartitionSpec as P
-                from repro.core import ddma
-                sync = (ddma.ddma_weight_sync
-                        if ch.comm_type == CommType.DDMA_WEIGHTS_UPDATE
-                        else ddma.ps_weight_sync)
-                stale = sync(stale, NamedSharding(mesh, P()))
-            ch.inbound.set_weights(stale)
+    def _weight_buf(self, ch) -> StalenessBuffer:
+        buf = self._weight_bufs.get(id(ch))
+        if buf is None:
+            buf = self._weight_bufs[id(ch)] = \
+                StalenessBuffer(delay=self.staleness)
+        return buf
 
-    def _pipeline(self, gen=None, captured=None):
+    def _sync_weights(self, tick: int, channels=None):
+        """Tick-based weight delivery: push this tick's trainer weights as
+        version ``tick`` and deliver what the StalenessBuffer releases --
+        exactly version ``tick - staleness`` once tick >= staleness.  (The
+        seed's ad-hoc deque delivered the *same-tick* push at staleness=1:
+        zero-step delivery lag.)"""
+        for ch in (channels if channels is not None
+                   else self._weight_channels()):
+            buf = self._weight_buf(ch)
+            buf.push(tick, ch.outbound.get_output(ch.name))
+            released = buf.pop()
+            if released is not None:
+                version, params = released
+                ch.deliver(params, version=version)
+
+    def _pipeline(self):
         """Walk data channels in declared order; each inbound executor steps
         right after its channel delivers (gen -> reward -> trainer ...)."""
         for ch in self._data_channels():
-            if gen is not None and ch.outbound is gen and captured is not None:
-                ch.inbound.put_input(ch.name, captured[ch.name])
-            else:
-                ch.communicate()
+            ch.communicate()
             ch.inbound.step()
 
+    def _record(self, step: int, step_time: float, *, weight_version: int,
+                queue_depth: int = 0, gen_idle_s: float = 0.0,
+                train_idle_s: float = 0.0):
+        metrics = dict(self.trainer.metrics_history[-1]) if self.trainer \
+            and self.trainer.metrics_history else {}
+        sample_staleness = step - weight_version
+        if sample_staleness > self.staleness:
+            raise RuntimeError(
+                f"staleness bound violated at step {step}: batch weights "
+                f"are version {weight_version}, bound {self.staleness}")
+        self.staleness_hist[sample_staleness] += 1
+        metrics.update(step=step, step_time=step_time,
+                       weight_version=weight_version,
+                       trainer_version=step + 1,
+                       sample_staleness=sample_staleness,
+                       queue_depth=queue_depth, gen_idle_s=gen_idle_s,
+                       train_idle_s=train_idle_s)
+        self.history.append(metrics)
+
+    def _maybe_checkpoint(self, step: int):
+        if self.checkpoint_every and (step + 1) % self.checkpoint_every == 0:
+            for e in self.executors.values():
+                e.save_checkpoint(self.checkpoint_path, step)
+
     def init(self):
+        if self._initialized:
+            return
         for e in self.executors.values():
             e.init()
-        self._sync_weights(step=-1)   # initial weights -> generator
+        # initial weights (version 0) go out with zero lag; the push seeds
+        # each weight channel's StalenessBuffer for the delayed schedule
+        for ch in self._weight_channels():
+            params = ch.outbound.get_output(ch.name)
+            buf = self._weight_buf(ch)
+            buf.push(0, params)
+            buf.pop()                       # delay=0 releases it; s>=1 keeps
+            ch.deliver(params, version=0)
+        self._initialized = True
+
+    # ----------------------------------------------------- sequential loop --
 
     def run(self) -> List[Dict]:
+        """Run ``max_steps`` (more) ticks; repeated calls continue."""
         self.init()
-        gen = next((e for e in self.executors.values()
-                    if getattr(e, "role", "") == "generator"), None)
-        trainer = next((e for e in self.executors.values()
-                        if getattr(e, "role", "") == "trainer"), None)
-
-        if self.mode == "async" and gen is not None:
-            gen.step()                      # prime: batch 0, initial weights
-
-        for step in range(self.max_steps):
+        gen = self.generator
+        wall0 = time.monotonic()
+        for _ in range(self.max_steps):
+            step = self._tick
             t0 = time.perf_counter()
             for e in self.executors.values():
                 e.set_step(step)
+            if step > 0:
+                self._sync_weights(step)
+            if gen is not None:
+                gen.step()
+            self._pipeline()
+            self._tick += 1
+            wv = gen.weight_version if gen is not None else step
+            self._record(step, time.perf_counter() - t0, weight_version=wv)
+            self._maybe_checkpoint(step)
+        wall = time.monotonic() - wall0
+        self.stats = {"wall_s": wall, "gen_busy_s": wall,
+                      "train_busy_s": wall, "overlap_s": 0.0,
+                      "gen_idle_s": 0.0, "train_idle_s": 0.0}
+        return self.history
 
-            if self.mode == "sync":
-                if gen is not None:
-                    gen.step()
-                self._pipeline()
-            else:
-                captured = dict(gen._outputs) if gen is not None else None
-                if gen is not None:
-                    gen.step()              # dispatch batch step+1 (overlaps)
-                self._pipeline(gen=gen, captured=captured)
 
-            self._sync_weights(step)
-            metrics = dict(trainer.metrics_history[-1]) if trainer and \
-                trainer.metrics_history else {}
-            metrics["step"] = step
-            metrics["step_time"] = time.perf_counter() - t0
-            self.history.append(metrics)
+class AsyncExecutorController(ExecutorController):
+    """Threaded asynchronous controller (the paper's Fig. 2b, for real).
 
-            if self.checkpoint_every and \
-                    (step + 1) % self.checkpoint_every == 0:
-                for e in self.executors.values():
-                    e.save_checkpoint(self.checkpoint_path, step)
+    Producer thread: waits until the pinned weight version for batch ``n``
+    arrives on the weight channel, generates, pushes ``(version, batch)``
+    into the sample ``StalenessBuffer``.  Consumer thread: pops, drives the
+    reward/reference/trainer pipeline, publishes weights version ``n+1``.
+    Exceptions on either thread stop the other and re-raise in the caller;
+    ``timeout`` bounds every blocking wait (deadline propagation).
+    """
+
+    def __init__(self, *args, **kwargs):
+        super().__init__(*args, **kwargs)
+        assert self.mode == "async", "AsyncExecutorController is mode=async"
+        assert self.generator is not None and self.trainer is not None, \
+            "async controller needs a generator and a trainer executor"
+        self._sample_queue = StalenessBuffer(delay=0,
+                                             max_size=self.staleness + 2)
+        self._live_weight_channels = [
+            ch for ch in self._weight_channels()
+            if ch.inbound is self.generator]
+        assert self._live_weight_channels, \
+            "async controller needs a weight channel into the generator"
+        # weight channels that feed other executors (e.g. trainer -> frozen
+        # reference) are serviced by the consumer thread on the same
+        # delayed schedule as the sequential path
+        self._aux_weight_channels = [
+            ch for ch in self._weight_channels()
+            if ch.inbound is not self.generator]
+        for ch in self._live_weight_channels:
+            # the schedule keeps <= staleness+1 unconsumed versions in
+            # flight; make sure the channel queue can hold them
+            ch.resize(max(ch.capacity, self.staleness + 4))
+
+    # The sequential reference: identical schedule, identical numerics, one
+    # thread, no overlap.  Used to verify the threaded path bit-for-bit.
+    def run_sequential(self) -> List[Dict]:
+        self._claim_entry_point("sequential")
+        return ExecutorController.run(self)
+
+    def _claim_entry_point(self, which: str):
+        """Threaded and sequential runs keep weight state in different
+        places (channel queues vs tick buffers); continuing one with the
+        other would deliver retired versions.  One controller, one mode."""
+        claimed = getattr(self, "_entry_point", None)
+        if claimed is not None and claimed != which:
+            raise RuntimeError(
+                f"cannot continue a '{claimed}' controller with a "
+                f"'{which}' run; build a fresh controller instead")
+        self._entry_point = which
+
+    # ------------------------------------------------------------- threads --
+
+    def _await(self, blocking_call, stop: threading.Event, what: str):
+        """Run a blocking call in short slices so a peer failure (stop set)
+        interrupts the wait; enforce the controller deadline."""
+        deadline = time.monotonic() + self.timeout
+        while not stop.is_set():
+            try:
+                return blocking_call(0.1)
+            except (TimeoutError, queue.Empty):
+                if time.monotonic() > deadline:
+                    raise TimeoutError(
+                        f"deadline ({self.timeout}s) waiting for {what}")
+        return None
+
+    def _generator_loop(self, first: int, last: int, stop: threading.Event,
+                        intervals: list):
+        gen = self.generator
+        for n in range(first, last):
+            need = max(0, n - self.staleness)
+            idle = 0.0
+            while gen.weight_version < need and not stop.is_set():
+                t0 = time.monotonic()
+                # every live channel carries every version, in order:
+                # drain one (version, params) pair from each per pass
+                for ch in self._live_weight_channels:
+                    if self._await(
+                            lambda t, c=ch: c.recv(timeout=t),
+                            stop, f"weights v{need} for batch {n}") is None:
+                        return
+                idle += time.monotonic() - t0
+            if stop.is_set():
+                return
+            t0 = time.monotonic()
+            gen.set_step(n)
+            gen.step()
+            snapshot = {ch.name: gen.get_output(ch.name)
+                        for ch in self._data_channels()
+                        if ch.outbound is gen}
+            t1 = time.monotonic()
+            intervals.append((t0, t1))
+            item = {"batch_index": n, "snapshot": snapshot,
+                    "gen_busy_s": t1 - t0, "gen_idle_s": idle}
+            if self._await(
+                    lambda t: self._sample_queue.push(
+                        gen.weight_version, item, timeout=t),
+                    stop, f"room in sample queue for batch {n}") is None:
+                return                       # stopped by a peer failure
+
+    def _consumer_loop(self, first: int, last: int, stop: threading.Event,
+                       intervals: list):
+        gen = self.generator
+        others = [e for e in self.executors.values() if e is not gen]
+        for n in range(first, last):
+            t0 = time.monotonic()
+            got = self._await(lambda t: self._sample_queue.pop_wait(t),
+                              stop, f"batch {n} from generator")
+            if got is None:
+                return
+            wait = time.monotonic() - t0
+            version, item = got
+            assert item["batch_index"] == n, \
+                f"sample queue out of order: got batch {item['batch_index']}"
+            depth = len(self._sample_queue)
+            t0 = time.perf_counter()
+            busy0 = time.monotonic()
+            for e in others:
+                e.set_step(n)
+            if n > 0:
+                # non-generator weight consumers get the same delayed
+                # delivery the sequential path gives them
+                self._sync_weights(n, channels=self._aux_weight_channels)
+            for ch in self._data_channels():
+                if ch.outbound is gen:
+                    ch.deliver(item["snapshot"][ch.name])
+                else:
+                    ch.communicate()
+                ch.inbound.step()
+            for ch in self._live_weight_channels:
+                ch.send(ch.outbound.get_output(ch.name), version=n + 1,
+                        timeout=self.timeout)
+            self._tick = n + 1
+            intervals.append((busy0, time.monotonic()))
+            self._record(n, time.perf_counter() - t0, weight_version=version,
+                         queue_depth=depth,
+                         gen_idle_s=item["gen_idle_s"], train_idle_s=wait)
+            self._maybe_checkpoint(n)
+
+    def run(self) -> List[Dict]:
+        """Run ``max_steps`` (more) threaded steps; repeated calls continue
+        (counters, channel queues and executor state persist)."""
+        self._claim_entry_point("threaded")
+        self.init()
+        first, last = self._tick, self._tick + self.max_steps
+        stop = threading.Event()
+        errors: List[BaseException] = []
+        gen_iv: list = []
+        train_iv: list = []
+
+        def guarded(fn, *args):
+            def body():
+                try:
+                    fn(*args)
+                except BaseException as e:   # propagate to the caller
+                    errors.append(e)
+                    stop.set()
+            return body
+
+        wall0 = time.monotonic()
+        threads = [
+            threading.Thread(
+                target=guarded(self._generator_loop, first, last, stop,
+                               gen_iv),
+                name="generator", daemon=True),
+            threading.Thread(
+                target=guarded(self._consumer_loop, first, last, stop,
+                               train_iv),
+                name="consumer", daemon=True),
+        ]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join(timeout=self.timeout)
+        if any(t.is_alive() for t in threads):
+            stop.set()
+            for t in threads:
+                t.join(timeout=5.0)
+            if not errors:
+                raise TimeoutError(
+                    f"controller deadline ({self.timeout}s) exceeded; "
+                    "executor threads did not finish")
+        if errors:
+            raise errors[0]
+        wall = time.monotonic() - wall0
+        rows = self.history[first:last]
+        self.stats = {
+            "wall_s": wall,
+            "gen_busy_s": sum(e - s for s, e in gen_iv),
+            "train_busy_s": sum(e - s for s, e in train_iv),
+            "overlap_s": _interval_overlap(gen_iv, train_iv),
+            "gen_idle_s": sum(r["gen_idle_s"] for r in rows),
+            "train_idle_s": sum(r["train_idle_s"] for r in rows),
+        }
         return self.history

@@ -9,6 +9,7 @@ and generator work on disjoint devices.
 from __future__ import annotations
 
 import os
+import threading
 from typing import Any, Dict, Optional
 
 import jax
@@ -24,7 +25,12 @@ from repro.train.trainstep import TrainState, init_train_state, \
 
 
 class Executor:
-    """Base executor (paper Sec. 5.1.1)."""
+    """Base executor (paper Sec. 5.1.1).
+
+    Input/output ports are lock-guarded so channels may hand payloads
+    across controller threads; each executor's ``step`` itself is only
+    ever driven by the single thread that owns it.
+    """
 
     role = "generic"
 
@@ -32,6 +38,7 @@ class Executor:
         self.name = name
         self.mesh = mesh
         self.curr_step = 0
+        self._port_lock = threading.RLock()
         self._outputs: Dict[str, Any] = {}
         self._inputs: Dict[str, Any] = {}
 
@@ -45,10 +52,20 @@ class Executor:
         raise NotImplementedError
 
     def get_output(self, name: str):
-        return self._outputs[name]
+        with self._port_lock:
+            return self._outputs[name]
+
+    def set_output(self, name: str, value):
+        with self._port_lock:
+            self._outputs[name] = value
 
     def put_input(self, name: str, value):
-        self._inputs[name] = value
+        with self._port_lock:
+            self._inputs[name] = value
+
+    def get_input(self, name: str, default=None):
+        with self._port_lock:
+            return self._inputs.get(name, default)
 
     def save_checkpoint(self, path: str, step: int):
         pass
@@ -75,11 +92,16 @@ class GeneratorExecutor(Executor):
         self.chunk = chunk
         self.key = jax.random.PRNGKey(seed)
         self.params = None
+        self.weight_version = -1        # version of self.params (-1 = unset)
 
-    def set_weights(self, params):
-        """Receives DDMA'd trainer weights; applies generator quantization."""
+    def set_weights(self, params, version: Optional[int] = None):
+        """Receives DDMA'd trainer weights; applies generator quantization.
+        ``version`` tags which trainer update produced these weights, so
+        every batch this executor emits can be staleness-checked."""
         self.params = ddma.quantize_dequant(params) if self.quantize \
             else params
+        if version is not None:
+            self.weight_version = version
 
     def step(self):
         assert self.params is not None, "weights never synchronized"
@@ -89,15 +111,17 @@ class GeneratorExecutor(Executor):
         state = generate(self.params, self.cfg, prompts,
                          max_new=self.max_new, key=sub,
                          temperature=self.temperature, chunk=self.chunk)
-        self._outputs["completions"] = {
+        out = {
             "tokens": state.tokens,
             "behavior_logp": state.behavior_logp,
             "mask": action_mask(state),
             "prompt_len": state.prompt_len,
             "answers": batch.answers,
+            "weight_version": self.weight_version,
         }
+        self.set_output("completions", out)
         self.curr_step += 1
-        return self._outputs["completions"]
+        return out
 
 
 class RewardExecutor(Executor):
@@ -109,16 +133,34 @@ class RewardExecutor(Executor):
                  leave_one_out: bool = False, name: str = "reward",
                  mesh=None):
         super().__init__(name, mesh)
+        if n_per_prompt < 1:
+            raise ValueError(f"n_per_prompt must be >= 1, got {n_per_prompt}")
+        if leave_one_out and n_per_prompt < 2:
+            raise ValueError(
+                "leave_one_out needs n_per_prompt >= 2: the RLOO baseline "
+                "averages the other n-1 samples of the group")
         self.n_per_prompt = n_per_prompt
         self.scorer = scorer
         self.leave_one_out = leave_one_out
 
+    @staticmethod
+    def _prompt_lens(prompt_len, batch_size: int) -> np.ndarray:
+        """Accept a scalar or a per-sequence [B] array of prompt lengths."""
+        if np.ndim(prompt_len) == 0:
+            return np.full(batch_size, int(prompt_len), dtype=np.int64)
+        lens = np.asarray(prompt_len).astype(np.int64).reshape(-1)
+        if lens.shape[0] != batch_size:
+            raise ValueError(
+                f"prompt_len has {lens.shape[0]} entries for a batch of "
+                f"{batch_size} sequences")
+        return lens
+
     def step(self):
-        comp = self._inputs.get("completions_with_ref") \
-            or self._inputs["completions"]
+        comp = self.get_input("completions_with_ref") \
+            or self.get_input("completions")
         toks = np.asarray(comp["tokens"])
-        Sp = int(comp["prompt_len"])
-        texts = [rl_data.decode_ids(t[Sp:]) for t in toks]
+        plens = self._prompt_lens(comp["prompt_len"], toks.shape[0])
+        texts = [rl_data.decode_ids(t[p:]) for t, p in zip(toks, plens)]
         rewards = rl_rewards.score_group(comp["answers"], texts, self.scorer)
         adv = rl_rewards.group_advantages(rewards, self.n_per_prompt,
                                           self.leave_one_out)
@@ -133,9 +175,9 @@ class RewardExecutor(Executor):
         }
         if "ref_logp" in comp:
             out["ref_logp"] = comp["ref_logp"]
-        self._outputs["completions_with_reward"] = out
+        self.set_output("completions_with_reward", out)
         self.curr_step += 1
-        return self._outputs["completions_with_reward"]
+        return out
 
 
 class RefPolicyExecutor(Executor):
@@ -152,14 +194,14 @@ class RefPolicyExecutor(Executor):
         self.params = None
         self._jitted = None
 
-    def set_weights(self, params):
+    def set_weights(self, params, version: Optional[int] = None):
         # only the FIRST sync sticks: the reference stays frozen
         if self.params is None:
             self.params = params
 
     def step(self):
         assert self.params is not None
-        comp = self._inputs["completions"]
+        comp = self.get_input("completions")
         from repro.core.aipo import token_logprobs
         from repro.models import forward_train
 
@@ -172,7 +214,7 @@ class RefPolicyExecutor(Executor):
             self._jitted = jax.jit(ref_logp)
         out = dict(comp)
         out["ref_logp"] = self._jitted(self.params, comp["tokens"])
-        self._outputs["completions_with_ref"] = out
+        self.set_output("completions_with_ref", out)
         self.curr_step += 1
         return out
 
@@ -199,13 +241,13 @@ class TrainerExecutor(Executor):
     def init(self):
         self.state = init_train_state(self.cfg, jax.random.PRNGKey(self.seed),
                                       self.dtype)
-        self._outputs["policy_model"] = self.state.params
+        self.set_output("policy_model", self.state.params)
 
     def get_model(self):
         return self.state.params
 
     def step(self):
-        scored = self._inputs["completions_with_reward"]
+        scored = self.get_input("completions_with_reward")
         batch = {
             "tokens": scored["tokens"],
             "behavior_logp": scored["behavior_logp"],
@@ -218,7 +260,7 @@ class TrainerExecutor(Executor):
         metrics = {k: float(v) for k, v in metrics.items()}
         metrics["mean_reward"] = scored.get("mean_reward", 0.0)
         self.metrics_history.append(metrics)
-        self._outputs["policy_model"] = self.state.params
+        self.set_output("policy_model", self.state.params)
         self.curr_step += 1
         return metrics
 

@@ -2,13 +2,20 @@
 
 ``StalenessBuffer`` is the controller-side queue that realizes Fig. 2's
 1..n-step delay between the policy that *generated* a batch and the policy
-that *trains* on it.  ``PartialRolloutCache`` stores incomplete
-``RolloutState``s across iterations (paper Sec. 4.2, after Kimi k1.5) so
-long generations never block a training tick.
+that *trains* on it.  It is thread-safe: the async controller's generator
+thread pushes ``(weight_version, batch)`` pairs into it while the
+reward/reference/trainer consumer thread blocks on ``pop_wait``.  With
+``delay=0`` it is a plain bounded FIFO (the sample queue); with
+``delay=s`` and one push+pop per tick it releases exactly the entry
+pushed ``s`` ticks earlier (the bounded-staleness weight schedule).
+``PartialRolloutCache`` stores incomplete ``RolloutState``s across
+iterations (paper Sec. 4.2, after Kimi k1.5) so long generations never
+block a training tick.
 """
 from __future__ import annotations
 
 import collections
+import threading
 from dataclasses import dataclass, field
 from typing import Any, Deque, Dict, List, Optional, Tuple
 
@@ -19,30 +26,67 @@ from repro.rl.rollout import RolloutState
 
 
 class StalenessBuffer:
-    """FIFO of (version, batch); pop returns batches exactly ``delay``
-    versions behind the latest push."""
+    """Thread-safe FIFO of (version, batch) pairs.
 
-    def __init__(self, delay: int = 1):
+    ``pop`` releases the head entry once it is at least ``delay`` versions
+    behind the latest push (or the queue has overflowed ``delay`` entries),
+    so at ``delay=s`` the delivered version trails the newest push by
+    exactly ``s``.  ``max_size=0`` means unbounded; a bounded buffer makes
+    ``push`` block (backpressure on the producer thread).
+    """
+
+    def __init__(self, delay: int = 1, max_size: int = 0):
         self.delay = max(0, delay)
+        self.max_size = max(0, max_size)
         self._q: Deque[Tuple[int, Any]] = collections.deque()
         self.latest_version = -1
+        self._cond = threading.Condition()
 
-    def push(self, version: int, batch: Any):
-        self.latest_version = version
-        self._q.append((version, batch))
+    def _has_room(self) -> bool:
+        return not self.max_size or len(self._q) < self.max_size
+
+    def _ready(self) -> bool:
+        if not self._q:
+            return False
+        version, _ = self._q[0]
+        return self.latest_version - version >= self.delay or \
+            len(self._q) > self.delay
+
+    def push(self, version: int, batch: Any,
+             timeout: Optional[float] = None):
+        """Append (version, batch); blocks while full (bounded buffers)."""
+        with self._cond:
+            if not self._cond.wait_for(self._has_room, timeout):
+                raise TimeoutError(
+                    f"StalenessBuffer full for {timeout}s "
+                    f"(max_size={self.max_size})")
+            self.latest_version = max(self.latest_version, version)
+            self._q.append((version, batch))
+            self._cond.notify_all()
+            return True
 
     def pop(self) -> Optional[Tuple[int, Any]]:
-        if not self._q:
-            return None
-        version, batch = self._q[0]
-        if self.latest_version - version >= self.delay or \
-                len(self._q) > self.delay:
-            self._q.popleft()
-            return version, batch
-        return None
+        """Non-blocking: the released (version, batch), or None."""
+        with self._cond:
+            if not self._ready():
+                return None
+            item = self._q.popleft()
+            self._cond.notify_all()
+            return item
+
+    def pop_wait(self, timeout: Optional[float] = None) -> Tuple[int, Any]:
+        """Blocking pop: waits until an entry is released."""
+        with self._cond:
+            if not self._cond.wait_for(self._ready, timeout):
+                raise TimeoutError(
+                    f"StalenessBuffer empty for {timeout}s")
+            item = self._q.popleft()
+            self._cond.notify_all()
+            return item
 
     def __len__(self):
-        return len(self._q)
+        with self._cond:
+            return len(self._q)
 
 
 class PartialRolloutCache:

@@ -89,6 +89,9 @@ def main():
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--checkpoint-every", type=int, default=0)
     ap.add_argument("--checkpoint-path", default="checkpoints")
+    ap.add_argument("--sequential", action="store_true",
+                    help="run the async schedule on one thread (debug "
+                    "reference; numerically identical, no overlap)")
     ap.add_argument("--out", default="")
     args = ap.parse_args()
 
@@ -102,13 +105,18 @@ def main():
     assert cfg.vocab >= VOCAB_SIZE, "config vocab too small for tokenizer"
 
     ctl = build_controller(cfg, args)
-    history = ctl.run()
+    history = ctl.run_sequential() if args.sequential and \
+        args.mode == "async" else ctl.run()
     for h in history:
         print({k: (round(v, 4) if isinstance(v, float) else v)
                for k, v in h.items()})
+    print("stats:", {k: round(v, 3) for k, v in ctl.stats.items()})
+    print("staleness_hist:", dict(sorted(ctl.staleness_hist.items())))
     if args.out:
         with open(args.out, "w") as f:
-            json.dump(history, f, indent=1)
+            json.dump({"history": history, "stats": ctl.stats,
+                       "staleness_hist": dict(ctl.staleness_hist)}, f,
+                      indent=1)
 
 
 if __name__ == "__main__":

@@ -48,8 +48,18 @@ def group_advantages(rewards: np.ndarray, n_per_prompt: int,
                      leave_one_out: bool = False) -> np.ndarray:
     """rewards: [B] with B = n_prompts * n_per_prompt, grouped contiguously.
     Returns per-sample advantages [B] (constant over tokens)."""
-    r = rewards.reshape(-1, n_per_prompt)
-    if leave_one_out and n_per_prompt > 1:
+    r = np.asarray(rewards)
+    if n_per_prompt < 1:
+        raise ValueError(f"n_per_prompt must be >= 1, got {n_per_prompt}")
+    if r.size % n_per_prompt:
+        raise ValueError(
+            f"{r.size} rewards do not divide into groups of {n_per_prompt}")
+    if leave_one_out and n_per_prompt < 2:
+        raise ValueError(
+            "leave_one_out needs n_per_prompt >= 2: the RLOO baseline "
+            "divides by n-1")
+    r = r.reshape(-1, n_per_prompt)
+    if leave_one_out:
         tot = r.sum(axis=1, keepdims=True)
         base = (tot - r) / (n_per_prompt - 1)
     else:

@@ -1,0 +1,32 @@
+"""Import ``hypothesis`` with a graceful fallback.
+
+The seed image does not ship ``hypothesis``; an unconditional import makes
+pytest abort *collection* of the whole module, hiding every other test.
+Import ``given``/``settings``/``st`` from here instead: when hypothesis is
+installed (see requirements-dev.txt) the real library is used; when it is
+missing, property tests are individually skipped while plain unit tests in
+the same module still collect and run.
+"""
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:            # pragma: no cover - exercised on seed image
+    import pytest
+
+    HAVE_HYPOTHESIS = False
+
+    class _NullStrategies:
+        """Stands in for ``hypothesis.strategies``: every strategy factory
+        (st.floats, st.integers, ...) returns None; the values are never
+        used because ``given`` skips the test."""
+
+        def __getattr__(self, name):
+            return lambda *a, **kw: None
+
+    st = _NullStrategies()
+
+    def given(*args, **kwargs):
+        return pytest.mark.skip(reason="hypothesis not installed")
+
+    def settings(*args, **kwargs):
+        return lambda fn: fn

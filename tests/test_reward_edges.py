@@ -1,0 +1,67 @@
+"""RewardExecutor / group_advantages edge cases: RLOO with a single sample
+per prompt (n-1 = 0), malformed group sizes, and per-sequence prompt
+lengths."""
+import numpy as np
+import pytest
+
+from repro.core import RewardExecutor
+from repro.rl.data import EOS, encode
+from repro.rl.rewards import group_advantages
+
+
+def test_group_advantages_rloo_single_sample_raises():
+    with pytest.raises(ValueError, match="leave_one_out"):
+        group_advantages(np.ones(4, np.float32), 1, leave_one_out=True)
+
+
+def test_group_advantages_bad_group_size_raises():
+    with pytest.raises(ValueError, match="groups of 3"):
+        group_advantages(np.ones(4, np.float32), 3)
+    with pytest.raises(ValueError, match="n_per_prompt"):
+        group_advantages(np.ones(4, np.float32), 0)
+
+
+def test_reward_executor_rejects_rloo_with_one_sample():
+    with pytest.raises(ValueError, match="n_per_prompt >= 2"):
+        RewardExecutor(n_per_prompt=1, leave_one_out=True)
+
+
+def _completions(prompt_len):
+    """Two sequences answering '7': row 0 after a 4-token prompt, row 1
+    after a 6-token prompt."""
+    T = 10
+    toks = np.zeros((2, T), np.int64)
+    for i, (plen, ans) in enumerate(((4, "7"), (6, "7"))):
+        toks[i, :plen] = encode("#" * plen)
+        body = encode(ans)
+        toks[i, plen:plen + len(body)] = body
+        toks[i, plen + len(body)] = EOS
+    return {
+        "tokens": toks,
+        "behavior_logp": np.zeros((2, T), np.float32),
+        "mask": (toks > 0).astype(np.float32),
+        "prompt_len": prompt_len,
+        "answers": ["7", "7"],
+    }
+
+
+def test_reward_executor_per_sequence_prompt_len():
+    rew = RewardExecutor(n_per_prompt=1)
+    rew.put_input("completions", _completions(np.array([4, 6])))
+    out = rew.step()
+    assert out["mean_reward"] == 1.0
+
+
+def test_reward_executor_scalar_prompt_len_still_works():
+    rew = RewardExecutor(n_per_prompt=1)
+    comp = _completions(4)
+    comp["tokens"][1] = comp["tokens"][0]     # rectangular prompts again
+    rew.put_input("completions", comp)
+    assert rew.step()["mean_reward"] == 1.0
+
+
+def test_reward_executor_prompt_len_size_mismatch_raises():
+    rew = RewardExecutor(n_per_prompt=1)
+    rew.put_input("completions", _completions(np.array([4, 6, 8])))
+    with pytest.raises(ValueError, match="3 entries"):
+        rew.step()

@@ -1,0 +1,100 @@
+"""Rollout EOS/PAD boundary regression tests: the EOS token itself is an
+action (mask=1, behavior logprob attached), every post-EOS position is
+PAD with zero logprob and zero mask, and both invariants survive chunked
+partial-rollout resumes."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.llama_paper import smoke
+from repro.rl.data import EOS, PAD
+from repro.rl.rollout import action_mask, generate, rollout_chunk, \
+    start_rollout
+
+
+@pytest.fixture(scope="module")
+def cfg():
+    return smoke().replace(n_layers=1, d_model=32, n_heads=2, n_kv_heads=2,
+                           head_dim=16, d_ff=64, vocab=64)
+
+
+@pytest.fixture(scope="module")
+def params(cfg):
+    from repro.models import init_params
+    return init_params(cfg, jax.random.PRNGKey(0), jnp.float32)
+
+
+def _force_eos_next(state):
+    """Bias the pending logits so greedy sampling picks EOS next, while
+    keeping its probability < 1 so the logprob is strictly negative."""
+    biased = jnp.zeros_like(state.last_logits).at[:, EOS].set(2.0)
+    return state._replace(last_logits=biased)
+
+
+def test_eos_token_is_an_action(cfg, params):
+    B, Sp, new = 2, 6, 4
+    prompts = jnp.ones((B, Sp), jnp.int32) * 5
+    st = start_rollout(params, cfg, prompts, Sp + new)
+    st = _force_eos_next(st)
+    st = rollout_chunk(params, cfg, st, jax.random.PRNGKey(0), n_steps=new,
+                       temperature=0.0)
+    toks = np.asarray(st.tokens)
+    blp = np.asarray(st.behavior_logp)
+    mask = np.asarray(action_mask(st))
+    # the EOS token is recorded as the first generated action...
+    assert (toks[:, Sp] == EOS).all()
+    # ...counted by the action mask, with its behavior logprob attached
+    assert (mask[:, Sp] == 1.0).all()
+    assert (blp[:, Sp] < 0.0).all()
+    # every position after EOS is PAD / zero-logprob / zero-mask
+    assert (toks[:, Sp + 1:] == PAD).all()
+    assert (blp[:, Sp + 1:] == 0.0).all()
+    assert (mask[:, Sp + 1:] == 0.0).all()
+    assert np.asarray(st.done).all()
+
+
+def test_post_eos_stays_padded_across_chunk_resume(cfg, params):
+    """A sequence that finished in chunk k must emit only PAD/zero in every
+    later chunk (the partial-rollout resume path)."""
+    B, Sp = 2, 6
+    prompts = jnp.ones((B, Sp), jnp.int32) * 5
+    st = start_rollout(params, cfg, prompts, Sp + 5)
+    st = _force_eos_next(st)
+    st = rollout_chunk(params, cfg, st, jax.random.PRNGKey(1), n_steps=2,
+                       temperature=0.0)
+    assert np.asarray(st.done).all()
+    # resume twice more; done sequences must not write tokens or logprobs
+    for k in (2, 3):
+        st = rollout_chunk(params, cfg, st, jax.random.PRNGKey(k),
+                           n_steps=1, temperature=1.0)
+    toks = np.asarray(st.tokens)
+    blp = np.asarray(st.behavior_logp)
+    mask = np.asarray(action_mask(st))
+    assert (toks[:, Sp] == EOS).all()        # the action that ended it
+    assert (mask[:, Sp] == 1.0).all()
+    assert (toks[:, Sp + 1:] == PAD).all()
+    assert (blp[:, Sp + 1:] == 0.0).all()
+    assert (mask[:, Sp + 1:] == 0.0).all()
+
+
+def test_mask_and_logp_agree_at_boundaries_chunked_vs_full(cfg, params):
+    """Chunked resumes and the one-shot rollout agree on where actions end:
+    same tokens, same mask, same behavior logprobs (greedy decoding)."""
+    prompts = jnp.ones((3, 6), jnp.int32) * 7
+    key = jax.random.PRNGKey(3)
+    full = generate(params, cfg, prompts, max_new=6, key=key,
+                    temperature=0.0, chunk=0)
+    chunked = generate(params, cfg, prompts, max_new=6, key=key,
+                       temperature=0.0, chunk=2)
+    assert np.array_equal(np.asarray(full.tokens),
+                          np.asarray(chunked.tokens))
+    assert np.array_equal(np.asarray(action_mask(full)),
+                          np.asarray(action_mask(chunked)))
+    assert np.allclose(np.asarray(full.behavior_logp),
+                       np.asarray(chunked.behavior_logp), atol=1e-5)
+    # mask==1 exactly where a behavior logprob was recorded
+    Sp = full.prompt_len
+    blp = np.asarray(full.behavior_logp)[:, Sp:]
+    mask = np.asarray(action_mask(full))[:, Sp:]
+    assert ((blp != 0.0) == (mask > 0.0)).all()
