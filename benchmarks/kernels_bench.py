@@ -1,0 +1,133 @@
+"""Naive-vs-streamed kernel comparison -> BENCH_kernels.json.
+
+Measures the three dispatched hot paths (vocab-dim logprob fwd+grad, fused
+sampling, causal attention) as naive dense jnp vs the streamed dispatch
+path, recording wall-clock and the *estimated* peak intermediate bytes (the
+full-vocab / full-score fp32 arrays each implementation must hold beyond its
+inputs and outputs).  Shapes are deliberately modest for the 1-core CPU dev
+box; the bytes column is shape-analytic, so it extrapolates to the paper's
+V=256k setting where the wall-clock column cannot.
+"""
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import emit, timeit
+from repro.kernels import dispatch
+
+F32 = 4
+
+
+def _lp_naive(logits, tokens):
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    return jnp.take_along_axis(logp, tokens[:, None], axis=-1)[:, 0]
+
+
+def bench_logprob(T=256, V=32768, bv=2048):
+    logits = jax.random.normal(jax.random.PRNGKey(0), (T, V))
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (T,), 0, V)
+    naive = jax.jit(_lp_naive)
+    stream = jax.jit(lambda l, t: dispatch.token_logprob(l, t, block_v=bv))
+    t_n = timeit(naive, logits, tokens, repeats=3)
+    t_s = timeit(stream, logits, tokens, repeats=3)
+    g_naive = jax.jit(jax.grad(lambda l: _lp_naive(l, tokens).sum()))
+    g_stream = jax.jit(jax.grad(
+        lambda l: dispatch.token_logprob(l, tokens, block_v=bv).sum()))
+    gt_n = timeit(g_naive, logits, repeats=3)
+    gt_s = timeit(g_stream, logits, repeats=3)
+    return {
+        "shape": {"T": T, "V": V, "block_v": bv},
+        "fwd": {
+            "naive": {"us": t_n * 1e6,
+                      "est_peak_intermediate_bytes": T * V * F32},
+            "streamed": {"us": t_s * 1e6,
+                         "est_peak_intermediate_bytes": T * (bv + 3) * F32},
+        },
+        "grad": {
+            # beyond the unavoidable [T, V] dlogits output
+            "naive": {"us": gt_n * 1e6,
+                      "est_peak_intermediate_bytes": 2 * T * V * F32},
+            "streamed": {"us": gt_s * 1e6,
+                         "est_peak_intermediate_bytes": T * (bv + 2) * F32},
+        },
+    }
+
+
+def bench_sample(B=64, V=32768, bv=2048, temperature=1.0):
+    logits = jax.random.normal(jax.random.PRNGKey(0), (B, V))
+    key = jax.random.PRNGKey(2)
+
+    def naive(l, k):
+        scaled = l.astype(jnp.float32) / temperature
+        tok = jax.random.categorical(k, scaled, axis=-1)
+        logp = jax.nn.log_softmax(scaled, axis=-1)
+        return tok, jnp.take_along_axis(logp, tok[:, None], axis=-1)[:, 0]
+
+    t_n = timeit(jax.jit(naive), logits, key, repeats=3)
+    t_s = timeit(jax.jit(lambda l, k: dispatch.sample(l, k, temperature,
+                                                      block_v=bv)),
+                 logits, key, repeats=3)
+    return {
+        "shape": {"B": B, "V": V, "block_v": bv},
+        # naive: gumbel noise + log-softmax, both [B, V] fp32
+        "naive": {"us": t_n * 1e6,
+                  "est_peak_intermediate_bytes": 2 * B * V * F32},
+        "streamed": {"us": t_s * 1e6,
+                     "est_peak_intermediate_bytes": B * (bv + 5) * F32},
+    }
+
+
+def bench_attention(B=1, S=512, H=8, K=2, hd=64, bq=128):
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (B, S, H, hd)) * 0.5
+    k = jax.random.normal(ks[1], (B, S, K, hd)) * 0.5
+    v = jax.random.normal(ks[2], (B, S, K, hd))
+
+    def naive(q, k, v):
+        g = H // K
+        qf = q.reshape(B, S, K, g, hd)
+        s = jnp.einsum("bqkgh,bskh->bkgqs", qf, k) * hd ** -0.5
+        s = jnp.where(jnp.tril(jnp.ones((S, S), bool))[None, None, None],
+                      s, -1e30)
+        p = jax.nn.softmax(s, axis=-1)
+        return jnp.einsum("bkgqs,bskh->bqkgh", p, v).reshape(B, S, H, hd)
+
+    from repro.models.attention import chunked_attention
+    t_n = timeit(jax.jit(naive), q, k, v, repeats=3)
+    t_s = timeit(jax.jit(lambda q, k, v: chunked_attention(
+        q, k, v, causal=True, block_q=bq)), q, k, v, repeats=3)
+    return {
+        "shape": {"B": B, "S": S, "H": H, "K": K, "hd": hd, "block_q": bq},
+        "naive": {"us": t_n * 1e6,
+                  "est_peak_intermediate_bytes": B * H * S * S * F32},
+        "streamed": {"us": t_s * 1e6,
+                     "est_peak_intermediate_bytes": B * H * bq * S * F32},
+    }
+
+
+def main() -> None:
+    report = {
+        "kernel_mode": dispatch.kernel_mode(),
+        "backend": jax.default_backend(),
+        "logprob": bench_logprob(),
+        "sample": bench_sample(),
+        "attention": bench_attention(),
+    }
+    out = os.environ.get("REPRO_BENCH_JSON", "BENCH_kernels.json")
+    with open(out, "w") as f:
+        json.dump(report, f, indent=2)
+    for name in ("logprob", "sample", "attention"):
+        r = report[name]
+        flat = r["fwd"] if "fwd" in r else r
+        speed = flat["naive"]["us"] / max(flat["streamed"]["us"], 1e-9)
+        mem = flat["naive"]["est_peak_intermediate_bytes"] / \
+            flat["streamed"]["est_peak_intermediate_bytes"]
+        emit(f"kernels_{name}_streamed", flat["streamed"]["us"],
+             f"speedup_x={speed:.2f};mem_x={mem:.1f}")
+    emit("kernels_json", 0.0, out)
+
+
+if __name__ == "__main__":
+    main()

@@ -13,6 +13,7 @@ MODULES = [
     "benchmarks.fig8_offpolicy",     # Fig 8: off-policy corrections
     "benchmarks.thm75_check",        # Theorem 7.5 numeric check
     "benchmarks.roofline",           # deliverable (g) report
+    "benchmarks.kernels_bench",      # naive vs streamed -> BENCH_kernels.json
 ]
 
 

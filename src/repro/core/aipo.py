@@ -25,13 +25,18 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import dispatch
+
 
 def token_logprobs(logits, tokens):
-    """log pi(token) per position.  logits: [B, T, V]; tokens: [B, T]."""
-    logz = jax.nn.logsumexp(logits.astype(jnp.float32), axis=-1)
-    tok_logit = jnp.take_along_axis(
-        logits.astype(jnp.float32), tokens[..., None], axis=-1)[..., 0]
-    return tok_logit - logz
+    """log pi(token) per position.  logits: [B, T, V]; tokens: [B, T].
+
+    Routed through the kernel-dispatch layer: vocab tiles are streamed with
+    online (max, sumexp) stats in both the forward and the custom-VJP
+    backward, so the trainer loss never materializes a [B, T, V] fp32
+    log-softmax (V reaches 256k in the paper's setting, Sec. 6).
+    """
+    return dispatch.token_logprob(logits, tokens)
 
 
 def importance_weights(logp, behavior_logp, *, rho: float,

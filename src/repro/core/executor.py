@@ -17,6 +17,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import ddma
+from repro.core.aipo import token_logprobs
 from repro.rl import data as rl_data
 from repro.rl import rewards as rl_rewards
 from repro.rl.rollout import action_mask, generate
@@ -202,11 +203,14 @@ class RefPolicyExecutor(Executor):
     def step(self):
         assert self.params is not None
         comp = self.get_input("completions")
-        from repro.core.aipo import token_logprobs
         from repro.models import forward_train
 
         if self._jitted is None:
             def ref_logp(params, tokens):
+                # forward-only scoring: token_logprobs streams vocab tiles
+                # through the kernel-dispatch layer, so this path never
+                # builds the [B, T, V] fp32 log-softmax the naive gather
+                # needs (the ref model shares the trainer's 256k vocab)
                 logits, _ = forward_train(params, self.cfg,
                                           {"tokens": tokens})
                 lp = token_logprobs(logits[:, :-1], tokens[:, 1:])

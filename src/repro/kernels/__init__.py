@@ -1,3 +1,8 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+# Pallas compute spine: streaming kernels for the paper's hot spots
+# (vocab-dim logprobs, fused sampling, flash attention, int8 matmul).
+# ``dispatch`` is the single routing layer every production path uses;
+# ``ops`` pins the Pallas body for parity tests; ``ref`` holds dense
+# oracles.
+from repro.kernels import dispatch
+
+__all__ = ["dispatch"]

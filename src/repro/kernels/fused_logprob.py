@@ -8,6 +8,13 @@ picks out the target logit on the fly -- one pass, no [T, V] intermediate.
 
 Grid: (T/bt, V/bv); vocab is the *innermost* (sequential) axis so the
 scratch accumulators carry across vocab tiles for a fixed token tile.
+
+``fused_logprob(..., return_stats=True)`` also emits the per-row online
+``(m, s)`` stats (``logZ = m + log s``), which are exactly the residuals the
+custom-VJP backward needs: ``d logits = (onehot - softmax) * g`` is
+computable tile-by-tile from ``exp(logits - logZ)`` without ever holding a
+full-vocab fp32 softmax (``fused_logprob_bwd``).  Routing between the
+compiled / interpreted / jnp-streamed variants lives in ``dispatch.py``.
 """
 from __future__ import annotations
 
@@ -18,11 +25,11 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-NEG_INF = -1e30
+from repro.kernels.online import NEG_INF, online_softmax_step
 
 
-def _kernel(tokens_ref, logits_ref, out_ref, m_ref, s_ref, t_ref, *,
-            bv: int, n_vblocks: int):
+def _kernel(tokens_ref, logits_ref, out_ref, m_out, s_out, m_ref, s_ref,
+            t_ref, *, bt: int, bv: int, n_vblocks: int, v_true: int):
     j = pl.program_id(1)
 
     @pl.when(j == 0)
@@ -32,11 +39,13 @@ def _kernel(tokens_ref, logits_ref, out_ref, m_ref, s_ref, t_ref, *,
         t_ref[...] = jnp.full_like(t_ref[...], NEG_INF)
 
     block = logits_ref[...].astype(jnp.float32)          # [bt, bv]
-    m_prev = m_ref[...]
-    m_new = jnp.maximum(m_prev, jnp.max(block, axis=-1))
-    s_ref[...] = s_ref[...] * jnp.exp(m_prev - m_new) + \
-        jnp.sum(jnp.exp(block - m_new[:, None]), axis=-1)
+    # valid masks padded vocab columns out of both the max and the sumexp
+    # (they must not contribute even when every real logit == NEG_INF)
+    cols = j * bv + jax.lax.broadcasted_iota(jnp.int32, (bt, bv), 1)
+    m_new, s_new, _ = online_softmax_step(m_ref[...], s_ref[...], block,
+                                          cols < v_true)
     m_ref[...] = m_new
+    s_ref[...] = s_new
 
     tok = tokens_ref[...]                                # [bt] global ids
     local = tok - j * bv
@@ -47,12 +56,21 @@ def _kernel(tokens_ref, logits_ref, out_ref, m_ref, s_ref, t_ref, *,
 
     @pl.when(j == n_vblocks - 1)
     def _fin():
-        out_ref[...] = t_ref[...] - (m_ref[...] + jnp.log(s_ref[...]))
+        # subtract m before log s: with extreme logits (|m| ~ 1e30) the sum
+        # m + log s absorbs log s entirely in fp32
+        out_ref[...] = (t_ref[...] - m_ref[...]) - jnp.log(s_ref[...])
+        m_out[...] = m_ref[...]
+        s_out[...] = s_ref[...]
 
 
 def fused_logprob(logits, tokens, *, block_t: int = 256,
-                  block_v: int = 2048, interpret: bool = True):
-    """logits: [T, V]; tokens: [T] int32 -> logprobs [T] fp32."""
+                  block_v: int = 2048, interpret: bool = True,
+                  return_stats: bool = False):
+    """logits: [T, V]; tokens: [T] int32 -> logprobs [T] fp32.
+
+    With ``return_stats=True`` returns ``(logprobs, m, s)`` where
+    ``logZ = m + log s`` (the VJP residuals).
+    """
     T, V = logits.shape
     bt = min(block_t, T)
     bv = min(block_v, V)
@@ -64,15 +82,20 @@ def fused_logprob(logits, tokens, *, block_t: int = 256,
         tokens = jnp.pad(tokens, (0, pad_t))
     Tp, Vp = logits.shape
     n_vblocks = Vp // bv
-    out = pl.pallas_call(
-        functools.partial(_kernel, bv=bv, n_vblocks=n_vblocks),
+    out, m, s = pl.pallas_call(
+        functools.partial(_kernel, bt=bt, bv=bv, n_vblocks=n_vblocks,
+                          v_true=V),
         grid=(Tp // bt, n_vblocks),
         in_specs=[
             pl.BlockSpec((bt,), lambda i, j: (i,)),
             pl.BlockSpec((bt, bv), lambda i, j: (i, j)),
         ],
-        out_specs=pl.BlockSpec((bt,), lambda i, j: (i,)),
-        out_shape=jax.ShapeDtypeStruct((Tp,), jnp.float32),
+        out_specs=[pl.BlockSpec((bt,), lambda i, j: (i,)),
+                   pl.BlockSpec((bt,), lambda i, j: (i,)),
+                   pl.BlockSpec((bt,), lambda i, j: (i,))],
+        out_shape=[jax.ShapeDtypeStruct((Tp,), jnp.float32),
+                   jax.ShapeDtypeStruct((Tp,), jnp.float32),
+                   jax.ShapeDtypeStruct((Tp,), jnp.float32)],
         scratch_shapes=[
             pltpu.VMEM((bt,), jnp.float32),
             pltpu.VMEM((bt,), jnp.float32),
@@ -80,4 +103,59 @@ def fused_logprob(logits, tokens, *, block_t: int = 256,
         ],
         interpret=interpret,
     )(tokens, logits)
+    if return_stats:
+        return out[:T], m[:T], s[:T]
     return out[:T]
+
+
+def _bwd_kernel(tokens_ref, logits_ref, m_ref, ls_ref, g_ref, dl_ref, *,
+                bt: int, bv: int):
+    """d logits = g * (onehot(token) - softmax) for one [bt, bv] tile.
+
+    softmax = exp((logits - m) - log s), subtracted sequentially so extreme
+    m does not absorb log s (same fp32 caveat as the forward)."""
+    j = pl.program_id(1)
+    block = logits_ref[...].astype(jnp.float32)
+    p = jnp.exp((block - m_ref[...][:, None]) - ls_ref[...][:, None])
+    local = tokens_ref[...] - j * bv
+    cols = jax.lax.broadcasted_iota(jnp.int32, (bt, bv), 1)
+    onehot = (cols == local[:, None]).astype(jnp.float32)
+    dl_ref[...] = ((onehot - p) * g_ref[...][:, None]).astype(dl_ref.dtype)
+
+
+def fused_logprob_bwd(logits, tokens, m, log_s, g, *, block_t: int = 256,
+                      block_v: int = 2048, interpret: bool = True):
+    """Streaming VJP: logits [T, V], tokens/m/log_s/g [T] -> dlogits [T, V].
+
+    Each grid cell is independent (no carry): the tile's softmax is
+    reconstructed from the saved online stats, so peak live memory is one
+    [bt, bv] tile plus the (unavoidable) dlogits output.
+    """
+    T, V = logits.shape
+    bt = min(block_t, T)
+    bv = min(block_v, V)
+    pad_t = (-T) % bt
+    pad_v = (-V) % bv
+    if pad_t or pad_v:
+        logits = jnp.pad(logits, ((0, pad_t), (0, pad_v)),
+                         constant_values=NEG_INF)
+        tokens = jnp.pad(tokens, (0, pad_t))
+        m = jnp.pad(m, (0, pad_t))
+        log_s = jnp.pad(log_s, (0, pad_t))
+        g = jnp.pad(g, (0, pad_t))
+    Tp, Vp = logits.shape
+    out = pl.pallas_call(
+        functools.partial(_bwd_kernel, bt=bt, bv=bv),
+        grid=(Tp // bt, Vp // bv),
+        in_specs=[
+            pl.BlockSpec((bt,), lambda i, j: (i,)),
+            pl.BlockSpec((bt, bv), lambda i, j: (i, j)),
+            pl.BlockSpec((bt,), lambda i, j: (i,)),
+            pl.BlockSpec((bt,), lambda i, j: (i,)),
+            pl.BlockSpec((bt,), lambda i, j: (i,)),
+        ],
+        out_specs=pl.BlockSpec((bt, bv), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((Tp, Vp), logits.dtype),
+        interpret=interpret,
+    )(tokens, logits, m, log_s, g)
+    return out[:T, :V]

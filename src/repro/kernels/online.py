@@ -1,0 +1,27 @@
+"""The shared online-softmax tile recurrence.
+
+Every streamed backend -- the Pallas kernel bodies (`fused_logprob`,
+`fused_sample`) and the lax.scan fallbacks in `dispatch` -- must apply this
+recurrence *operation-for-operation identically*: the cross-backend
+guarantee (identical sampled tokens, logprobs matching to fp32 rounding) is
+only as strong as their bit-level agreement, so the update lives here once.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def online_softmax_step(m, s, tile, valid):
+    """One [rows, bv] tile of the online (max, sumexp) recurrence.
+
+    ``valid`` masks padded / clamp-overlap columns out of both the max and
+    the sum -- a where() on the exp, not a NEG_INF sentinel, so the tile
+    stays correct even when every real logit equals NEG_INF.  Returns
+    ``(m_new, s_new, masked_tile)``.
+    """
+    masked = jnp.where(valid, tile, NEG_INF)
+    m_new = jnp.maximum(m, jnp.max(masked, axis=-1))
+    p = jnp.where(valid, jnp.exp(masked - m_new[:, None]), 0.0)
+    return m_new, s * jnp.exp(m - m_new) + jnp.sum(p, axis=-1), masked

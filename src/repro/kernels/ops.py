@@ -1,36 +1,48 @@
-"""Jit'd public wrappers for the Pallas kernels.
+"""Jit'd always-Pallas wrappers for the kernels (tests and benchmarks).
 
-On this CPU dev box kernels execute with interpret=True (the Pallas
-interpreter runs the kernel body with jax ops -- bit-accurate semantics,
-no Mosaic); on TPU set ``REPRO_PALLAS_COMPILE=1`` to lower through Mosaic.
-The pure-jnp fallbacks in ``ref.py`` remain the lowering path used by the
-512-device dry-run (interpret-mode tracing unrolls the grid, which would
-bloat HLO at vocab=256k scale).
+These force the Pallas body to execute -- interpreted on CPU, Mosaic-lowered
+when ``REPRO_PALLAS_COMPILE=1`` -- so kernel-parity tests exercise the
+kernel semantics no matter what the routing policy would pick.  Production
+call sites (trainer loss, reference scoring, decode sampling, attention) go
+through ``repro.kernels.dispatch`` instead, which owns the full
+env/dtype/shape routing between compiled, interpreted and streamed-jnp
+backends.
 """
 from __future__ import annotations
 
 import functools
-import os
 
 import jax
 
+from repro.kernels.dispatch import kernel_mode
 from repro.kernels.flash_attention import flash_attention as _flash
 from repro.kernels.fused_logprob import fused_logprob as _logprob
+from repro.kernels.fused_sample import fused_sample as _sample
 from repro.kernels.int8_matmul import int8_matmul as _int8mm
 
-INTERPRET = os.environ.get("REPRO_PALLAS_COMPILE", "0") != "1"
+
+def _interpret() -> bool:
+    return kernel_mode() != "compile"
 
 
 @functools.partial(jax.jit, static_argnames=("block_t", "block_v"))
 def fused_logprob(logits, tokens, block_t: int = 256, block_v: int = 2048):
     return _logprob(logits, tokens, block_t=block_t, block_v=block_v,
-                    interpret=INTERPRET)
+                    interpret=_interpret())
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("temperature", "block_b", "block_v"))
+def fused_sample(logits, key, temperature: float = 1.0,
+                 block_b: int = 256, block_v: int = 2048):
+    return _sample(logits, key, temperature=temperature, block_b=block_b,
+                   block_v=block_v, interpret=_interpret())
 
 
 @functools.partial(jax.jit, static_argnames=("block_q", "block_k"))
 def flash_attention(q, k, v, block_q: int = 256, block_k: int = 256):
     return _flash(q, k, v, block_q=block_q, block_k=block_k,
-                  interpret=INTERPRET)
+                  interpret=_interpret())
 
 
 @functools.partial(jax.jit,
@@ -38,4 +50,4 @@ def flash_attention(q, k, v, block_q: int = 256, block_k: int = 256):
 def int8_matmul(x, w_q, scale, block_m: int = 256, block_n: int = 256,
                 block_k: int = 512):
     return _int8mm(x, w_q, scale, block_m=block_m, block_n=block_n,
-                   block_k=block_k, interpret=INTERPRET)
+                   block_k=block_k, interpret=_interpret())

@@ -30,3 +30,22 @@ def int8_matmul_ref(x, w_q, scale, out_dtype=jnp.float32):
     """Dequantize-then-matmul oracle."""
     w = w_q.astype(jnp.float32) * scale[None, :]
     return (x.astype(jnp.float32) @ w).astype(out_dtype)
+
+
+def fused_sample_ref(logits, key, temperature: float = 1.0):
+    """Dense Gumbel-max oracle for ``fused_sample``: materializes the full
+    [B, V] noise + log-softmax (exactly what the kernel avoids).  Shares the
+    counter-based noise helper, so tokens must match bit-for-bit."""
+    from repro.kernels.fused_sample import gumbel_noise, key_data_u32
+    B, V = logits.shape
+    scaled = logits.astype(jnp.float32) * \
+        (1.0 / temperature if temperature > 0.0 else 1.0)
+    z = scaled
+    if temperature > 0.0:
+        kd = key_data_u32(key)
+        rows = jnp.broadcast_to(jnp.arange(B)[:, None], (B, V))
+        cols = jnp.broadcast_to(jnp.arange(V)[None, :], (B, V))
+        z = scaled + gumbel_noise(rows, cols, kd[0], kd[1])
+    tok = jnp.argmax(z, axis=-1).astype(jnp.int32)
+    logp = jax.nn.log_softmax(scaled, axis=-1)
+    return tok, jnp.take_along_axis(logp, tok[:, None], axis=1)[:, 0]

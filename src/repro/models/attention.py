@@ -6,9 +6,12 @@ pattern): live score buffers are [B, K, g, block_q, Sk] instead of
 attention slices K/V to a fixed [window + block_q] span per query block, so
 its compute is O(S * W), genuinely sub-quadratic.
 
-The Pallas flash kernel in ``repro.kernels`` implements the same math with
-explicit VMEM tiling for the TPU target; this module is the lowering-safe
-reference path used by the dry-run.
+Full-sequence call sites (GQA/MLA train + prefill) go through
+``repro.kernels.dispatch.attention``: dense-causal self-attention segments
+can route to the Pallas flash kernel (explicit VMEM tiling for the TPU
+target), while windowed / cross / MLA-asymmetric segments and the
+512-device dry-run fall back to ``chunked_attention`` below, the
+lowering-safe reference path.
 """
 from __future__ import annotations
 
@@ -17,6 +20,7 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import dispatch
 from repro.models.common import apply_rope, apply_mrope, dense_init, split_keys
 from repro.models.sharding import constrain_attn
 
@@ -140,8 +144,8 @@ def gqa_forward(p, x, cfg, *, window: int = 0, positions=None,
         q = apply_mrope(q, mrope_pos, cfg.rope_theta)
         k = apply_mrope(k, mrope_pos, cfg.rope_theta)
     q, k, v = constrain_attn(q, k, v)
-    y = chunked_attention(q, k, v, causal=causal, window=window,
-                          q_offset=q_offset, unroll=cfg.unroll_scans)
+    y = dispatch.attention(q, k, v, causal=causal, window=window,
+                           q_offset=q_offset, unroll=cfg.unroll_scans)
     return y.reshape(B, S, -1) @ p["wo"], (k, v)
 
 
@@ -150,7 +154,7 @@ def gqa_cross_forward(p, x, k, v, cfg):
     B, S, _ = x.shape
     H, hd = cfg.n_heads, cfg.hd
     q = (x @ p["wq"]).reshape(B, S, H, hd)
-    y = chunked_attention(q, k, v, causal=False, unroll=cfg.unroll_scans)
+    y = dispatch.attention(q, k, v, causal=False, unroll=cfg.unroll_scans)
     return y.reshape(B, S, -1) @ p["wo"]
 
 
@@ -244,9 +248,10 @@ def mla_forward(p, x, cfg, *, q_offset: int = 0):
         [k_nope, jnp.broadcast_to(k_rope[:, :, None, :],
                                   (B, S, H, m.qk_rope_dim))], axis=-1)
     q, k, v = constrain_attn(q, k, v)
-    # v has v_head_dim != qk dim; chunked_attention is dim-agnostic per arg
-    y = chunked_attention(q, k, v, causal=True, q_offset=q_offset,
-                          unroll=cfg.unroll_scans)
+    # v_head_dim != qk dim, so dispatch falls back to the dim-agnostic
+    # chunked path (the flash kernel assumes symmetric head dims)
+    y = dispatch.attention(q, k, v, causal=True, q_offset=q_offset,
+                           unroll=cfg.unroll_scans)
     return y.reshape(B, S, -1) @ p["wo"], (c_kv, k_rope)
 
 

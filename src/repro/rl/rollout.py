@@ -18,6 +18,7 @@ from typing import Any, NamedTuple
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import dispatch
 from repro.models import prefill, decode_step
 from repro.rl.data import EOS, PAD
 
@@ -29,6 +30,18 @@ class RolloutState(NamedTuple):
     last_logits: jax.Array     # [B, V] logits predicting the next token
     done: jax.Array            # [B] bool
     prompt_len: int
+
+
+# prompt_len is static shape metadata, not data: registering it as pytree
+# aux keeps it a Python int through jit, so the first rollout_chunk call
+# (fresh state, int leaf) and resumed calls (traced int32 leaf) no longer
+# produce distinct jit signatures -- one compilation per (cfg, shape).
+jax.tree_util.register_pytree_node(
+    RolloutState,
+    lambda s: ((s.tokens, s.behavior_logp, s.cache, s.last_logits, s.done),
+               s.prompt_len),
+    lambda aux, ch: RolloutState(*ch, prompt_len=aux),
+)
 
 
 def start_rollout(params, cfg, prompts, total_len: int,
@@ -53,15 +66,10 @@ def start_rollout(params, cfg, prompts, total_len: int,
 
 
 def _sample(logits, key, temperature: float):
-    if temperature == 0.0:
-        tok = jnp.argmax(logits, axis=-1)
-        logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
-    else:
-        scaled = logits.astype(jnp.float32) / temperature
-        tok = jax.random.categorical(key, scaled, axis=-1)
-        logp = jax.nn.log_softmax(scaled, axis=-1)
-    lp = jnp.take_along_axis(logp, tok[:, None], axis=-1)[:, 0]
-    return tok.astype(jnp.int32), lp
+    """Fused Gumbel-max draw + behavior logprob via the kernel-dispatch
+    layer: one streamed pass over vocab tiles instead of a [B, V] fp32
+    log-softmax per decode step."""
+    return dispatch.sample(logits, key, temperature)
 
 
 @functools.partial(jax.jit,
@@ -76,7 +84,9 @@ def rollout_chunk(params, cfg, state: RolloutState, key, *,
         cache, logits, done = carry
         tok, lp = _sample(logits, k, temperature)
         tok = jnp.where(done, PAD, tok)
-        lp = jnp.where(done, 0.0, lp)
+        # PAD emissions (done rows, or a live row drawing id 0) are never
+        # action positions: keep mu consistent with the action mask
+        lp = jnp.where(tok == PAD, 0.0, lp)
         new_done = done | (tok == EOS)
         new_logits, cache = decode_step(params, cfg, cache, tok[:, None])
         return (cache, new_logits, new_done), (tok, lp)
@@ -96,18 +106,38 @@ def rollout_chunk(params, cfg, state: RolloutState, key, *,
 def generate(params, cfg, prompts, *, max_new: int, key,
              temperature: float = 1.0, chunk: int = 0,
              dtype=jnp.float32, extra=None) -> RolloutState:
-    """Full rollout = start + ceil(max_new/chunk) resumable chunks."""
+    """Full rollout = start + ceil(max_new/chunk) resumable chunks.
+
+    Every chunk runs with the same static ``n_steps == chunk`` so
+    ``rollout_chunk`` compiles exactly once per (cfg, shape) -- a ragged
+    final chunk used to change ``n_steps`` and retrace every call.  The
+    token/logprob buffers are padded up to the bucketed length and sliced
+    back to ``prompt + max_new`` afterwards; at most ``chunk - 1`` overshoot
+    decode steps land in the sliced-off tail, and ``done`` is recomputed
+    from the kept region so a row that only EOS'd in the overshoot still
+    reads as unfinished.  The returned state is terminal either way (its
+    buffers are full); resume via ``rollout_chunk`` on a state sized for
+    the full budget instead.
+    """
     B, Sp = prompts.shape
-    state = start_rollout(params, cfg, prompts, Sp + max_new, dtype=dtype,
-                          extra=extra)
+    if max_new <= 0:
+        return start_rollout(params, cfg, prompts, Sp, dtype=dtype,
+                             extra=extra)
     chunk = chunk or max_new
-    steps = 0
-    while steps < max_new:
-        n = min(chunk, max_new - steps)
+    n_chunks = -(-max_new // chunk)
+    padded = n_chunks * chunk
+    state = start_rollout(params, cfg, prompts, Sp + padded, dtype=dtype,
+                          extra=extra)
+    for _ in range(n_chunks):
         key, sub = jax.random.split(key)
-        state = rollout_chunk(params, cfg, state, sub, n_steps=n,
+        state = rollout_chunk(params, cfg, state, sub, n_steps=chunk,
                               temperature=temperature)
-        steps += n
+    if padded != max_new:
+        tokens = state.tokens[:, :Sp + max_new]
+        state = state._replace(
+            tokens=tokens,
+            behavior_logp=state.behavior_logp[:, :Sp + max_new],
+            done=(tokens[:, Sp:] == EOS).any(axis=-1))
     return state
 
 

@@ -9,6 +9,13 @@ batch layout (everything right-aligned to the full token sequence):
 
 Action position t is predicted by logits at t-1, so the loss aligns
 ``logits[:, :-1]`` with ``tokens[:, 1:]``.
+
+Both the AIPO loss and the MTP auxiliary use ``aipo.token_logprobs``, which
+routes through ``repro.kernels.dispatch``: log pi(y_t) is computed by
+streaming vocab tiles (custom VJP included), so the grad of this step never
+materializes a [B, T, V] fp32 log-softmax on top of the logits themselves.
+Backend choice (Pallas compiled / interpreted / streamed jnp) follows the
+``REPRO_KERNEL_MODE`` / ``REPRO_PALLAS_COMPILE`` env knobs.
 """
 from __future__ import annotations
 

@@ -1,0 +1,71 @@
+"""`generate()` must not retrace per call when max_new % chunk != 0: the
+final partial chunk is padded to a full `chunk` steps (bucketed n_steps) and
+the overshoot is sliced off, so `rollout_chunk` compiles exactly once per
+(cfg, shape) signature."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.llama_paper import smoke
+from repro.rl import rollout
+from repro.rl.rollout import action_mask, generate
+
+
+@pytest.fixture(scope="module")
+def cfg():
+    return smoke().replace(n_layers=1, d_model=32, n_heads=2, n_kv_heads=2,
+                           head_dim=16, d_ff=64, vocab=32)
+
+
+@pytest.fixture(scope="module")
+def params(cfg):
+    from repro.models import init_params
+    return init_params(cfg, jax.random.PRNGKey(0), jnp.float32)
+
+
+def test_ragged_generate_compiles_rollout_chunk_once(cfg, params):
+    """max_new=10, chunk=4 -> 3 chunks of 4 steps: ONE jit entry, not two
+    (pre-fix the trailing 2-step chunk retraced with a new static n_steps)."""
+    prompts = jnp.full((5, 7), 5, jnp.int32)     # unique shapes for this test
+    before = rollout.rollout_chunk._cache_size()
+    st = generate(params, cfg, prompts, max_new=10,
+                  key=jax.random.PRNGKey(1), temperature=1.0, chunk=4)
+    added = rollout.rollout_chunk._cache_size() - before
+    assert added == 1, f"ragged generate added {added} jit cache entries"
+    # repeat calls (fresh key) add nothing
+    generate(params, cfg, prompts, max_new=10, key=jax.random.PRNGKey(2),
+             temperature=1.0, chunk=4)
+    assert rollout.rollout_chunk._cache_size() - before == 1
+
+
+def test_ragged_generate_output_contract(cfg, params):
+    """Bucketing must not leak into the output: shapes are prompt+max_new,
+    logp/mask stay consistent, and the generated region matches an identical
+    greedy rollout with a divisible chunk."""
+    prompts = jnp.full((3, 6), 5, jnp.int32)
+    key = jax.random.PRNGKey(3)
+    ragged = generate(params, cfg, prompts, max_new=7, key=key,
+                      temperature=0.0, chunk=3)       # 3 chunks, pad 2
+    exact = generate(params, cfg, prompts, max_new=7, key=key,
+                     temperature=0.0, chunk=7)        # single chunk
+    assert ragged.tokens.shape == (3, 13)
+    assert ragged.behavior_logp.shape == (3, 13)
+    assert jnp.array_equal(ragged.tokens, exact.tokens)
+    assert jnp.allclose(ragged.behavior_logp, exact.behavior_logp, atol=1e-4)
+    # done must describe the kept region only: EOS hits in the sliced-off
+    # overshoot may not mark a row finished
+    assert jnp.array_equal(ragged.done, exact.done)
+    mask = np.asarray(action_mask(ragged))
+    lp = np.asarray(ragged.behavior_logp)
+    assert ((lp != 0) == (mask > 0)).all()
+
+
+def test_generate_zero_max_new(cfg, params):
+    """max_new=0 returns the prompt-only prefilled state (no decode)."""
+    prompts = jnp.full((2, 5), 5, jnp.int32)
+    st = generate(params, cfg, prompts, max_new=0, key=jax.random.PRNGKey(0),
+                  temperature=1.0, chunk=4)
+    assert st.tokens.shape == (2, 5)
+    assert jnp.array_equal(st.tokens, prompts)
+    assert not st.done.any()
