@@ -14,6 +14,7 @@ MODULES = [
     "benchmarks.thm75_check",        # Theorem 7.5 numeric check
     "benchmarks.roofline",           # deliverable (g) report
     "benchmarks.kernels_bench",      # naive vs streamed -> BENCH_kernels.json
+    "benchmarks.genpool_bench",      # generator pool -> BENCH_genpool.json
 ]
 
 

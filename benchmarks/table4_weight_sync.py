@@ -28,14 +28,19 @@ def params_of_size(n_floats: int, key=0):
 def main():
     mesh = make_dev_mesh()
     sh = NamedSharding(mesh, P())
+    n_dev = len(jax.devices())
+    note = ("note=single-device: both paths are host memcpy; the TPU "
+            "difference is structural (no host staging)" if n_dev == 1 else
+            f"note={n_dev}-device mesh (emulated on CPU under "
+            "xla_force_host_platform_device_count): DDMA replicates "
+            "device-to-device, PS stages through one host copy")
     for mb in (1, 8, 64):
         params = params_of_size(mb * 1_000_000 // 4)
         t_ddma, _ = ddma.timed_sync(ddma.ddma_weight_sync, params, sh)
         t_ps, _ = ddma.timed_sync(ddma.ps_weight_sync, params, sh)
         emit(f"table4/ddma_{mb}MB", t_ddma * 1e6,
              f"ps={t_ps*1e6:.0f}us;ratio={t_ps/max(t_ddma,1e-9):.1f}x;"
-             "note=single-device: both paths are host memcpy; the TPU "
-             "difference is structural (no host staging)")
+             + note)
     # paper-scale projection: 405B bf16 = 810GB spread over 512 generator
     # chips => ~1.6 GB/chip; at 50 GB/s/link with direct ICI transfers and
     # full parallelism the wire time is ~32 ms; the paper measures 2.31 s

@@ -1,49 +1,119 @@
-"""Serving example: batched generation with partial rollouts (paper
-Sec. 4.2).  A queue of requests with very different target lengths is
-served in fixed token-budget chunks: finished sequences retire each round
-while unfinished ones RESUME from their cached state -- no straggler ever
-blocks the batch.
+"""Partial-rollout scheduling, two ways (paper Sec. 4.2).
+
+Part 1 -- serving: a ``RolloutScheduler`` drives one generator over a
+work heap of resumable requests with very different finish times.  A
+most-progress-first priority harvests short requests the moment they
+complete while the straggler keeps its KV cache + cursor parked in the
+``PartialRolloutCache`` between chunks -- no request ever waits for the
+batch.
+
+Part 2 -- training: the full generator pool end-to-end.  Three generator
+workers (one with injected straggler latency) fan into the async
+controller's sample queue under an ``AdaptiveStalenessController``; the
+run prints the observed staleness histogram, the bound trajectory and
+the overlap stats.
 
     PYTHONPATH=src python examples/serve_partial_rollouts.py
 """
+import time
+
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.llama_paper import smoke
+from repro.core import (AdaptiveStalenessController, CommType,
+                        CommunicationChannel, ExecutorController,
+                        GeneratorExecutor, PartialRolloutCache, PoolConfig,
+                        RewardExecutor, TrainerExecutor,
+                        build_generator_pool)
 from repro.models import init_params
 from repro.rl.data import ArithmeticTasks, decode_ids
-from repro.rl.rollout import rollout_chunk, start_rollout
+from repro.rl.scheduler import RolloutScheduler
 
 CHUNK = 4          # token budget per scheduling round (partial rollout)
 MAX_NEW = 16
+N_GENERATORS = 3
+STEPS = 12
+
+
+def tiny_cfg():
+    return smoke().replace(n_layers=1, d_model=64, n_heads=4, n_kv_heads=2,
+                           head_dim=16, d_ff=128, vocab=64)
+
+
+def serve():
+    """Chunk-scheduled serving: harvest order follows completion, not
+    admission."""
+    print("== Part 1: chunk-scheduled serving " + "=" * 30)
+    cfg = tiny_cfg()
+    gen = GeneratorExecutor(cfg, ArithmeticTasks(prompt_len=10,
+                                                 max_operand=99, ops="+*"),
+                            n_prompts=3, n_per_prompt=1, max_new=MAX_NEW,
+                            chunk=CHUNK, seed=0)
+    gen.set_weights(init_params(cfg, jax.random.PRNGKey(0), jnp.float32),
+                    version=0)
+    sched = RolloutScheduler(
+        gen, PartialRolloutCache(),
+        # serving has no training-order constraint: shortest-remaining-
+        # budget first, so the straggler batch never blocks a harvest
+        priority=lambda job, state: job.n_chunks - job.chunks_done)
+    for r, target in enumerate((4, MAX_NEW, 8)):  # mixed request lengths
+        gen.max_new = target
+        job, state = gen.begin_batch(r)
+        sched.admit(job, state)
+        print(f"admitted request batch {r} "
+              f"({job.n_chunks} chunks of {CHUNK} tokens budgeted)")
+    for job, out in sched.drain():           # short requests retire first
+        toks = np.asarray(out["tokens"])
+        texts = [decode_ids(t[out['prompt_len']:]) for t in toks]
+        print(f"harvested batch {job.batch_index} after "
+              f"{job.chunks_done}/{job.n_chunks} chunks -> {texts}")
+
+
+def train_with_pool():
+    """Generator pool + adaptive staleness, end-to-end."""
+    print("\n== Part 2: generator pool end-to-end " + "=" * 28)
+    cfg = tiny_cfg()
+    rew = RewardExecutor(n_per_prompt=2)
+    trn = TrainerExecutor(cfg, lr=5e-3, seed=0)
+    gens, chans = build_generator_pool(
+        cfg, trn,
+        lambda g: ArithmeticTasks(prompt_len=10, max_operand=9, ops="+",
+                                  seed=g),
+        n_generators=N_GENERATORS, n_prompts=4, n_per_prompt=2, max_new=8,
+        chunk=CHUNK)
+    chans += [CommunicationChannel("completions", gens[0], rew,
+                                   CommType.GATHER),
+              CommunicationChannel("completions_with_reward", rew, trn,
+                                   CommType.SCATTER)]
+    adaptive = AdaptiveStalenessController(bound=1, min_bound=1,
+                                           max_bound=3, window=3)
+    ctl = ExecutorController(
+        gens + [rew, trn], chans, max_steps=STEPS, mode="async",
+        staleness=1, timeout=300.0, adaptive=adaptive,
+        # worker 0's batches straggle: every chunk sleeps
+        pool=PoolConfig(chunk_delay=lambda b, c:
+                        0.15 if b % N_GENERATORS == 0 else 0.0))
+    t0 = time.monotonic()
+    hist = ctl.run()
+    wall = time.monotonic() - t0
+    print(f"{STEPS} steps in {wall:.1f}s  "
+          f"(trainer idle {ctl.stats['train_idle_s']:.1f}s, "
+          f"generators idle {ctl.stats['gen_idle_s']:.1f}s, "
+          f"overlap {ctl.stats['overlap_s']:.1f}s)")
+    print("batch -> producing worker:",
+          {h["step"]: h["generator"] for h in hist})
+    print("observed staleness histogram:",
+          dict(sorted(ctl.staleness_hist.items())))
+    print("adaptive bound trajectory:", adaptive.bound_history)
+    print("mean reward per step:",
+          [round(h["mean_reward"], 3) for h in hist])
 
 
 def main():
-    cfg = smoke().replace(n_layers=2, d_model=128, n_heads=4, n_kv_heads=2,
-                          head_dim=32, d_ff=256, vocab=64)
-    params = init_params(cfg, jax.random.PRNGKey(0), jnp.float32)
-    tasks = ArithmeticTasks(prompt_len=10, max_operand=99, ops="+*")
-    batch = tasks.sample(6, 1)
-    prompts = jnp.asarray(batch.prompts)
-
-    state = start_rollout(params, cfg, prompts,
-                          prompts.shape[1] + MAX_NEW, dtype=jnp.float32)
-    key = jax.random.PRNGKey(1)
-    rounds = 0
-    while rounds * CHUNK < MAX_NEW and not bool(jnp.all(state.done)):
-        key, sub = jax.random.split(key)
-        state = rollout_chunk(params, cfg, state, sub, n_steps=CHUNK,
-                              temperature=1.0)
-        rounds += 1
-        done = np.asarray(state.done)
-        print(f"round {rounds}: {done.sum()}/{len(done)} sequences done "
-              f"(budget spent {rounds * CHUNK} tokens)")
-
-    toks = np.asarray(state.tokens)
-    for i, (prompt, tok) in enumerate(zip(batch.prompt_texts, toks)):
-        out = decode_ids(tok[prompts.shape[1]:])
-        print(f"req{i}: {prompt!r} -> {out!r}")
+    serve()
+    train_with_pool()
 
 
 if __name__ == "__main__":

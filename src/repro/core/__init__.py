@@ -8,7 +8,14 @@ _EXPORTS = {
     "WeightsCommunicationChannel": "repro.core.channels",
     "ExecutorController": "repro.core.controller",
     "AsyncExecutorController": "repro.core.controller",
+    "AdaptiveStalenessController": "repro.core.genpool",
+    "FixedStaleness": "repro.core.genpool",
+    "GeneratorPool": "repro.core.genpool",
+    "build_generator_pool": "repro.core.genpool",
+    "PoolConfig": "repro.core.genpool",
     "StalenessBuffer": "repro.core.offpolicy",
+    "PartialRolloutCache": "repro.core.offpolicy",
+    "Closed": "repro.core.offpolicy",
     "Executor": "repro.core.executor",
     "GeneratorExecutor": "repro.core.executor",
     "RewardExecutor": "repro.core.executor",

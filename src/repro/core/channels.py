@@ -18,8 +18,10 @@ controller threads: ``send`` applies the transfer on the producer thread
 and enqueues, ``recv`` dequeues and delivers to the inbound executor's
 (thread-safe) port.  Weight payloads travel as ``(version, params)`` so
 the generator can pin the exact weight version the bounded-staleness
-schedule prescribes.  The sequential controller paths keep using the
-direct ``communicate``/``deliver`` calls.
+schedule prescribes.  ``close()`` wakes any thread blocked in ``send`` or
+``recv`` with ``Closed`` -- the controller's deterministic shutdown path.
+The sequential controller paths keep using the direct
+``communicate``/``deliver`` calls.
 """
 from __future__ import annotations
 
@@ -34,6 +36,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.core import ddma
 from repro.core.executor import Executor
+from repro.core.offpolicy import StalenessBuffer
 
 
 class CommType(enum.Enum):
@@ -67,7 +70,10 @@ class CommunicationChannel:
     capacity: int = 16          # queue depth bound for the threaded path
 
     def __post_init__(self):
-        self._q: queue.Queue = queue.Queue(maxsize=max(0, self.capacity))
+        # a delay=0 StalenessBuffer is the closeable bounded FIFO: blocked
+        # send/recv wake on notify (close() raises Closed into them), no
+        # polling -- the same structure the controller's sample queue uses
+        self._q = StalenessBuffer(delay=0, max_size=max(0, self.capacity))
 
     # ------------------------------------------------------ transfer core --
 
@@ -112,31 +118,58 @@ class CommunicationChannel:
 
     def send(self, data, version: Optional[int] = None,
              timeout: Optional[float] = None):
-        """Producer side: transfer, then enqueue (blocks when full)."""
+        """Producer side: transfer, then enqueue (blocks when full).
+
+        Raises ``Closed`` the moment the channel is closed, so a producer
+        blocked on a full queue unwinds deterministically at shutdown."""
+        self.send_transferred(self._transfer(data), version=version,
+                              timeout=timeout)
+
+    def send_transferred(self, data, version: Optional[int] = None,
+                         timeout: Optional[float] = None):
+        """Enqueue an already-transferred payload.  The controller uses
+        this to run one DDMA reshard and fan the result out to every
+        same-target channel instead of paying the transfer per channel."""
         try:
-            self._q.put((version, self._transfer(data)), timeout=timeout)
-        except queue.Full:
+            self._q.push(0 if version is None else version,
+                         (version, data), timeout=timeout)
+        except TimeoutError:
             raise TimeoutError(
                 f"channel '{self.name}' full for {timeout}s "
                 f"(capacity={self.capacity})")
 
     def recv(self, timeout: Optional[float] = None):
         """Consumer side: dequeue and deliver.  Returns (version, data);
-        raises queue.Empty on timeout."""
-        version, data = self._q.get(timeout=timeout)
+        raises queue.Empty on timeout, ``Closed`` once the channel is
+        closed and drained."""
+        try:
+            _, (version, data) = self._q.pop_wait(timeout=timeout)
+        except TimeoutError:
+            raise queue.Empty
         self._hand_over(data, version)
         return version, data
 
+    def close(self):
+        """Wake all threads blocked in send/recv with ``Closed``.
+
+        Queued payloads stay recv-able (a consumer may drain them while
+        unwinding); new sends are refused.  Idempotent."""
+        self._q.close()
+
+    @property
+    def closed(self) -> bool:
+        return self._q.closed
+
     def pending(self) -> int:
-        return self._q.qsize()
+        return len(self._q)
 
     def resize(self, capacity: int):
         """Change the queue bound; only legal before any payload is
-        queued (a fresh Queue would silently drop them)."""
-        assert self._q.empty(), \
+        queued (a fresh buffer would silently drop them)."""
+        assert len(self._q) == 0, \
             f"cannot resize channel '{self.name}' with queued payloads"
         self.capacity = max(0, capacity)
-        self._q = queue.Queue(maxsize=self.capacity)
+        self._q = StalenessBuffer(delay=0, max_size=self.capacity)
 
 
 def WeightsCommunicationChannel(name, outbound, inbound,

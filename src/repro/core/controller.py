@@ -6,26 +6,39 @@ Two execution modes, matching Fig. 2:
     each stage blocking the next; weights synced every tick (the
     DeepSpeed-Chat-like baseline, up to the distributed placement).
   * mode="async" -- asynchronous off-policy RL with *real* threads
-    (``AsyncExecutorController``): the generator executor runs in its own
-    thread producing ``(weight_version, batch)`` pairs into a
-    ``StalenessBuffer``; the reward/reference/trainer stages consume from
-    it on a second thread; the trainer publishes versioned weights back to
-    the generator through the queue-backed ``WeightsCommunicationChannel``.
+    (``AsyncExecutorController``): a *pool* of generator executors (one
+    worker thread each, batch indices interleaved round-robin) produces
+    ``(weight_version, batch)`` pairs into a ``StalenessBuffer``; the
+    reward/reference/trainer stages consume from it -- in batch order,
+    reordering the fan-in -- on a consumer thread; the trainer publishes
+    versioned weights back to every worker through per-generator
+    queue-backed ``WeightsCommunicationChannel``s.  Inside each worker a
+    chunk scheduler (``repro.rl.scheduler``) resumes partial rollouts so
+    a straggler batch never delays the admission of its successors; see
+    ``repro.core.genpool``.
 
 Bounded-staleness schedule (AIPO's assumption, paper Sec. 6): batch ``n``
 is generated with weights version ``max(0, n - staleness)`` and trained
 when the trainer has performed exactly ``n`` updates, so the trained
 sample is never more than ``staleness`` versions behind.  Versions are
 pinned *by count*, not by wall-clock arrival, which makes the threaded
-controller bit-for-bit identical to the sequential reference
-(``run_sequential``) at every staleness -- threading changes wall-clock
-overlap, never numerics.
+controller -- at pool size 1 and a fixed bound -- bit-for-bit identical
+to the sequential reference (``run_sequential``) at every staleness:
+threading changes wall-clock overlap, never numerics.  Passing an
+``AdaptiveStalenessController`` as ``adaptive`` lets the bound move
+online between its ``min_bound`` and ``max_bound``.
 
 ``history`` records, per trained step: the trainer metrics plus
 ``weight_version`` (of the batch's generator weights), ``trainer_version``,
-``sample_staleness``, ``queue_depth`` and per-executor idle time;
+``sample_staleness``, ``staleness_bound`` (in effect at admission), the
+producing ``generator``, ``queue_depth`` and per-executor idle time;
 ``stats`` aggregates wall-clock busy/idle/overlap per run and
 ``staleness_hist`` counts observed staleness values.
+
+Shutdown is deterministic: worker/consumer threads are non-daemon, and on
+completion, error or timeout the controller closes the sample queue and
+channels so any blocked peer unwinds with ``Closed`` and joins -- worker
+exceptions re-raise on the calling thread.
 """
 from __future__ import annotations
 
@@ -37,7 +50,21 @@ from typing import Dict, List, Optional
 
 from repro.core.channels import CommType, CommunicationChannel
 from repro.core.executor import Executor
-from repro.core.offpolicy import StalenessBuffer
+from repro.core.genpool import AdaptiveStalenessController, FixedStaleness, \
+    GeneratorPool, PoolConfig
+from repro.core.offpolicy import Closed, StalenessBuffer
+
+
+def _merge_intervals(ivs):
+    """Union of possibly-overlapping intervals (pool workers run in
+    parallel) as a sorted disjoint list."""
+    merged = []
+    for s, e in sorted(ivs):
+        if merged and s <= merged[-1][1]:
+            merged[-1] = (merged[-1][0], max(merged[-1][1], e))
+        else:
+            merged.append((s, e))
+    return merged
 
 
 def _interval_overlap(a, b) -> float:
@@ -70,8 +97,14 @@ class ExecutorController:
                  communication_channels: List[CommunicationChannel],
                  max_steps: int, mode: str = "async", staleness: int = 1,
                  checkpoint_every: int = 0, checkpoint_path: str = "",
-                 timeout: float = 600.0):
+                 timeout: float = 600.0,
+                 pool: Optional[PoolConfig] = None,
+                 adaptive: Optional[AdaptiveStalenessController] = None):
         assert mode in ("sync", "async")
+        names = [e.name for e in executor_group]
+        assert len(names) == len(set(names)), \
+            f"executor names must be unique, got {names} (pool " \
+            f"generators need explicit name= arguments)"
         self.executors = {e.name: e for e in executor_group}
         self.channels = communication_channels
         self.max_steps = max_steps
@@ -81,12 +114,14 @@ class ExecutorController:
         self.checkpoint_every = checkpoint_every
         self.checkpoint_path = checkpoint_path
         self.timeout = timeout
+        self.pool_config = pool
+        self.adaptive = adaptive
         self.history: List[Dict] = []
         self.stats: Dict[str, float] = {}
         self.staleness_hist: collections.Counter = collections.Counter()
-        self.generator = next((e for e in self.executors.values()
-                               if getattr(e, "role", "") == "generator"),
-                              None)
+        self.generators = [e for e in self.executors.values()
+                           if getattr(e, "role", "") == "generator"]
+        self.generator = self.generators[0] if self.generators else None
         self.trainer = next((e for e in self.executors.values()
                              if getattr(e, "role", "") == "trainer"), None)
         self._initialized = False
@@ -134,19 +169,24 @@ class ExecutorController:
 
     def _record(self, step: int, step_time: float, *, weight_version: int,
                 queue_depth: int = 0, gen_idle_s: float = 0.0,
-                train_idle_s: float = 0.0):
+                train_idle_s: float = 0.0, bound: Optional[int] = None,
+                generator: Optional[str] = None):
         metrics = dict(self.trainer.metrics_history[-1]) if self.trainer \
             and self.trainer.metrics_history else {}
+        bound = self.staleness if bound is None else bound
         sample_staleness = step - weight_version
-        if sample_staleness > self.staleness:
+        if sample_staleness > bound:
             raise RuntimeError(
                 f"staleness bound violated at step {step}: batch weights "
-                f"are version {weight_version}, bound {self.staleness}")
+                f"are version {weight_version}, bound {bound}")
         self.staleness_hist[sample_staleness] += 1
+        if generator is None and self.generator is not None:
+            generator = self.generator.name
         metrics.update(step=step, step_time=step_time,
                        weight_version=weight_version,
                        trainer_version=step + 1,
                        sample_staleness=sample_staleness,
+                       staleness_bound=bound, generator=generator,
                        queue_depth=queue_depth, gen_idle_s=gen_idle_s,
                        train_idle_s=train_idle_s)
         self.history.append(metrics)
@@ -175,6 +215,9 @@ class ExecutorController:
 
     def run(self) -> List[Dict]:
         """Run ``max_steps`` (more) ticks; repeated calls continue."""
+        assert len(self.generators) <= 1, \
+            "the sequential loop drives a single generator; a pool of " \
+            f"{len(self.generators)} needs mode='async' threads"
         self.init()
         gen = self.generator
         wall0 = time.monotonic()
@@ -202,42 +245,69 @@ class ExecutorController:
 class AsyncExecutorController(ExecutorController):
     """Threaded asynchronous controller (the paper's Fig. 2b, for real).
 
-    Producer thread: waits until the pinned weight version for batch ``n``
-    arrives on the weight channel, generates, pushes ``(version, batch)``
-    into the sample ``StalenessBuffer``.  Consumer thread: pops, drives the
-    reward/reference/trainer pipeline, publishes weights version ``n+1``.
-    Exceptions on either thread stop the other and re-raise in the caller;
-    ``timeout`` bounds every blocking wait (deadline propagation).
+    Producer side: a ``GeneratorPool`` of worker threads (one per
+    generator executor; batch indices interleaved round-robin), each
+    waiting for the pinned weight version, chunk-scheduling its rollouts
+    and pushing ``(version, batch)`` into the sample ``StalenessBuffer``
+    the moment a batch completes.  Consumer thread: pops (reordering the
+    multi-producer fan-in back into batch order), drives the
+    reward/reference/trainer pipeline, publishes weights version ``n+1``
+    to every worker's channel, and feeds queue-depth observations to the
+    staleness-bounds policy.  Exceptions on any thread stop and unwind the
+    others (via ``close()``) and re-raise in the caller; ``timeout``
+    bounds every blocking wait (deadline propagation).
     """
 
     def __init__(self, *args, **kwargs):
         super().__init__(*args, **kwargs)
         assert self.mode == "async", "AsyncExecutorController is mode=async"
-        assert self.generator is not None and self.trainer is not None, \
+        assert self.generators and self.trainer is not None, \
             "async controller needs a generator and a trainer executor"
-        self._sample_queue = StalenessBuffer(delay=0,
-                                             max_size=self.staleness + 2)
+        self._bounds = self.adaptive if self.adaptive is not None \
+            else FixedStaleness(self.staleness)
+        max_bound = self._bounds.max_bound
+        n_gens = len(self.generators)
+        self._sample_queue = StalenessBuffer(
+            delay=0, max_size=max_bound + n_gens + 2)
         self._live_weight_channels = [
             ch for ch in self._weight_channels()
-            if ch.inbound is self.generator]
-        assert self._live_weight_channels, \
-            "async controller needs a weight channel into the generator"
+            if ch.inbound in self.generators]
+        self._channels_by_gen = {
+            gen.name: [ch for ch in self._live_weight_channels
+                       if ch.inbound is gen]
+            for gen in self.generators}
+        for gen in self.generators:
+            assert self._channels_by_gen[gen.name], \
+                f"async controller needs a weight channel into " \
+                f"generator '{gen.name}'"
         # weight channels that feed other executors (e.g. trainer -> frozen
         # reference) are serviced by the consumer thread on the same
         # delayed schedule as the sequential path
         self._aux_weight_channels = [
             ch for ch in self._weight_channels()
-            if ch.inbound is not self.generator]
+            if ch.inbound not in self.generators]
         for ch in self._live_weight_channels:
-            # the schedule keeps <= staleness+1 unconsumed versions in
-            # flight; make sure the channel queue can hold them
-            ch.resize(max(ch.capacity, self.staleness + 4))
+            # every channel carries every version; the schedule keeps the
+            # in-flight window below 2*bound + pool size, so make sure the
+            # channel queue can hold it
+            ch.resize(max(ch.capacity, 2 * max_bound + n_gens + 4))
 
     # The sequential reference: identical schedule, identical numerics, one
     # thread, no overlap.  Used to verify the threaded path bit-for-bit.
     def run_sequential(self) -> List[Dict]:
+        assert len(self.generators) == 1, \
+            "run_sequential is the single-generator reference; a pool " \
+            "has no sequential counterpart"
         self._claim_entry_point("sequential")
         return ExecutorController.run(self)
+
+    def shutdown(self):
+        """Close the sample queue and all channels: every blocked thread
+        unwinds with ``Closed``.  Idempotent; the controller cannot run
+        again afterwards."""
+        self._sample_queue.close()
+        for ch in self.channels:
+            ch.close()
 
     def _claim_entry_point(self, which: str):
         """Threaded and sequential runs keep weight state in different
@@ -265,55 +335,30 @@ class AsyncExecutorController(ExecutorController):
                         f"deadline ({self.timeout}s) waiting for {what}")
         return None
 
-    def _generator_loop(self, first: int, last: int, stop: threading.Event,
-                        intervals: list):
-        gen = self.generator
-        for n in range(first, last):
-            need = max(0, n - self.staleness)
-            idle = 0.0
-            while gen.weight_version < need and not stop.is_set():
-                t0 = time.monotonic()
-                # every live channel carries every version, in order:
-                # drain one (version, params) pair from each per pass
-                for ch in self._live_weight_channels:
-                    if self._await(
-                            lambda t, c=ch: c.recv(timeout=t),
-                            stop, f"weights v{need} for batch {n}") is None:
-                        return
-                idle += time.monotonic() - t0
-            if stop.is_set():
-                return
-            t0 = time.monotonic()
-            gen.set_step(n)
-            gen.step()
-            snapshot = {ch.name: gen.get_output(ch.name)
-                        for ch in self._data_channels()
-                        if ch.outbound is gen}
-            t1 = time.monotonic()
-            intervals.append((t0, t1))
-            item = {"batch_index": n, "snapshot": snapshot,
-                    "gen_busy_s": t1 - t0, "gen_idle_s": idle}
-            if self._await(
-                    lambda t: self._sample_queue.push(
-                        gen.weight_version, item, timeout=t),
-                    stop, f"room in sample queue for batch {n}") is None:
-                return                       # stopped by a peer failure
+    def _pool_data_channels(self):
+        """Data channels whose payloads travel by snapshot: any channel
+        declared outbound from a pool generator serves the whole pool."""
+        return [ch for ch in self._data_channels()
+                if ch.outbound in self.generators]
 
     def _consumer_loop(self, first: int, last: int, stop: threading.Event,
                        intervals: list):
-        gen = self.generator
-        others = [e for e in self.executors.values() if e is not gen]
+        others = [e for e in self.executors.values()
+                  if e not in self.generators]
+        pool_chs = self._pool_data_channels()
+        pending: Dict[int, tuple] = {}       # out-of-order fan-in reorder
         for n in range(first, last):
             t0 = time.monotonic()
-            got = self._await(lambda t: self._sample_queue.pop_wait(t),
-                              stop, f"batch {n} from generator")
-            if got is None:
-                return
+            while n not in pending:
+                got = self._await(lambda t: self._sample_queue.pop_wait(t),
+                                  stop, f"batch {n} from generator pool")
+                if got is None:
+                    return
+                version, item = got
+                pending[item["batch_index"]] = (version, item)
             wait = time.monotonic() - t0
-            version, item = got
-            assert item["batch_index"] == n, \
-                f"sample queue out of order: got batch {item['batch_index']}"
-            depth = len(self._sample_queue)
+            version, item = pending.pop(n)
+            depth = len(self._sample_queue) + len(pending)
             t0 = time.perf_counter()
             busy0 = time.monotonic()
             for e in others:
@@ -323,18 +368,30 @@ class AsyncExecutorController(ExecutorController):
                 # delivery the sequential path gives them
                 self._sync_weights(n, channels=self._aux_weight_channels)
             for ch in self._data_channels():
-                if ch.outbound is gen:
+                if ch in pool_chs:
                     ch.deliver(item["snapshot"][ch.name])
                 else:
                     ch.communicate()
                 ch.inbound.step()
+            # one transfer per distinct (payload, comm type, target mesh),
+            # fanned out to every worker channel -- pool size must not
+            # multiply the DDMA reshard cost on the consumer's hot path
+            transferred: Dict[tuple, object] = {}
             for ch in self._live_weight_channels:
-                ch.send(ch.outbound.get_output(ch.name), version=n + 1,
-                        timeout=self.timeout)
+                key = (ch.name, id(ch.outbound), ch.comm_type,
+                       id(ch.inbound.mesh))
+                if key not in transferred:
+                    transferred[key] = ch._transfer(
+                        ch.outbound.get_output(ch.name))
+                ch.send_transferred(transferred[key], version=n + 1,
+                                    timeout=self.timeout)
             self._tick = n + 1
+            self._bounds.observe(queue_depth=depth, train_idle_s=wait,
+                                 sample_staleness=n - version)
             intervals.append((busy0, time.monotonic()))
             self._record(n, time.perf_counter() - t0, weight_version=version,
-                         queue_depth=depth,
+                         queue_depth=depth, bound=item.get("bound"),
+                         generator=item.get("generator"),
                          gen_idle_s=item["gen_idle_s"], train_idle_s=wait)
             self._maybe_checkpoint(n)
 
@@ -346,35 +403,39 @@ class AsyncExecutorController(ExecutorController):
         first, last = self._tick, self._tick + self.max_steps
         stop = threading.Event()
         errors: List[BaseException] = []
-        gen_iv: list = []
         train_iv: list = []
+        pool = GeneratorPool(
+            self.generators, self._channels_by_gen,
+            self._pool_data_channels(), self._sample_queue, self._bounds,
+            config=self.pool_config, timeout=self.timeout,
+            await_fn=self._await)
 
         def guarded(fn, *args):
             def body():
                 try:
                     fn(*args)
+                except Closed:
+                    pass                     # shutdown signal, not an error
                 except BaseException as e:   # propagate to the caller
                     errors.append(e)
                     stop.set()
+                    self.shutdown()          # wake peers blocked in comms
             return body
 
         wall0 = time.monotonic()
-        threads = [
-            threading.Thread(
-                target=guarded(self._generator_loop, first, last, stop,
-                               gen_iv),
-                name="generator", daemon=True),
-            threading.Thread(
-                target=guarded(self._consumer_loop, first, last, stop,
-                               train_iv),
-                name="consumer", daemon=True),
-        ]
+        threads = [threading.Thread(target=guarded(loop), name=name)
+                   for name, loop in pool.loops(first, last, stop)]
+        threads.append(threading.Thread(
+            target=guarded(self._consumer_loop, first, last, stop,
+                           train_iv),
+            name="consumer"))
         for t in threads:
             t.start()
         for t in threads:
             t.join(timeout=self.timeout)
         if any(t.is_alive() for t in threads):
             stop.set()
+            self.shutdown()                  # unblock and join stragglers
             for t in threads:
                 t.join(timeout=5.0)
             if not errors:
@@ -382,12 +443,17 @@ class AsyncExecutorController(ExecutorController):
                     f"controller deadline ({self.timeout}s) exceeded; "
                     "executor threads did not finish")
         if errors:
+            self.shutdown()
             raise errors[0]
         wall = time.monotonic() - wall0
         rows = self.history[first:last]
+        gen_iv = _merge_intervals(pool.intervals)
         self.stats = {
             "wall_s": wall,
+            # wall-clock with >= 1 worker busy (pre-pool semantics; never
+            # exceeds wall_s) vs aggregate worker-seconds across the pool
             "gen_busy_s": sum(e - s for s, e in gen_iv),
+            "gen_worker_s": sum(e - s for s, e in pool.intervals),
             "train_busy_s": sum(e - s for s, e in train_iv),
             "overlap_s": _interval_overlap(gen_iv, train_iv),
             "gen_idle_s": sum(r["gen_idle_s"] for r in rows),

@@ -20,7 +20,9 @@ from repro.core import ddma
 from repro.core.aipo import token_logprobs
 from repro.rl import data as rl_data
 from repro.rl import rewards as rl_rewards
-from repro.rl.rollout import action_mask, generate
+from repro.rl.rollout import action_mask, finalize_rollout, rollout_chunk, \
+    start_rollout
+from repro.rl.scheduler import RolloutJob
 from repro.train.trainstep import TrainState, init_train_state, \
     make_train_step
 
@@ -73,7 +75,14 @@ class Executor:
 
 
 class GeneratorExecutor(Executor):
-    """Policy inference: rollouts + behavior logprobs (+ optional int8)."""
+    """Policy inference: rollouts + behavior logprobs (+ optional int8).
+
+    Chunk-stepping: ``begin_batch`` / ``advance_chunk`` / ``emit_batch``
+    are the resumable-rollout hooks the ``RolloutScheduler`` drives (one
+    ``rollout_chunk`` per ``advance_chunk``, state parked between calls);
+    the monolithic ``step()`` is the same three hooks run back to back, so
+    both paths emit bit-for-bit identical batches.
+    """
 
     role = "generator"
 
@@ -104,23 +113,65 @@ class GeneratorExecutor(Executor):
         if version is not None:
             self.weight_version = version
 
-    def step(self):
+    # ------------------------------------------------ chunk-stepping hooks --
+
+    def begin_batch(self, batch_index: Optional[int] = None):
+        """Sample a task batch, split its per-batch key and prefill.
+
+        Returns ``(job, state)`` ready for ``advance_chunk``.  Task
+        sampling and key splitting happen here, in admission order, so a
+        single worker admitting batches in index order consumes exactly
+        the RNG stream the monolithic ``step()`` loop consumes.  The job
+        snapshots ``params``/``weight_version``: the whole batch decodes
+        under the one weight version the staleness schedule pinned, even
+        if fresher weights arrive while it is parked.
+        """
         assert self.params is not None, "weights never synchronized"
+        if self.max_new <= 0:
+            raise ValueError(f"max_new must be >= 1, got {self.max_new}")
         batch = self.tasks.sample(self.n_prompts, self.n_per_prompt)
         prompts = jnp.asarray(batch.prompts)
         self.key, sub = jax.random.split(self.key)
-        state = generate(self.params, self.cfg, prompts,
-                         max_new=self.max_new, key=sub,
-                         temperature=self.temperature, chunk=self.chunk)
+        chunk = self.chunk or self.max_new
+        n_chunks = -(-self.max_new // chunk)
+        state = start_rollout(self.params, self.cfg, prompts,
+                              prompts.shape[1] + n_chunks * chunk)
+        job = RolloutJob(
+            batch_index=self.curr_step if batch_index is None
+            else batch_index,
+            params=self.params, weight_version=self.weight_version,
+            key=sub, meta={"answers": batch.answers},
+            max_new=self.max_new, chunk=chunk, n_chunks=n_chunks)
+        return job, state
+
+    def advance_chunk(self, job, state):
+        """One resumable ``rollout_chunk`` with the job's key discipline."""
+        job.key, sub = jax.random.split(job.key)
+        state = rollout_chunk(job.params, self.cfg, state, sub,
+                              n_steps=job.chunk,
+                              temperature=self.temperature)
+        job.chunks_done += 1
+        return state
+
+    def emit_batch(self, job, state):
+        """Finalize and publish the completed batch."""
+        state = finalize_rollout(state, job.max_new)
         out = {
             "tokens": state.tokens,
             "behavior_logp": state.behavior_logp,
             "mask": action_mask(state),
             "prompt_len": state.prompt_len,
-            "answers": batch.answers,
-            "weight_version": self.weight_version,
+            "answers": job.meta["answers"],
+            "weight_version": job.weight_version,
         }
         self.set_output("completions", out)
+        return out
+
+    def step(self):
+        job, state = self.begin_batch()
+        for _ in range(job.n_chunks):
+            state = self.advance_chunk(job, state)
+        out = self.emit_batch(job, state)
         self.curr_step += 1
         return out
 

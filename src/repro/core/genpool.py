@@ -1,0 +1,344 @@
+"""Generator pool: multi-generator fan-in with partial-rollout chunk
+scheduling and adaptive staleness.
+
+The paper's headline speed-up comes from fully overlapping generation with
+training (Fig. 2) and from partial rollouts that keep stragglers from
+stalling the sample queue (Sec. 4.2).  This module supplies both on top of
+the threaded controller:
+
+  * ``GeneratorPool`` -- N generator workers, one thread each, every
+    worker owning one ``GeneratorExecutor`` and its own versioned weight
+    channel(s), all fanning into the single bounded ``StalenessBuffer``
+    sample queue the reward/ref/trainer consumer drains.  Batch indices
+    are interleaved round-robin (worker ``i`` handles batches
+    ``i, i+N, i+2N, ...``), and each worker admits batch ``n`` only once
+    its executor holds weight version ``max(0, n - bound)`` -- so a pool
+    of size 1 at a fixed bound reproduces the sequential schedule
+    bit-for-bit, and a larger pool only adds wall-clock overlap.
+
+  * chunk scheduling -- inside each worker a ``RolloutScheduler`` drives
+    ``rollout_chunk`` over a work heap of resumable ``RolloutState``s
+    (parked in a thread-safe ``PartialRolloutCache``): finished batches
+    are harvested and pushed the moment they complete, incomplete ones
+    requeue with their KV cache and cursor, and up to ``max_inflight``
+    batches pipeline inside one worker so a straggler never delays the
+    admission of its successors.
+
+  * ``AdaptiveStalenessController`` -- reads the queue depths / idle
+    observations the consumer already records into ``history`` and
+    widens or narrows the per-pool staleness bound online: a starved
+    trainer (sample queue repeatedly empty) buys throughput with a wider
+    bound; a backlogged queue narrows it back toward on-policy.
+
+Process-level workers (separate hosts, serialized channel payloads) are
+the remaining step -- see ROADMAP.
+"""
+from __future__ import annotations
+
+import collections
+import queue
+import threading
+import time
+from dataclasses import dataclass
+from typing import Callable, Dict, List, Optional
+
+from repro.core.offpolicy import PartialRolloutCache, StalenessBuffer
+from repro.rl.scheduler import RolloutScheduler
+
+
+def build_generator_pool(cfg, trainer, make_tasks, *, n_generators=1,
+                         generator_cls=None, name="generator", seed=0,
+                         weight_port="policy_model", **gen_kwargs):
+    """The pool wiring convention, in one place: N generator executors
+    (worker ``g`` named ``{name}{g}`` and seeded ``seed + g``; a pool of
+    one keeps the bare ``name``) plus one versioned weight channel from
+    the trainer into each.  ``make_tasks(g)`` builds worker ``g``'s task
+    source.  Returns ``(generators, weight_channels)``; the caller
+    declares data channels outbound from ``generators[0]`` -- they serve
+    the whole pool via per-item snapshots.
+    """
+    from repro.core.channels import WeightsCommunicationChannel
+    from repro.core.executor import GeneratorExecutor
+    generator_cls = generator_cls or GeneratorExecutor
+    gens, chans = [], []
+    for g in range(n_generators):
+        gen = generator_cls(
+            cfg, make_tasks(g), seed=seed + g,
+            name=name if n_generators == 1 else f"{name}{g}", **gen_kwargs)
+        gens.append(gen)
+        chans.append(WeightsCommunicationChannel(weight_port, trainer, gen))
+    return gens, chans
+
+
+# ------------------------------------------------------- staleness bounds --
+
+class FixedStaleness:
+    """The static bound: ``bound()`` never moves, ``observe`` is a no-op."""
+
+    def __init__(self, bound: int):
+        self._bound = max(0, int(bound))
+        self.bound_history: List[int] = []
+
+    def bound(self) -> int:
+        return self._bound
+
+    @property
+    def max_bound(self) -> int:
+        return self._bound
+
+    def observe(self, **kwargs):
+        pass
+
+
+class AdaptiveStalenessController:
+    """Widens/narrows the staleness bound online from queue observations.
+
+    The consumer thread calls ``observe`` once per trained batch with the
+    sample-queue depth it saw and how long it waited (the same numbers it
+    records into ``history``).  Every ``window`` observations the bound is
+    re-decided:
+
+      * starved in >= ``widen_frac`` of the window (depth 0 *and* the
+        trainer measurably waited on generation) -> widen by one, up to
+        ``max_bound`` -- staler samples are the price of keeping the
+        trainer busy;
+      * starved in <= ``narrow_frac`` of the window (the queue had a
+        batch ready, or delivery was just-in-time) -> narrow by one, down
+        to ``min_bound`` -- the pool is keeping up, so tighten back
+        toward on-policy.
+
+    A just-in-time pipeline (queue drained to zero after every pop but
+    the trainer never waiting) therefore reads as *keeping up*, not
+    starved -- ``idle_eps_s`` is the wait below which the trainer counts
+    as fed.
+
+    Thread-safe: workers read ``bound()`` while the consumer observes.
+    ``bound_history`` logs the bound after every observation (what the
+    example prints and tests assert on).
+    """
+
+    def __init__(self, bound: int = 1, *, min_bound: int = 1,
+                 max_bound: int = 4, window: int = 4,
+                 widen_frac: float = 0.75, narrow_frac: float = 0.25,
+                 idle_eps_s: float = 1e-3):
+        assert 1 <= min_bound <= max_bound
+        assert 0.0 <= narrow_frac < widen_frac <= 1.0
+        self.min_bound, self.max_bound = int(min_bound), int(max_bound)
+        self.window = max(1, int(window))
+        self.widen_frac, self.narrow_frac = widen_frac, narrow_frac
+        self.idle_eps_s = idle_eps_s
+        self._bound = min(self.max_bound, max(self.min_bound, int(bound)))
+        self._starved: collections.deque = collections.deque(
+            maxlen=self.window)
+        self._lock = threading.Lock()
+        self.bound_history: List[int] = []
+
+    def bound(self) -> int:
+        with self._lock:
+            return self._bound
+
+    def observe(self, *, queue_depth: int, train_idle_s: float = 0.0,
+                sample_staleness: int = 0, **_):
+        """One consumer-side observation; re-decides on a full window."""
+        with self._lock:
+            self._starved.append(1 if queue_depth <= 0
+                                 and train_idle_s > self.idle_eps_s else 0)
+            if len(self._starved) == self.window:
+                starved_frac = sum(self._starved) / self.window
+                if starved_frac >= self.widen_frac and \
+                        self._bound < self.max_bound:
+                    self._bound += 1
+                    self._starved.clear()
+                elif starved_frac <= self.narrow_frac and \
+                        self._bound > self.min_bound:
+                    self._bound -= 1
+                    self._starved.clear()
+            self.bound_history.append(self._bound)
+
+
+# ---------------------------------------------------------------- the pool --
+
+@dataclass
+class PoolConfig:
+    """Per-pool knobs.
+
+    ``chunk_scheduling=False`` falls back to the monolithic
+    ``gen.step()`` per batch (the complete-batch baseline the benchmark
+    compares against).  ``max_inflight`` bounds how many batches pipeline
+    inside one worker's scheduler heap.  ``chunk_delay(batch_index,
+    chunk_idx) -> seconds`` injects straggler latency (benchmarks/tests).
+    Executors that override ``step()`` without providing the chunk-stepping
+    hooks should set ``chunk_scheduling=False``.
+    """
+    chunk_scheduling: bool = True
+    early_exit: bool = True
+    max_inflight: int = 2
+    chunk_delay: Optional[Callable[[int, int], float]] = None
+
+    def __post_init__(self):
+        # the delay hook lives in RolloutScheduler.step: a monolithic
+        # worker would silently ignore it and skew any baseline it is
+        # compared against (inject via the executor instead -- see
+        # benchmarks/genpool_bench.StragglerGenerator)
+        assert self.chunk_delay is None or self.chunk_scheduling, \
+            "chunk_delay requires chunk_scheduling=True"
+
+
+class GeneratorPool:
+    """N generator worker loops fanning into one sample queue.
+
+    Built by the async controller per ``run()``: the controller supplies
+    the generators, each generator's live weight channels, the pool-
+    outbound data channels (whose payloads travel by snapshot), the shared
+    sample queue, the staleness-bounds policy and its ``_await`` helper
+    (deadline + stop-event slicing).  ``loops(first, last, stop)`` hands
+    back one callable per worker for the controller to wrap in guarded
+    threads; each worker appends its busy intervals to ``intervals``
+    (thread-safe list appends) for the overlap stats.
+    """
+
+    def __init__(self, generators, channels_by_gen: Dict[str, list],
+                 data_channels, sample_queue: StalenessBuffer, bounds, *,
+                 config: Optional[PoolConfig] = None, timeout: float = 600.0,
+                 await_fn=None):
+        assert generators, "a generator pool needs at least one generator"
+        self.generators = list(generators)
+        self.channels_by_gen = channels_by_gen
+        self.data_channels = list(data_channels)
+        self.sample_queue = sample_queue
+        self.bounds = bounds
+        self.config = config or PoolConfig()
+        self.timeout = timeout
+        self._await = await_fn
+        self.intervals: list = []          # (t0, t1) busy spans, all workers
+
+    def loops(self, first: int, last: int, stop: threading.Event):
+        """One (name, callable) per worker; worker ``i`` covers batches
+        ``first+i, first+i+N, ...`` below ``last``."""
+        return [(gen.name,
+                 (lambda i=i, gen=gen: self._worker(i, gen, first, last,
+                                                    stop)))
+                for i, gen in enumerate(self.generators)]
+
+    # ------------------------------------------------------- weight drains --
+
+    def _drain_one(self, gen, stop, what: str) -> Optional[bool]:
+        """Blocking: receive one (version, params) pair from each of this
+        worker's weight channels.  None means stopped by a peer."""
+        for ch in self.channels_by_gen[gen.name]:
+            if self._await(lambda t, c=ch: c.recv(timeout=t),
+                           stop, what) is None:
+                return None
+        return True
+
+    def _poll_one(self, gen) -> bool:
+        """Non-blocking: drain one pair per channel if already queued."""
+        got = False
+        for ch in self.channels_by_gen[gen.name]:
+            try:
+                ch.recv(timeout=0)
+                got = True
+            except queue.Empty:
+                pass
+        return got
+
+    # -------------------------------------------------------- worker loops --
+
+    def _push(self, gen, stop, item) -> Optional[bool]:
+        version = item.pop("_version")
+        return self._await(
+            lambda t: self.sample_queue.push(version, item, timeout=t),
+            stop, f"room in sample queue for batch {item['batch_index']}")
+
+    def _snapshot(self, gen):
+        return {ch.name: gen.get_output(ch.name)
+                for ch in self.data_channels}
+
+    def _worker(self, idx: int, gen, first: int, last: int,
+                stop: threading.Event):
+        if self.config.chunk_scheduling and hasattr(gen, "begin_batch"):
+            self._worker_chunked(idx, gen, first, last, stop)
+        else:
+            self._worker_monolithic(idx, gen, first, last, stop)
+
+    def _worker_monolithic(self, idx, gen, first, last, stop):
+        """Complete-batch baseline: one blocking ``gen.step()`` per batch,
+        pushed only when the whole batch finishes (the pre-pool loop)."""
+        for n in range(first + idx, last, len(self.generators)):
+            idle = 0.0
+            bound = self.bounds.bound()
+            while gen.weight_version < max(0, n - bound) and \
+                    not stop.is_set():
+                t0 = time.monotonic()
+                if self._drain_one(gen, stop,
+                                   f"weights for batch {n}") is None:
+                    return
+                idle += time.monotonic() - t0
+                bound = self.bounds.bound()
+            if stop.is_set():
+                return
+            t0 = time.monotonic()
+            gen.set_step(n)
+            gen.step()
+            t1 = time.monotonic()
+            self.intervals.append((t0, t1))
+            item = {"batch_index": n, "snapshot": self._snapshot(gen),
+                    "generator": gen.name, "bound": bound,
+                    "gen_busy_s": t1 - t0, "gen_idle_s": idle,
+                    "_version": gen.weight_version}
+            if self._push(gen, stop, item) is None:
+                return
+
+    def _worker_chunked(self, idx, gen, first, last, stop):
+        """Chunk-scheduled worker: admit batches the moment their pinned
+        weight version lands, pipeline up to ``max_inflight`` of them
+        through the scheduler heap, push each the moment it completes."""
+        cfg = self.config
+        stride = len(self.generators)
+        sched = RolloutScheduler(
+            gen, PartialRolloutCache(), early_exit=cfg.early_exit,
+            chunk_delay=cfg.chunk_delay)
+        todo = list(range(first + idx, last, stride))
+        next_i = 0                          # next index into todo to admit
+        pushed = 0
+        pending_idle = 0.0                  # weight-wait time -> next admit
+        while pushed < len(todo) and not stop.is_set():
+            if next_i < len(todo) and sched.pending() < cfg.max_inflight:
+                n = todo[next_i]
+                bound = self.bounds.bound()
+                if gen.weight_version >= max(0, n - bound):
+                    t0 = time.monotonic()
+                    gen.set_step(n)
+                    job, state = gen.begin_batch(n)
+                    job.bound = bound
+                    job.meta["idle_s"] = pending_idle
+                    pending_idle = 0.0
+                    sched.admit(job, state)
+                    self.intervals.append((t0, time.monotonic()))
+                    next_i += 1
+                    continue
+                if sched.pending() == 0:
+                    # nothing in flight: block until the version lands
+                    t0 = time.monotonic()
+                    if self._drain_one(gen, stop,
+                                       f"weights for batch {n}") is None:
+                        return
+                    pending_idle += time.monotonic() - t0
+                    continue
+                # in-flight work available: poll weights, don't block
+                self._poll_one(gen)
+            t0 = time.monotonic()
+            done = sched.step()
+            self.intervals.append((t0, time.monotonic()))
+            if done is None:
+                continue
+            job, _ = done
+            item = {"batch_index": job.batch_index,
+                    "snapshot": self._snapshot(gen),
+                    "generator": gen.name, "bound": job.bound,
+                    "gen_busy_s": job.busy_s,
+                    "gen_idle_s": job.meta.get("idle_s", 0.0),
+                    "_version": job.weight_version}
+            if self._push(gen, stop, item) is None:
+                return
+            pushed += 1

@@ -2,27 +2,41 @@
 
 ``StalenessBuffer`` is the controller-side queue that realizes Fig. 2's
 1..n-step delay between the policy that *generated* a batch and the policy
-that *trains* on it.  It is thread-safe: the async controller's generator
-thread pushes ``(weight_version, batch)`` pairs into it while the
-reward/reference/trainer consumer thread blocks on ``pop_wait``.  With
-``delay=0`` it is a plain bounded FIFO (the sample queue); with
-``delay=s`` and one push+pop per tick it releases exactly the entry
-pushed ``s`` ticks earlier (the bounded-staleness weight schedule).
+that *trains* on it.  It is thread-safe: generator-pool worker threads push
+``(weight_version, batch)`` pairs into it while the reward/reference/
+trainer consumer thread blocks on ``pop_wait``.  With ``delay=0`` it is a
+plain bounded FIFO (the sample queue); with ``delay=s`` and one push+pop
+per tick it releases exactly the entry pushed ``s`` ticks earlier (the
+bounded-staleness weight schedule).
+
+``close()`` is the shutdown path: it wakes every blocked producer and
+consumer with ``Closed`` so controller threads join deterministically on
+completion or error -- no sentinel batches, no daemon-thread leaks.
+
 ``PartialRolloutCache`` stores incomplete ``RolloutState``s across
 iterations (paper Sec. 4.2, after Kimi k1.5) so long generations never
-block a training tick.
+block a training tick.  It is lock-guarded: the generator-pool chunk
+scheduler parks and resumes states from worker threads.
 """
 from __future__ import annotations
 
 import collections
 import threading
-from dataclasses import dataclass, field
 from typing import Any, Deque, Dict, List, Optional, Tuple
 
-import jax
 import numpy as np
 
 from repro.rl.rollout import RolloutState
+
+
+class Closed(Exception):
+    """Raised by blocking buffer/channel calls once ``close()`` was called.
+
+    It is the controller's shutdown signal, not an error: threads blocked
+    in ``push``/``pop_wait``/``send``/``recv`` wake immediately and unwind,
+    which is what lets the async controller join its (non-daemon) worker
+    threads deterministically after a peer failure.
+    """
 
 
 class StalenessBuffer:
@@ -32,7 +46,9 @@ class StalenessBuffer:
     behind the latest push (or the queue has overflowed ``delay`` entries),
     so at ``delay=s`` the delivered version trails the newest push by
     exactly ``s``.  ``max_size=0`` means unbounded; a bounded buffer makes
-    ``push`` block (backpressure on the producer thread).
+    ``push`` block (backpressure on the producer threads).  Multiple
+    producers may push concurrently (generator-pool fan-in); entries are
+    released in push order.
     """
 
     def __init__(self, delay: int = 1, max_size: int = 0):
@@ -40,17 +56,19 @@ class StalenessBuffer:
         self.max_size = max(0, max_size)
         self._q: Deque[Tuple[int, Any]] = collections.deque()
         self.latest_version = -1
+        self._closed = False
         self._cond = threading.Condition()
 
     def _has_room(self) -> bool:
-        return not self.max_size or len(self._q) < self.max_size
+        return self._closed or not self.max_size \
+            or len(self._q) < self.max_size
 
     def _ready(self) -> bool:
         if not self._q:
-            return False
+            return self._closed
         version, _ = self._q[0]
         return self.latest_version - version >= self.delay or \
-            len(self._q) > self.delay
+            len(self._q) > self.delay or self._closed
 
     def push(self, version: int, batch: Any,
              timeout: Optional[float] = None):
@@ -60,6 +78,8 @@ class StalenessBuffer:
                 raise TimeoutError(
                     f"StalenessBuffer full for {timeout}s "
                     f"(max_size={self.max_size})")
+            if self._closed:
+                raise Closed("StalenessBuffer closed")
             self.latest_version = max(self.latest_version, version)
             self._q.append((version, batch))
             self._cond.notify_all()
@@ -68,7 +88,7 @@ class StalenessBuffer:
     def pop(self) -> Optional[Tuple[int, Any]]:
         """Non-blocking: the released (version, batch), or None."""
         with self._cond:
-            if not self._ready():
+            if not self._q or not self._ready():
                 return None
             item = self._q.popleft()
             self._cond.notify_all()
@@ -80,9 +100,26 @@ class StalenessBuffer:
             if not self._cond.wait_for(self._ready, timeout):
                 raise TimeoutError(
                     f"StalenessBuffer empty for {timeout}s")
+            if not self._q:                  # closed and drained
+                raise Closed("StalenessBuffer closed")
             item = self._q.popleft()
             self._cond.notify_all()
             return item
+
+    def close(self):
+        """Wake all blocked producers/consumers with ``Closed``.
+
+        Entries already queued stay poppable (a closing consumer may still
+        drain them); new pushes are refused.  Idempotent.
+        """
+        with self._cond:
+            self._closed = True
+            self._cond.notify_all()
+
+    @property
+    def closed(self) -> bool:
+        with self._cond:
+            return self._closed
 
     def __len__(self):
         with self._cond:
@@ -90,24 +127,30 @@ class StalenessBuffer:
 
 
 class PartialRolloutCache:
-    """Holds unfinished rollouts keyed by an id; ``split`` separates finished
-    sequences (done or token budget exhausted) from resumable ones."""
+    """Holds unfinished rollouts keyed by an id; thread-safe, so generator-
+    pool worker threads can park and resume states concurrently (``split``
+    semantics live in ``finished_mask``: finished sequences are the ones
+    with EOS seen or token budget exhausted)."""
 
     def __init__(self):
         self._store: Dict[int, RolloutState] = {}
         self._next_id = 0
+        self._lock = threading.Lock()
 
     def put(self, state: RolloutState) -> int:
-        rid = self._next_id
-        self._next_id += 1
-        self._store[rid] = state
-        return rid
+        with self._lock:
+            rid = self._next_id
+            self._next_id += 1
+            self._store[rid] = state
+            return rid
 
     def get(self, rid: int) -> RolloutState:
-        return self._store.pop(rid)
+        with self._lock:
+            return self._store.pop(rid)
 
     def pending(self) -> List[int]:
-        return list(self._store)
+        with self._lock:
+            return list(self._store)
 
     @staticmethod
     def finished_mask(state: RolloutState) -> np.ndarray:
@@ -117,4 +160,5 @@ class PartialRolloutCache:
         return done | full
 
     def __len__(self):
-        return len(self._store)
+        with self._lock:
+            return len(self._store)

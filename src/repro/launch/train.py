@@ -17,50 +17,64 @@ import jax
 import jax.numpy as jnp
 
 from repro import configs
-from repro.core import (CommType, CommunicationChannel, ExecutorController,
-                        GeneratorExecutor, RewardExecutor, TrainerExecutor,
-                        WeightsCommunicationChannel)
+from repro.core import (AdaptiveStalenessController, CommType,
+                        CommunicationChannel, ExecutorController,
+                        RewardExecutor, TrainerExecutor,
+                        WeightsCommunicationChannel, build_generator_pool)
 from repro.rl.data import ArithmeticTasks, VOCAB_SIZE
 
 
 def build_controller(cfg, args):
-    tasks = ArithmeticTasks(prompt_len=args.prompt_len,
-                            max_operand=args.max_operand, ops="+-",
-                            seed=args.seed)
-    gen = GeneratorExecutor(cfg, tasks, n_prompts=args.n_prompts,
-                            n_per_prompt=args.n_per_prompt,
-                            max_new=args.max_new, temperature=args.temp,
-                            quantize=args.quantize_generator,
-                            chunk=args.rollout_chunk, seed=args.seed)
-    rew = RewardExecutor(n_per_prompt=args.n_per_prompt,
-                         leave_one_out=args.rloo)
+    n_gens = max(1, args.n_generators)
+    if args.mode == "sync" or args.sequential:
+        assert n_gens == 1, "--n-generators > 1 needs mode=async threads"
     trn = TrainerExecutor(cfg, lr=args.lr, rho=args.rho,
                           clip_mode=args.clip_mode, kl_coef=args.kl_coef,
                           seed=args.seed)
-    executors = [gen, rew, trn]
-    channels = [WeightsCommunicationChannel("policy_model", trn, gen)]
+    gens, channels = build_generator_pool(
+        cfg, trn,
+        lambda g: ArithmeticTasks(prompt_len=args.prompt_len,
+                                  max_operand=args.max_operand, ops="+-",
+                                  seed=args.seed + g),
+        n_generators=n_gens, seed=args.seed, n_prompts=args.n_prompts,
+        n_per_prompt=args.n_per_prompt, max_new=args.max_new,
+        temperature=args.temp, quantize=args.quantize_generator,
+        chunk=args.rollout_chunk)
+    rew = RewardExecutor(n_per_prompt=args.n_per_prompt,
+                         leave_one_out=args.rloo)
+    executors = gens + [rew, trn]
     if args.kl_coef > 0:
         # paper Sec. 6: KL regularization against a frozen reference policy
         from repro.core import RefPolicyExecutor
         ref = RefPolicyExecutor(cfg)
-        executors.insert(1, ref)
+        executors.insert(len(gens), ref)
         channels += [
             WeightsCommunicationChannel("policy_model", trn, ref),
-            CommunicationChannel("completions", gen, ref,
+            CommunicationChannel("completions", gens[0], ref,
                                  CommType.BROADCAST),
             CommunicationChannel("completions_with_ref", ref, rew,
                                  CommType.GATHER),
         ]
     else:
-        channels.append(CommunicationChannel("completions", gen, rew,
+        channels.append(CommunicationChannel("completions", gens[0], rew,
                                              CommType.GATHER))
     channels.append(CommunicationChannel("completions_with_reward", rew,
                                          trn, CommType.SCATTER))
+    adaptive = None
+    if args.adaptive_staleness > 0:
+        assert args.mode == "async" and not args.sequential, \
+            "--adaptive-staleness only acts on the threaded async loop"
+        assert args.adaptive_staleness >= args.staleness, \
+            f"--adaptive-staleness ({args.adaptive_staleness}) is the " \
+            f"max bound and must be >= --staleness ({args.staleness})"
+        adaptive = AdaptiveStalenessController(
+            bound=args.staleness, min_bound=1,
+            max_bound=args.adaptive_staleness)
     return ExecutorController(
         executors, channels,
         max_steps=args.steps, mode=args.mode, staleness=args.staleness,
         checkpoint_every=args.checkpoint_every,
-        checkpoint_path=args.checkpoint_path)
+        checkpoint_path=args.checkpoint_path, adaptive=adaptive)
 
 
 def main():
@@ -86,6 +100,13 @@ def main():
     ap.add_argument("--rloo", action="store_true")
     ap.add_argument("--quantize-generator", action="store_true")
     ap.add_argument("--rollout-chunk", type=int, default=0)
+    ap.add_argument("--n-generators", type=int, default=1,
+                    help="generator pool size (async mode): worker i "
+                    "produces batches i, i+N, ... into the sample queue")
+    ap.add_argument("--adaptive-staleness", type=int, default=0,
+                    help="if > 0, the max bound for the adaptive "
+                    "staleness controller (starts at --staleness, moves "
+                    "in [1, max]; the async loop floors the bound at 1)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--checkpoint-every", type=int, default=0)
     ap.add_argument("--checkpoint-path", default="checkpoints")

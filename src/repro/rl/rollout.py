@@ -103,6 +103,26 @@ def rollout_chunk(params, cfg, state: RolloutState, key, *,
                         prompt_len=state.prompt_len)
 
 
+def finalize_rollout(state: RolloutState, max_new: int) -> RolloutState:
+    """Slice a bucket-padded rollout back to ``prompt + max_new`` tokens.
+
+    At most ``chunk - 1`` overshoot decode steps land in the sliced-off
+    tail; ``done`` is recomputed from the kept region so a row that only
+    EOS'd in the overshoot still reads as unfinished.  A state already at
+    its budget is returned unchanged.  Shared by ``generate`` and the
+    chunk scheduler (``repro.rl.scheduler``), so the monolithic and
+    chunk-scheduled paths emit bit-for-bit identical batches.
+    """
+    Sp = state.prompt_len
+    if state.tokens.shape[1] == Sp + max_new:
+        return state
+    tokens = state.tokens[:, :Sp + max_new]
+    return state._replace(
+        tokens=tokens,
+        behavior_logp=state.behavior_logp[:, :Sp + max_new],
+        done=(tokens[:, Sp:] == EOS).any(axis=-1))
+
+
 def generate(params, cfg, prompts, *, max_new: int, key,
              temperature: float = 1.0, chunk: int = 0,
              dtype=jnp.float32, extra=None) -> RolloutState:
@@ -112,12 +132,9 @@ def generate(params, cfg, prompts, *, max_new: int, key,
     ``rollout_chunk`` compiles exactly once per (cfg, shape) -- a ragged
     final chunk used to change ``n_steps`` and retrace every call.  The
     token/logprob buffers are padded up to the bucketed length and sliced
-    back to ``prompt + max_new`` afterwards; at most ``chunk - 1`` overshoot
-    decode steps land in the sliced-off tail, and ``done`` is recomputed
-    from the kept region so a row that only EOS'd in the overshoot still
-    reads as unfinished.  The returned state is terminal either way (its
-    buffers are full); resume via ``rollout_chunk`` on a state sized for
-    the full budget instead.
+    back to ``prompt + max_new`` by ``finalize_rollout``.  The returned
+    state is terminal either way (its buffers are full); resume via
+    ``rollout_chunk`` on a state sized for the full budget instead.
     """
     B, Sp = prompts.shape
     if max_new <= 0:
@@ -132,13 +149,7 @@ def generate(params, cfg, prompts, *, max_new: int, key,
         key, sub = jax.random.split(key)
         state = rollout_chunk(params, cfg, state, sub, n_steps=chunk,
                               temperature=temperature)
-    if padded != max_new:
-        tokens = state.tokens[:, :Sp + max_new]
-        state = state._replace(
-            tokens=tokens,
-            behavior_logp=state.behavior_logp[:, :Sp + max_new],
-            done=(tokens[:, Sp:] == EOS).any(axis=-1))
-    return state
+    return finalize_rollout(state, max_new)
 
 
 def action_mask(state: RolloutState) -> jax.Array:

@@ -1,0 +1,126 @@
+"""Partial-rollout chunk scheduler (paper Sec. 4.2).
+
+``RolloutScheduler`` replaces the monolithic ``generate()`` call inside a
+generator worker: admitted batches become resumable ``RolloutJob``s whose
+``RolloutState`` is parked in a (thread-safe) ``PartialRolloutCache``
+between chunks.  Each ``step()`` pops the highest-priority job off a work
+heap, drives it one ``rollout_chunk`` forward, and either harvests it (all
+sequences done, or token budget exhausted) or requeues it with its KV
+cache and cursor intact.  Finished batches are therefore emitted the
+moment they complete -- a straggler batch still mid-decode never delays
+the sample-queue push of a batch that finished, and a batch whose every
+sequence hit EOS early stops paying for its remaining chunks
+(``early_exit``), which the monolithic ``generate()`` cannot do.
+
+Determinism: a job's RNG-key discipline is exactly ``generate()``'s (one
+split per chunk from the per-batch key), its params are snapshotted at
+admission (a batch decodes entirely under one weight version, as the
+bounded-staleness schedule prescribes), and skipped post-``early_exit``
+chunks would only have written PAD tokens with zero logprob into an
+already PAD/zero-initialized buffer -- so the chunk-scheduled path emits
+bit-for-bit the batches the monolithic path emits.
+
+The default priority is the batch index: the trainer consumes batches in
+order, so the batch it needs soonest always advances first.  Pass a custom
+``priority`` (e.g. most-finished-rows-first) for serving workloads with no
+ordering constraint; see ``examples/serve_partial_rollouts.py``.
+"""
+from __future__ import annotations
+
+import heapq
+import time
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, Optional, Tuple
+
+from repro.core.offpolicy import PartialRolloutCache
+from repro.rl.rollout import RolloutState
+
+
+@dataclass
+class RolloutJob:
+    """A resumable in-flight batch: everything but the parked state."""
+    batch_index: int
+    params: Any                # snapshot at admission -- one version per batch
+    weight_version: int
+    key: Any                   # per-batch PRNG key; split once per chunk
+    meta: Dict[str, Any]       # passed through to the emitted batch (answers)
+    max_new: int
+    chunk: int
+    n_chunks: int
+    bound: int = 0             # staleness bound in effect at admission
+    chunks_done: int = 0
+    busy_s: float = 0.0        # wall-clock spent advancing this job
+    rid: Optional[int] = None  # PartialRolloutCache id while parked
+
+
+class RolloutScheduler:
+    """Drives ``rollout_chunk`` over a work heap of resumable jobs.
+
+    The executor collaborator provides the two chunk-stepping hooks
+    (``advance_chunk(job, state) -> state`` and
+    ``emit_batch(job, state) -> batch``); the scheduler owns admission,
+    ordering, parking and harvest.  ``chunk_delay(batch_index, chunk_idx)
+    -> seconds`` injects straggler latency for benchmarks/tests.
+    """
+
+    def __init__(self, executor, cache: Optional[PartialRolloutCache] = None,
+                 *, early_exit: bool = True,
+                 chunk_delay: Optional[Callable[[int, int], float]] = None,
+                 priority: Optional[Callable[[RolloutJob, RolloutState],
+                                             Any]] = None):
+        self.executor = executor
+        self.cache = cache if cache is not None else PartialRolloutCache()
+        self.early_exit = early_exit
+        self.chunk_delay = chunk_delay
+        self.priority = priority or (lambda job, state: job.batch_index)
+        self._heap: list = []
+        self._seq = 0              # heap tie-break; keeps admits FIFO-stable
+
+    def admit(self, job: RolloutJob, state: RolloutState):
+        """Park the freshly-prefilled state and enqueue the job."""
+        job.rid = self.cache.put(state)
+        heapq.heappush(self._heap,
+                       (self.priority(job, state), self._seq, job))
+        self._seq += 1
+
+    def pending(self) -> int:
+        return len(self._heap)
+
+    def step(self) -> Optional[Tuple[RolloutJob, Any]]:
+        """Advance the highest-priority job one chunk.
+
+        Returns ``(job, batch)`` the moment a batch's worth of sequences
+        completes, else None (the job requeued with KV cache + cursor).
+        """
+        if not self._heap:
+            return None
+        _, _, job = heapq.heappop(self._heap)
+        state = self.cache.get(job.rid)
+        job.rid = None
+        if self.chunk_delay is not None:
+            dt = self.chunk_delay(job.batch_index, job.chunks_done)
+            if dt and dt > 0:
+                time.sleep(dt)     # injected straggler latency (counts busy)
+        t0 = time.monotonic()
+        state = self.executor.advance_chunk(job, state)
+        finished = job.chunks_done >= job.n_chunks
+        if not finished and self.early_exit:
+            finished = bool(state.done.all())   # forces one device sync
+        job.busy_s += time.monotonic() - t0
+        if finished:
+            t0 = time.monotonic()
+            batch = self.executor.emit_batch(job, state)
+            job.busy_s += time.monotonic() - t0
+            return job, batch
+        job.rid = self.cache.put(state)
+        heapq.heappush(self._heap,
+                       (self.priority(job, state), self._seq, job))
+        self._seq += 1
+        return None
+
+    def drain(self):
+        """Step until the heap is empty, yielding batches as they finish."""
+        while self._heap:
+            done = self.step()
+            if done is not None:
+                yield done

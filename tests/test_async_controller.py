@@ -24,12 +24,12 @@ def micro_cfg():
 
 
 def build(seed=0, staleness=1, max_steps=4, mode="async", gen_cls=None,
-          timeout=120.0):
+          timeout=120.0, chunk=0, pool=None):
     cfg = micro_cfg()
     tasks = ArithmeticTasks(prompt_len=8, max_operand=4, ops="+", seed=seed)
     gen_cls = gen_cls or GeneratorExecutor
     gen = gen_cls(cfg, tasks, n_prompts=4, n_per_prompt=2, max_new=4,
-                  temperature=1.0, seed=seed)
+                  temperature=1.0, seed=seed, chunk=chunk)
     rew = RewardExecutor(n_per_prompt=2)
     trn = TrainerExecutor(cfg, lr=5e-2, seed=seed)
     return ExecutorController(
@@ -38,7 +38,8 @@ def build(seed=0, staleness=1, max_steps=4, mode="async", gen_cls=None,
          CommunicationChannel("completions", gen, rew, CommType.GATHER),
          CommunicationChannel("completions_with_reward", rew, trn,
                               CommType.SCATTER)],
-        max_steps=max_steps, mode=mode, staleness=staleness, timeout=timeout)
+        max_steps=max_steps, mode=mode, staleness=staleness, timeout=timeout,
+        pool=pool)
 
 
 def metrics(history):
@@ -47,18 +48,25 @@ def metrics(history):
 
 # ------------------------------------------------- threaded == sequential --
 
-@pytest.mark.parametrize("staleness", [1, 2])
-def test_threaded_matches_sequential_bit_for_bit(staleness):
+@pytest.mark.parametrize("staleness", [1, 2, 3])
+@pytest.mark.parametrize("chunk", [0, 2])
+def test_threaded_matches_sequential_bit_for_bit(staleness, chunk):
     """The tentpole acceptance check: real threads change wall-clock
-    overlap, never numerics -- weight versions are pinned by count."""
-    threaded = build(seed=11, staleness=staleness, max_steps=4)
+    overlap, never numerics -- weight versions are pinned by count.
+    ``chunk=2`` exercises the pool's chunk-scheduled partial-rollout path
+    (``max_new=4`` -> two resumable chunks per batch) against the
+    monolithic sequential reference."""
+    threaded = build(seed=11, staleness=staleness, max_steps=4, chunk=chunk)
     assert isinstance(threaded, AsyncExecutorController)
-    sequential = build(seed=11, staleness=staleness, max_steps=4)
+    sequential = build(seed=11, staleness=staleness, max_steps=4,
+                       chunk=chunk)
     ht = threaded.run()
     hs = sequential.run_sequential()
     assert metrics(ht) == metrics(hs)        # exact float equality
     assert [h["weight_version"] for h in ht] == \
         [h["weight_version"] for h in hs]
+    assert [h["weight_version"] for h in ht] == \
+        [max(0, n - staleness) for n in range(4)]
 
 
 def test_mixing_threaded_and_sequential_runs_raises():
@@ -158,10 +166,12 @@ def test_two_live_weight_channels_both_drained():
         assert ch.pending() <= ctl.staleness + 1
 
 
-def test_kl_reference_pipeline_threaded_matches_sequential():
+@pytest.mark.parametrize("staleness", [1, 3])
+def test_kl_reference_pipeline_threaded_matches_sequential(staleness):
     """Weight channels that feed non-generator executors (the frozen KL
     reference) are serviced on the consumer thread with the same delayed
-    schedule as the sequential path."""
+    schedule as the sequential path -- including through the pool's
+    chunk-scheduled partial-rollout path (``chunk=2``)."""
     from repro.core import RefPolicyExecutor
 
     def build_kl(seed):
@@ -169,7 +179,7 @@ def test_kl_reference_pipeline_threaded_matches_sequential():
         tasks = ArithmeticTasks(prompt_len=8, max_operand=4, ops="+",
                                 seed=seed)
         gen = GeneratorExecutor(cfg, tasks, n_prompts=4, n_per_prompt=2,
-                                max_new=4, seed=seed)
+                                max_new=4, seed=seed, chunk=2)
         ref = RefPolicyExecutor(cfg)
         rew = RewardExecutor(n_per_prompt=2)
         trn = TrainerExecutor(cfg, lr=5e-2, kl_coef=0.1, seed=seed)
@@ -183,7 +193,7 @@ def test_kl_reference_pipeline_threaded_matches_sequential():
                                   CommType.GATHER),
              CommunicationChannel("completions_with_reward", rew, trn,
                                   CommType.SCATTER)],
-            max_steps=3, mode="async", staleness=1, timeout=120.0)
+            max_steps=4, mode="async", staleness=staleness, timeout=120.0)
 
     threaded, sequential = build_kl(9), build_kl(9)
     ht = threaded.run()
@@ -194,10 +204,13 @@ def test_kl_reference_pipeline_threaded_matches_sequential():
 # -------------------------------------------------- failure propagation --
 
 class _ExplodingGenerator(GeneratorExecutor):
-    def step(self):
+    """Raises from both the chunk-stepping admission hook (pool path) and
+    the monolithic ``step()`` (sequential / complete-batch path)."""
+
+    def begin_batch(self, batch_index=None):
         if self.curr_step >= 1:
             raise RuntimeError("generator exploded")
-        return super().step()
+        return super().begin_batch(batch_index)
 
 
 def test_generator_exception_propagates_and_joins():
@@ -210,6 +223,40 @@ def test_generator_exception_propagates_and_joins():
     while threading.active_count() > before and time.monotonic() < deadline:
         time.sleep(0.05)
     assert threading.active_count() <= before   # no leaked threads
+
+
+def test_consumer_exception_unblocks_pool_and_joins():
+    """A trainer-side failure must close the comms so workers blocked in
+    channel recv / queue push unwind with ``Closed`` and join -- the
+    deterministic shutdown path (no daemon-thread leaks)."""
+
+    class _ExplodingTrainer(TrainerExecutor):
+        def step(self):
+            if self.curr_step >= 2:
+                raise RuntimeError("trainer exploded")
+            return super().step()
+
+    cfg = micro_cfg()
+    tasks = ArithmeticTasks(prompt_len=8, max_operand=4, ops="+", seed=4)
+    gen = GeneratorExecutor(cfg, tasks, n_prompts=4, n_per_prompt=2,
+                            max_new=4, seed=4)
+    rew = RewardExecutor(n_per_prompt=2)
+    trn = _ExplodingTrainer(cfg, lr=5e-2, seed=4)
+    ctl = ExecutorController(
+        [gen, rew, trn],
+        [WeightsCommunicationChannel("policy_model", trn, gen),
+         CommunicationChannel("completions", gen, rew, CommType.GATHER),
+         CommunicationChannel("completions_with_reward", rew, trn,
+                              CommType.SCATTER)],
+        max_steps=8, mode="async", staleness=1, timeout=60.0)
+    before = threading.active_count()
+    with pytest.raises(RuntimeError, match="trainer exploded"):
+        ctl.run()
+    deadline = time.monotonic() + 10
+    while threading.active_count() > before and time.monotonic() < deadline:
+        time.sleep(0.05)
+    assert threading.active_count() <= before   # no leaked threads
+    assert ctl._sample_queue.closed             # shutdown() ran
 
 
 # -------------------------------------------------- StalenessBuffer core --

@@ -1,0 +1,186 @@
+"""Concurrency stress tests: many-producer/one-consumer StalenessBuffer
+under bounded capacity, PartialRolloutCache under contention, and the
+close()-based deterministic shutdown of buffers and channels."""
+import queue
+import threading
+
+import pytest
+
+from repro.core import Closed, CommType, CommunicationChannel, Executor, \
+    PartialRolloutCache, StalenessBuffer
+
+N_THREADS = 8
+N_ITEMS = 40
+
+
+# ------------------------------------------- StalenessBuffer multi-producer --
+
+def test_many_producers_one_consumer_no_drop_no_dup():
+    """The generator-pool fan-in shape: N producers pushing through a
+    4-slot bounded buffer must deliver every item exactly once, with
+    backpressure and no deadlock."""
+    buf = StalenessBuffer(delay=0, max_size=4)
+    got = []
+    errs = []
+
+    def producer(p):
+        try:
+            for i in range(N_ITEMS):
+                buf.push(i, (p, i), timeout=30.0)
+        except BaseException as e:           # pragma: no cover - diagnostics
+            errs.append(e)
+
+    def consumer():
+        try:
+            for _ in range(N_THREADS * N_ITEMS):
+                got.append(buf.pop_wait(timeout=30.0)[1])
+        except BaseException as e:           # pragma: no cover - diagnostics
+            errs.append(e)
+
+    threads = [threading.Thread(target=producer, args=(p,))
+               for p in range(N_THREADS)] + \
+        [threading.Thread(target=consumer)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(timeout=60.0)
+    assert not any(t.is_alive() for t in threads), "deadlocked"
+    assert not errs
+    assert len(got) == N_THREADS * N_ITEMS
+    assert sorted(got) == sorted((p, i) for p in range(N_THREADS)
+                                 for i in range(N_ITEMS))
+    # per-producer FIFO: each producer's items arrive in its push order
+    for p in range(N_THREADS):
+        mine = [i for (q_, i) in got if q_ == p]
+        assert mine == sorted(mine)
+    assert len(buf) == 0
+
+
+def test_buffer_close_unblocks_producer_and_consumer():
+    buf = StalenessBuffer(delay=0, max_size=1)
+    buf.push(0, "fill")
+    raised = []
+
+    def blocked_producer():
+        try:
+            buf.push(1, "overflow", timeout=30.0)
+        except Closed:
+            raised.append("producer")
+
+    t = threading.Thread(target=blocked_producer)
+    t.start()
+    t.join(timeout=0.2)
+    assert t.is_alive()                      # genuinely blocked on full
+    buf.close()
+    t.join(timeout=5.0)
+    assert not t.is_alive() and raised == ["producer"]
+    # queued entries remain drainable after close; then Closed, not block
+    assert buf.pop_wait(timeout=1.0) == (0, "fill")
+    with pytest.raises(Closed):
+        buf.pop_wait(timeout=5.0)
+    with pytest.raises(Closed):
+        buf.push(2, "late")
+
+
+def test_buffer_close_unblocks_empty_pop_wait():
+    buf = StalenessBuffer(delay=0)
+    raised = []
+
+    def blocked():
+        try:
+            buf.pop_wait(timeout=30.0)
+        except Closed:
+            raised.append(True)
+
+    t = threading.Thread(target=blocked)
+    t.start()
+    t.join(timeout=0.2)
+    assert t.is_alive()
+    buf.close()
+    t.join(timeout=5.0)
+    assert not t.is_alive() and raised == [True]
+
+
+# ------------------------------------------ PartialRolloutCache contention --
+
+def test_partial_rollout_cache_contended_put_get_pending():
+    """Pool workers park/resume states concurrently: ids must stay unique,
+    every parked state retrievable exactly once, none lost."""
+    cache = PartialRolloutCache()
+    seen_ids = [[] for _ in range(N_THREADS)]
+    recovered = [[] for _ in range(N_THREADS)]
+    errs = []
+
+    def worker(w):
+        try:
+            for i in range(N_ITEMS):
+                rid = cache.put(("state", w, i))
+                seen_ids[w].append(rid)
+                cache.pending()              # racing reads must not corrupt
+                if i % 2:                    # park every other state...
+                    recovered[w].append(cache.get(rid))
+        except BaseException as e:           # pragma: no cover
+            errs.append(e)
+
+    threads = [threading.Thread(target=worker, args=(w,))
+               for w in range(N_THREADS)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(timeout=30.0)
+    assert not errs and not any(t.is_alive() for t in threads)
+    all_ids = [rid for ids in seen_ids for rid in ids]
+    assert len(all_ids) == len(set(all_ids))           # no duplicate ids
+    for w in range(N_THREADS):                         # got back our own
+        assert recovered[w] == [("state", w, i)
+                                for i in range(N_ITEMS) if i % 2]
+    # ...the rest are still parked, each retrievable exactly once
+    assert len(cache) == N_THREADS * N_ITEMS // 2
+    leftovers = {cache.get(rid) for rid in cache.pending()}
+    assert leftovers == {("state", w, i) for w in range(N_THREADS)
+                         for i in range(N_ITEMS) if not i % 2}
+    assert len(cache) == 0
+
+
+# --------------------------------------------------------- channel close --
+
+def _channel(capacity=1):
+    return CommunicationChannel("c", Executor("a"), Executor("b"),
+                                CommType.BROADCAST, capacity=capacity)
+
+
+def test_channel_close_unblocks_send():
+    ch = _channel(capacity=1)
+    ch.send("x")                             # fills the queue
+    raised = []
+
+    def blocked():
+        try:
+            ch.send("y", timeout=30.0)
+        except Closed:
+            raised.append(True)
+
+    t = threading.Thread(target=blocked)
+    t.start()
+    t.join(timeout=0.2)
+    assert t.is_alive()
+    ch.close()
+    t.join(timeout=5.0)
+    assert not t.is_alive() and raised == [True]
+    with pytest.raises(Closed):
+        ch.send("z")
+
+
+def test_channel_close_drains_then_raises_on_recv():
+    ch = _channel(capacity=2)
+    ch.send("x")
+    ch.close()
+    assert ch.recv(timeout=1.0)[1] == "x"    # drainable after close
+    with pytest.raises(Closed):
+        ch.recv(timeout=5.0)
+
+
+def test_channel_recv_timeout_still_empty():
+    ch = _channel()
+    with pytest.raises(queue.Empty):
+        ch.recv(timeout=0.1)

@@ -1,0 +1,283 @@
+"""Generator pool: multi-generator fan-in, partial-rollout chunk
+scheduling, adaptive staleness, and the RolloutScheduler work heap."""
+import time
+
+import pytest
+
+from repro.configs.llama_paper import smoke
+from repro.core import (AdaptiveStalenessController, CommType,
+                        CommunicationChannel, ExecutorController,
+                        GeneratorExecutor, PartialRolloutCache, PoolConfig,
+                        RewardExecutor, TrainerExecutor,
+                        WeightsCommunicationChannel, build_generator_pool)
+from repro.rl.data import ArithmeticTasks
+from repro.rl.scheduler import RolloutJob, RolloutScheduler
+
+
+def micro_cfg():
+    return smoke().replace(n_layers=1, d_model=32, n_heads=2, n_kv_heads=2,
+                           head_dim=16, d_ff=64, vocab=64)
+
+
+def build_pool(n_gens=2, staleness=1, max_steps=8, adaptive=None, pool=None,
+               trainer_cls=TrainerExecutor, timeout=120.0):
+    """Full pipeline with ``n_gens`` generator workers, one weight channel
+    each, one shared data pipeline."""
+    cfg = micro_cfg()
+    rew = RewardExecutor(n_per_prompt=2)
+    trn = trainer_cls(cfg, lr=5e-2, seed=0)
+    gens, chans = build_generator_pool(
+        cfg, trn,
+        lambda g: ArithmeticTasks(prompt_len=8, max_operand=4, ops="+",
+                                  seed=100 + g),
+        n_generators=n_gens, seed=100, n_prompts=4, n_per_prompt=2,
+        max_new=4, temperature=1.0, chunk=2)
+    chans += [CommunicationChannel("completions", gens[0], rew,
+                                   CommType.GATHER),
+              CommunicationChannel("completions_with_reward", rew, trn,
+                                   CommType.SCATTER)]
+    return ExecutorController(gens + [rew, trn], chans, max_steps=max_steps,
+                              mode="async", staleness=staleness,
+                              timeout=timeout, adaptive=adaptive, pool=pool)
+
+
+# ------------------------------------------------- multi-generator fan-in --
+
+@pytest.mark.parametrize("n_gens", [2, 4])
+def test_pool_interleaves_batches_and_keeps_schedule(n_gens):
+    """Worker ``i`` produces batches ``i, i+N, ...``; the consumer reorders
+    the fan-in so training happens in batch order, on the exact
+    bounded-staleness weight schedule."""
+    s = 1
+    ctl = build_pool(n_gens=n_gens, staleness=s, max_steps=2 * n_gens)
+    hist = ctl.run()
+    assert [h["step"] for h in hist] == list(range(2 * n_gens))
+    assert [h["weight_version"] for h in hist] == \
+        [max(0, n - s) for n in range(2 * n_gens)]
+    assert [h["generator"] for h in hist] == \
+        [f"generator{n % n_gens}" for n in range(2 * n_gens)]
+    assert max(ctl.staleness_hist) <= s
+
+
+def test_pool_with_straggler_worker_preserves_order_and_bound():
+    """Injected per-chunk straggler latency on half the batches changes
+    wall-clock only: training order, schedule and bound all hold."""
+    s = 2
+    cfg = PoolConfig(chunk_delay=lambda b, c: 0.03 if b % 2 == 0 else 0.0)
+    ctl = build_pool(n_gens=2, staleness=s, max_steps=8, pool=cfg)
+    hist = ctl.run()
+    assert [h["step"] for h in hist] == list(range(8))
+    assert [h["weight_version"] for h in hist] == \
+        [max(0, n - s) for n in range(8)]
+    assert max(ctl.staleness_hist) <= s
+
+
+def test_pool_complete_batch_mode_matches_chunked_numerics():
+    """chunk_scheduling=False (the monolithic complete-batch baseline)
+    trains on bit-for-bit the same batches as the chunk-scheduled path:
+    chunking changes push granularity, never numerics."""
+    a = build_pool(n_gens=2, max_steps=6, pool=PoolConfig(
+        chunk_scheduling=False))
+    b = build_pool(n_gens=2, max_steps=6)
+    ha, hb = a.run(), b.run()
+    keys = ("loss", "grad_norm", "mean_ratio", "mean_reward")
+    assert [[h[k] for k in keys] for h in ha] == \
+        [[h[k] for k in keys] for h in hb]
+
+
+def test_duplicate_generator_names_rejected():
+    """Name-keyed executor lookup would silently collapse a pool built
+    without explicit names into one worker; refuse it loudly instead."""
+    cfg = micro_cfg()
+    tasks = ArithmeticTasks(prompt_len=8, max_operand=4, ops="+", seed=0)
+    gens = [GeneratorExecutor(cfg, tasks, n_prompts=4, n_per_prompt=2,
+                              max_new=4, seed=g) for g in range(2)]
+    trn = TrainerExecutor(cfg, lr=5e-2, seed=0)
+    rew = RewardExecutor(n_per_prompt=2)
+    with pytest.raises(AssertionError, match="unique"):
+        ExecutorController(
+            gens + [rew, trn],
+            [WeightsCommunicationChannel("policy_model", trn, g)
+             for g in gens],
+            max_steps=1, mode="async")
+
+
+def test_sequential_run_rejects_pool():
+    """The sequential loop drives one generator; a pool slipping through
+    would silently step only worker 0."""
+    ctl = build_pool(n_gens=2, max_steps=1)
+    with pytest.raises(AssertionError, match="pool"):
+        ExecutorController.run(ctl)          # the base sequential loop
+
+
+# ----------------------------------------------------- adaptive staleness --
+
+def test_adaptive_widens_on_starvation_and_narrows_back():
+    """The acceptance check, at the policy level: a run of empty-queue
+    observations (trainer starved) widens the bound step by step up to
+    max_bound; a run of backlogged observations narrows it back down."""
+    ad = AdaptiveStalenessController(bound=1, min_bound=1, max_bound=3,
+                                     window=4)
+    assert ad.bound() == 1
+    for _ in range(8):                       # forced queue-depth imbalance
+        ad.observe(queue_depth=0, train_idle_s=0.5)
+    assert ad.bound() == 3                   # widened to the cap
+    for _ in range(8):                       # queue drained back to depth
+        ad.observe(queue_depth=2, train_idle_s=0.0)
+    assert ad.bound() == 1                   # narrowed back to the floor
+    assert max(ad.bound_history) == 3
+    assert ad.bound_history[-1] == 1
+
+
+def test_adaptive_mixed_window_holds_bound():
+    ad = AdaptiveStalenessController(bound=2, min_bound=1, max_bound=4,
+                                     window=4)
+    for depth in (0, 1, 0, 1, 0, 1, 0, 1):  # 50% starved: inside the band
+        ad.observe(queue_depth=depth, train_idle_s=0.5 if depth == 0
+                   else 0.0)
+    assert ad.bound() == 2
+
+
+def test_adaptive_just_in_time_is_not_starvation():
+    """Queue drained to zero after every pop but the trainer never
+    waiting means the pool is keeping up: the bound must not ratchet up
+    to max for free staleness."""
+    ad = AdaptiveStalenessController(bound=1, min_bound=1, max_bound=4,
+                                     window=4)
+    for _ in range(12):
+        ad.observe(queue_depth=0, train_idle_s=0.0)
+    assert ad.bound() == 1
+
+
+def test_adaptive_reacts_in_integrated_run():
+    """End-to-end: straggler-slowed generation starves the trainer (queue
+    depth 0) -> the bound widens; then a slowed trainer lets the pool run
+    ahead (queue depth >= 1) -> the bound narrows back."""
+
+    class _SlowLateTrainer(TrainerExecutor):
+        # 1s/step dwarfs batch generation (~0.2s, margin for a loaded CI
+        # box): the pool reliably runs ahead in the narrow phase
+        def step(self):
+            if self.curr_step >= 6:
+                time.sleep(1.0)
+            return super().step()
+
+    ad = AdaptiveStalenessController(bound=1, min_bound=1, max_bound=3,
+                                     window=2)
+    cfg = PoolConfig(
+        chunk_delay=lambda b, c: 0.1 if b < 6 else 0.0)
+    ctl = build_pool(n_gens=1, max_steps=16, adaptive=ad, pool=cfg,
+                     trainer_cls=_SlowLateTrainer)
+    hist = ctl.run()
+    peak = max(ad.bound_history)
+    assert peak > 1                          # starvation widened the bound
+    # ...and the backlog narrowed it back after the peak.  (The tail may
+    # re-widen: at the floor a slow trainer re-starves the queue -- the
+    # bang-bang policy oscillates, which is the reaction we are testing.)
+    assert min(ad.bound_history[ad.bound_history.index(peak):]) < peak
+    # every trained sample respected the bound in effect at its admission
+    for h in hist:
+        assert h["sample_staleness"] <= h["staleness_bound"] <= 3
+
+
+# ------------------------------------------------ RolloutScheduler (unit) --
+
+class _FakeState:
+    def __init__(self, done=False):
+        self.done = _FakeDone(done)
+
+
+class _FakeDone:
+    def __init__(self, v):
+        self.v = v
+
+    def all(self):                           # mimics jnp array reduction
+        return self.v
+
+    def __bool__(self):
+        return self.v
+
+
+class _FakeExecutor:
+    """Chunk-stepping contract double: finishes job ``i`` after
+    ``lengths[i]`` chunks."""
+
+    def __init__(self, lengths):
+        self.lengths = lengths
+        self.emitted = []
+
+    def advance_chunk(self, job, state):
+        job.chunks_done += 1
+        return _FakeState(done=job.chunks_done >= self.lengths[
+            job.batch_index])
+
+    def emit_batch(self, job, state):
+        self.emitted.append(job.batch_index)
+        return {"batch_index": job.batch_index}
+
+
+def _job(i, n_chunks=8):
+    return RolloutJob(batch_index=i, params=None, weight_version=0,
+                      key=None, meta={}, max_new=n_chunks, chunk=1,
+                      n_chunks=n_chunks)
+
+
+def test_scheduler_early_exit_harvests_before_budget():
+    ex = _FakeExecutor(lengths={0: 2})
+    sched = RolloutScheduler(ex, PartialRolloutCache())
+    sched.admit(_job(0, n_chunks=8), _FakeState())
+    steps = 0
+    while sched.pending():
+        done = sched.step()
+        steps += 1
+        if done:
+            job, out = done
+    assert steps == 2 and ex.emitted == [0]  # not 8: early exit
+    assert job.chunks_done == 2
+
+
+def test_scheduler_priority_orders_harvest():
+    """Default priority (batch index) drains in index order even when a
+    later-admitted job is shorter; a custom priority can invert that."""
+    ex = _FakeExecutor(lengths={0: 3, 1: 1})
+    sched = RolloutScheduler(ex, PartialRolloutCache())
+    sched.admit(_job(0), _FakeState())
+    sched.admit(_job(1), _FakeState())
+    list(sched.drain())
+    assert ex.emitted == [0, 1]              # index order: trainer's order
+
+    ex2 = _FakeExecutor(lengths={0: 3, 1: 1})
+    sched2 = RolloutScheduler(
+        ex2, PartialRolloutCache(),
+        priority=lambda job, state: job.chunks_done)  # round-robin-ish
+    sched2.admit(_job(0), _FakeState())
+    sched2.admit(_job(1), _FakeState())
+    sched2.step()                            # advances 0 (tie -> FIFO)
+    sched2.step()                            # advances 1 -> finishes first
+    assert ex2.emitted == [1]
+
+
+def test_scheduler_parks_states_in_cache():
+    ex = _FakeExecutor(lengths={0: 3, 1: 3})
+    cache = PartialRolloutCache()
+    sched = RolloutScheduler(ex, cache)
+    sched.admit(_job(0), _FakeState())
+    sched.admit(_job(1), _FakeState())
+    assert len(cache) == 2                   # both parked
+    assert sched.step() is None              # 0 advanced, reparked
+    assert len(cache) == 2
+    list(sched.drain())
+    assert len(cache) == 0 and sorted(ex.emitted) == [0, 1]
+
+
+def test_straggler_injection_delays_but_never_drops():
+    ex = _FakeExecutor(lengths={0: 2, 1: 2})
+    delays = []
+    sched = RolloutScheduler(
+        ex, PartialRolloutCache(),
+        chunk_delay=lambda b, c: delays.append((b, c)) or 0.0)
+    sched.admit(_job(0), _FakeState())
+    sched.admit(_job(1), _FakeState())
+    list(sched.drain())
+    assert sorted(ex.emitted) == [0, 1]
+    assert (0, 0) in delays and (1, 0) in delays
