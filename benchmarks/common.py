@@ -10,7 +10,7 @@ import numpy as np
 from repro.configs.llama_paper import smoke
 from repro.core import (CommType, CommunicationChannel, ExecutorController,
                         GeneratorExecutor, RewardExecutor, TrainerExecutor,
-                        WeightsCommunicationChannel)
+                        WeightsCommunicationChannel, spawn_actor)
 from repro.rl.data import ArithmeticTasks
 
 
@@ -24,14 +24,19 @@ def tiny_cfg(**kw):
 def build_pipeline(cfg, *, mode="async", staleness=1, clip_mode="aipo",
                    lr=5e-3, n_prompts=8, n_per_prompt=4, max_new=6,
                    max_steps=20, seed=0, quantize=False,
-                   weights=CommType.DDMA_WEIGHTS_UPDATE, max_operand=9):
+                   weights=CommType.DDMA_WEIGHTS_UPDATE, max_operand=9,
+                   transport=None):
     tasks = ArithmeticTasks(prompt_len=10, max_operand=max_operand, ops="+",
                             seed=seed)
-    gen = GeneratorExecutor(cfg, tasks, n_prompts=n_prompts,
-                            n_per_prompt=n_per_prompt, max_new=max_new,
-                            temperature=1.0, seed=seed, quantize=quantize)
+    # actors behind handles: transport=None reads $REPRO_TRANSPORT, so any
+    # bench can be rerun with process-backed generator/trainer
+    gen = spawn_actor(GeneratorExecutor, cfg, tasks, n_prompts=n_prompts,
+                      n_per_prompt=n_per_prompt, max_new=max_new,
+                      temperature=1.0, seed=seed, quantize=quantize,
+                      transport=transport)
     rew = RewardExecutor(n_per_prompt=n_per_prompt)
-    trn = TrainerExecutor(cfg, lr=lr, clip_mode=clip_mode, seed=seed)
+    trn = spawn_actor(TrainerExecutor, cfg, lr=lr, clip_mode=clip_mode,
+                      seed=seed, transport=transport)
     ctl = ExecutorController(
         [gen, rew, trn],
         [WeightsCommunicationChannel("policy_model", trn, gen, weights),

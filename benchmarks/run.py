@@ -1,32 +1,57 @@
-# One function per paper table/figure. Prints ``name,us_per_call,derived``
-# CSV rows.  Keep everything tiny: 1-core CPU dev box.
+# One entry point for every benchmark.  Prints ``name,us_per_call,
+# derived`` CSV rows; modules that write BENCH_*.json artifacts do so as
+# a side effect.  Keep everything tiny: 2-core CPU dev box.
+#
+# Discovery is automatic: every module in benchmarks/ that defines a
+# ``main()`` is a producer and runs -- a new bench file is registered by
+# existing, so no BENCH_*.json producer can fall out of this entry
+# point.  ``_ORDER`` pins the paper-table ordering for the report;
+# newly-discovered modules append alphabetically after it.
 import importlib
+import pkgutil
 import sys
 import traceback
 
-MODULES = [
-    "benchmarks.table3_step_time",   # Table 3: sync vs async step time
-    "benchmarks.table4_weight_sync", # Table 4: DDMA vs parameter-server
-    "benchmarks.fig5_batch_scaling", # Fig 5: Assumption 7.1
-    "benchmarks.fig6_quality",       # Fig 6: quality parity
-    "benchmarks.fig7_scaling",       # Fig 7: speedup vs scale
-    "benchmarks.fig8_offpolicy",     # Fig 8: off-policy corrections
-    "benchmarks.thm75_check",        # Theorem 7.5 numeric check
-    "benchmarks.roofline",           # deliverable (g) report
-    "benchmarks.kernels_bench",      # naive vs streamed -> BENCH_kernels.json
-    "benchmarks.genpool_bench",      # generator pool -> BENCH_genpool.json
+import benchmarks
+
+_HELPERS = {"run", "common", "make_report"}   # no main() / not producers
+
+_ORDER = [
+    "table3_step_time",   # Table 3: sync vs async step time
+    "table4_weight_sync", # Table 4: DDMA vs parameter-server
+    "fig5_batch_scaling", # Fig 5: Assumption 7.1
+    "fig6_quality",       # Fig 6: quality parity
+    "fig7_scaling",       # Fig 7: speedup vs scale
+    "fig8_offpolicy",     # Fig 8: off-policy corrections
+    "thm75_check",        # Theorem 7.5 numeric check
+    "roofline",           # deliverable (g) report
+    "kernels_bench",      # naive vs streamed -> BENCH_kernels.json
+    "genpool_bench",      # generator pool -> BENCH_genpool.json
+    "transport_bench",    # thread vs process actors -> BENCH_transport.json
 ]
+
+
+def discover():
+    found = sorted(m.name for m in pkgutil.iter_modules(benchmarks.__path__)
+                   if m.name not in _HELPERS)
+    ordered = [m for m in _ORDER if m in found]
+    return ordered + [m for m in found if m not in _ORDER]
 
 
 def main() -> None:
     print("name,us_per_call,derived")
     failures = 0
-    for mod in MODULES:
+    for name in discover():
         try:
-            importlib.import_module(mod).main()
-        except Exception as e:  # noqa: BLE001
+            mod = importlib.import_module(f"benchmarks.{name}")
+            if not hasattr(mod, "main"):
+                failures += 1
+                print(f"benchmarks.{name},0.0,ERROR:no main() entry point")
+                continue
+            mod.main()
+        except Exception as e:  # noqa: BLE001 - isolate per producer
             failures += 1
-            print(f"{mod},0.0,ERROR:{type(e).__name__}:{e}")
+            print(f"benchmarks.{name},0.0,ERROR:{type(e).__name__}:{e}")
             traceback.print_exc(file=sys.stderr)
     if failures:
         sys.exit(1)

@@ -1,0 +1,188 @@
+"""Thread- vs process-backed executors -> BENCH_transport.json.
+
+The motivation for ``ProcTransport`` (ROADMAP "process-level executors"):
+thread-backed executors share one GIL and one XLA client, so the async
+controller can only overlap *waiting* (injected straggler latency, device
+execution) -- never the Python-side compute of two executors.  This bench
+measures exactly that boundary, three ways:
+
+  * ``gil`` -- a generator/trainer pair whose ``step`` is GIL-bound
+    Python compute (the host-side share of sampling/tokenization/reward
+    plumbing), driven concurrently through handles.  Thread-backed
+    concurrent wall-clock ~= the sequential sum (the GIL serializes);
+    process-backed concurrent wall-clock ~= the slower of the two
+    (real compute overlap): ``overlap_where_threads_cannot`` is the
+    acceptance flag.
+  * ``wire`` -- serialization throughput of the pipe payload format
+    (pytree flatten + dtype/shape headers) on a weights-sized pytree,
+    the toll every cross-process hop pays.
+  * ``e2e`` -- the full async RL pipeline (micro model) run over
+    ``inproc`` and ``proc`` transports: same schedule, same numerics,
+    different placement; reports wall/overlap/idle from controller
+    stats.  (On a 2-core box the jax compute itself partially releases
+    the GIL, so the e2e gap is smaller than the ``gil`` gap -- the
+    process win grows with the Python share and the core count.)
+"""
+import json
+import os
+import threading
+import time
+
+import numpy as np
+
+from benchmarks.common import build_pipeline, emit, tiny_cfg
+from repro.core import Executor, close_all_actors, spawn_actor
+from repro.core import wire
+
+BURN_MS_TARGET = 300.0           # per-step python compute, calibrated
+E2E_STEPS = 6
+REPEATS = 3
+
+
+class GilBoundStage(Executor):
+    """An executor whose step is pure-Python compute: the workload the
+    GIL serializes across threads but not across processes."""
+
+    def __init__(self, iters: int, name: str = "stage"):
+        super().__init__(name)
+        self.iters = iters
+
+    def burn(self) -> int:
+        acc = 0
+        for i in range(self.iters):
+            acc = (acc * 1103515245 + i) & 0x7FFFFFFF
+        return acc
+
+
+def _calibrate() -> int:
+    """Iterations that take ~BURN_MS_TARGET of pure-Python work here."""
+    stage = GilBoundStage(200_000)
+    t0 = time.perf_counter()
+    stage.burn()
+    per_iter = (time.perf_counter() - t0) / stage.iters
+    return max(10_000, int(BURN_MS_TARGET / 1e3 / per_iter))
+
+
+def _concurrent_wall(handles) -> float:
+    """Drive one blocking ``burn`` per handle from concurrent threads --
+    the exact shape of the async controller's worker/consumer threads
+    blocking on actor endpoints."""
+    errs = []
+
+    def drive(h):
+        try:
+            h.call("burn")
+        except BaseException as e:           # pragma: no cover
+            errs.append(e)
+
+    threads = [threading.Thread(target=drive, args=(h,)) for h in handles]
+    t0 = time.perf_counter()
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert not errs, errs
+    return time.perf_counter() - t0
+
+
+def bench_gil(iters: int) -> dict:
+    inproc = [spawn_actor(GilBoundStage, iters, name=n, transport="inproc")
+              for n in ("generator", "trainer")]
+    seq, thr = [], []
+    for _ in range(REPEATS):
+        t0 = time.perf_counter()
+        for h in inproc:
+            h.call("burn")
+        seq.append(time.perf_counter() - t0)
+        thr.append(_concurrent_wall(inproc))
+    procs = [spawn_actor(GilBoundStage, iters, name=n, transport="proc")
+             for n in ("generator", "trainer")]
+    try:
+        prc = [_concurrent_wall(procs) for _ in range(REPEATS)]
+    finally:
+        for h in procs:
+            h.close()
+    seq_s, thr_s, prc_s = min(seq), min(thr), min(prc)
+    return {
+        "burn_iters": iters,
+        "sequential_sum_s": seq_s,
+        "threads_concurrent_s": thr_s,
+        "procs_concurrent_s": prc_s,
+        "threads_overlap_frac": max(0.0, (seq_s - thr_s) / (seq_s / 2)),
+        "procs_overlap_frac": max(0.0, (seq_s - prc_s) / (seq_s / 2)),
+        "proc_speedup_vs_threads": thr_s / prc_s,
+        # the acceptance flag: processes overlap the compute the
+        # thread-backed baseline cannot
+        "overlap_where_threads_cannot":
+            bool(prc_s < 0.8 * seq_s and thr_s > 0.9 * seq_s),
+    }
+
+
+def bench_wire() -> dict:
+    """Serialization toll on a weights-shaped pytree (~8 MB)."""
+    rng = np.random.default_rng(0)
+    tree = {f"layer{i}": {"w": rng.standard_normal((256, 1024))
+                          .astype(np.float32),
+                          "b": rng.standard_normal((1024,))
+                          .astype(np.float32)}
+            for i in range(8)}
+    mb = sum(x.nbytes for x in
+             (leaf for layer in tree.values() for leaf in layer.values())) \
+        / 2**20
+    ser = des = None
+    for _ in range(REPEATS):
+        t0 = time.perf_counter()
+        blob = wire.serialize(tree)
+        ser = min(ser or 1e9, time.perf_counter() - t0)
+        t0 = time.perf_counter()
+        out = wire.deserialize(blob)
+        des = min(des or 1e9, time.perf_counter() - t0)
+    exact = all(np.asarray(out[k][p]).tobytes()
+                == np.asarray(tree[k][p]).tobytes()
+                for k in tree for p in tree[k])
+    return {"payload_mb": mb, "serialize_mb_s": mb / ser,
+            "deserialize_mb_s": mb / des, "roundtrip_exact": bool(exact)}
+
+
+def bench_e2e(transport: str) -> dict:
+    ctl = build_pipeline(tiny_cfg(n_layers=1, d_model=32, d_ff=64,
+                                  n_heads=2, n_kv_heads=2, head_dim=16),
+                         mode="async", staleness=2, max_steps=2,
+                         n_prompts=4, n_per_prompt=2, max_new=4,
+                         transport=transport)
+    try:
+        ctl.run()                        # warm the jit caches / children
+        ctl.max_steps = E2E_STEPS
+        ctl.run()                        # measured continuation
+        return {k: round(v, 4) for k, v in ctl.stats.items()}
+    finally:
+        close_all_actors()
+
+
+def main() -> None:
+    iters = _calibrate()
+    report = {
+        "gil": bench_gil(iters),
+        "wire": bench_wire(),
+        "e2e": {"inproc": bench_e2e("inproc"), "proc": bench_e2e("proc")},
+    }
+    out = os.environ.get("REPRO_TRANSPORT_JSON", "BENCH_transport.json")
+    with open(out, "w") as f:
+        json.dump(report, f, indent=2)
+    g = report["gil"]
+    emit("transport_gil_sequential", g["sequential_sum_s"] * 1e6,
+         f"iters={g['burn_iters']}")
+    emit("transport_gil_threads", g["threads_concurrent_s"] * 1e6,
+         f"overlap_frac={g['threads_overlap_frac']:.2f}")
+    emit("transport_gil_procs", g["procs_concurrent_s"] * 1e6,
+         f"overlap_frac={g['procs_overlap_frac']:.2f};"
+         f"speedup_vs_threads={g['proc_speedup_vs_threads']:.2f}")
+    emit("transport_overlap_where_threads_cannot", 0.0,
+         str(g["overlap_where_threads_cannot"]))
+    emit("transport_wire_serialize", 0.0,
+         f"{report['wire']['serialize_mb_s']:.0f}MB/s")
+    emit("transport_json", 0.0, out)
+
+
+if __name__ == "__main__":
+    main()

@@ -5,13 +5,19 @@
 Builds the paper's full pipeline -- generator, rule-based reward, AIPO
 trainer, DDMA weight channel, single controller -- on a ~1M-param policy
 and runs 20 async RL steps.  Watch mean_reward rise and mean_ratio hover
-just off 1.0 (that's the 1-step off-policyness AIPO corrects)."""
+just off 1.0 (that's the 1-step off-policyness AIPO corrects).
+
+Executors are built as *actors* behind handles: ``REPRO_TRANSPORT=proc``
+reruns the identical script with the generator and trainer each in their
+own spawned process (own XLA client, no shared GIL) -- placement is a
+deployment knob, not a code path."""
 import jax.numpy as jnp
 
 from repro.configs.llama_paper import smoke
 from repro.core import (CommType, CommunicationChannel, ExecutorController,
                         GeneratorExecutor, RewardExecutor, TrainerExecutor,
-                        WeightsCommunicationChannel)
+                        WeightsCommunicationChannel, close_all_actors,
+                        spawn_actor)
 from repro.rl.data import ArithmeticTasks
 
 
@@ -20,10 +26,12 @@ def main():
                           head_dim=32, d_ff=256, vocab=64)
     tasks = ArithmeticTasks(prompt_len=10, max_operand=9, ops="+")
 
-    generator = GeneratorExecutor(cfg, tasks, n_prompts=8, n_per_prompt=4,
-                                  max_new=6, temperature=1.0)
-    reward = RewardExecutor(n_per_prompt=4)
-    trainer = TrainerExecutor(cfg, lr=2e-3, rho=4.0, clip_mode="aipo")
+    # transport=None reads $REPRO_TRANSPORT (inproc default / proc)
+    generator = spawn_actor(GeneratorExecutor, cfg, tasks, n_prompts=8,
+                            n_per_prompt=4, max_new=6, temperature=1.0)
+    trainer = spawn_actor(TrainerExecutor, cfg, lr=2e-3, rho=4.0,
+                          clip_mode="aipo")
+    reward = RewardExecutor(n_per_prompt=4)   # lightweight python: inproc
 
     controller = ExecutorController(
         executor_group=[generator, reward, trainer],
@@ -36,7 +44,10 @@ def main():
         ],
         max_steps=20, mode="async", staleness=1)
 
-    history = controller.run()
+    try:
+        history = controller.run()
+    finally:
+        close_all_actors()               # join process-backed executors
     print(f"{'step':>4} {'reward':>7} {'loss':>8} {'ratio':>6} "
           f"{'wv':>3} {'time':>6}")
     for h in history:
@@ -45,7 +56,8 @@ def main():
               f"{h['weight_version']:>3} {h['step_time']:>6.2f}s")
     s = controller.stats
     print(f"wall={s['wall_s']:.1f}s  gen/train overlap={s['overlap_s']:.1f}s "
-          f"(threads really do run the generator and trainer concurrently)")
+          f"(the controller really does run the generator and trainer "
+          f"actors concurrently)")
 
 
 if __name__ == "__main__":

@@ -26,7 +26,7 @@ from repro.core import (AdaptiveStalenessController, CommType,
                         CommunicationChannel, ExecutorController,
                         GeneratorExecutor, PartialRolloutCache, PoolConfig,
                         RewardExecutor, TrainerExecutor,
-                        build_generator_pool)
+                        build_generator_pool, close_all_actors, spawn_actor)
 from repro.models import init_params
 from repro.rl.data import ArithmeticTasks, decode_ids
 from repro.rl.scheduler import RolloutScheduler
@@ -47,19 +47,24 @@ def serve():
     admission."""
     print("== Part 1: chunk-scheduled serving " + "=" * 30)
     cfg = tiny_cfg()
-    gen = GeneratorExecutor(cfg, ArithmeticTasks(prompt_len=10,
-                                                 max_operand=99, ops="+*"),
-                            n_prompts=3, n_per_prompt=1, max_new=MAX_NEW,
-                            chunk=CHUNK, seed=0)
-    gen.set_weights(init_params(cfg, jax.random.PRNGKey(0), jnp.float32),
-                    version=0)
+    # the serving generator is an actor too: REPRO_TRANSPORT=proc moves
+    # the model into its own process and the scheduler drives it through
+    # the same handle endpoints (job/state round-trip over the pipe)
+    gen = spawn_actor(GeneratorExecutor, cfg,
+                      ArithmeticTasks(prompt_len=10, max_operand=99,
+                                      ops="+*"),
+                      n_prompts=3, n_per_prompt=1, max_new=MAX_NEW,
+                      chunk=CHUNK, seed=0)
+    gen.cast("set_weights",
+             init_params(cfg, jax.random.PRNGKey(0), jnp.float32),
+             version=0)
     sched = RolloutScheduler(
         gen, PartialRolloutCache(),
         # serving has no training-order constraint: shortest-remaining-
         # budget first, so the straggler batch never blocks a harvest
         priority=lambda job, state: job.n_chunks - job.chunks_done)
     for r, target in enumerate((4, MAX_NEW, 8)):  # mixed request lengths
-        gen.max_new = target
+        gen.call("configure", max_new=target)
         job, state = gen.begin_batch(r)
         sched.admit(job, state)
         print(f"admitted request batch {r} "
@@ -112,8 +117,11 @@ def train_with_pool():
 
 
 def main():
-    serve()
-    train_with_pool()
+    try:
+        serve()
+        train_with_pool()
+    finally:
+        close_all_actors()
 
 
 if __name__ == "__main__":

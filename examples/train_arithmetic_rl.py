@@ -18,7 +18,8 @@ import numpy as np
 from repro.configs.llama_paper import smoke
 from repro.core import (CommType, CommunicationChannel, ExecutorController,
                         GeneratorExecutor, RewardExecutor, TrainerExecutor,
-                        WeightsCommunicationChannel)
+                        WeightsCommunicationChannel, close_all_actors,
+                        spawn_actor)
 from repro.rl.data import ArithmeticTasks, decode_ids
 from repro.rl.rewards import score_group
 from repro.rl.rollout import generate
@@ -46,10 +47,12 @@ def main():
                           head_dim=args.d_model // 8,
                           d_ff=args.d_model * 3, vocab=64)
     tasks = ArithmeticTasks(prompt_len=10, max_operand=20, ops="+")
-    gen = GeneratorExecutor(cfg, tasks, n_prompts=16, n_per_prompt=4,
-                            max_new=6, temperature=1.0)
+    # actors behind handles: REPRO_TRANSPORT=proc moves generator and
+    # trainer into their own processes, same script
+    gen = spawn_actor(GeneratorExecutor, cfg, tasks, n_prompts=16,
+                      n_per_prompt=4, max_new=6, temperature=1.0)
     rew = RewardExecutor(n_per_prompt=4)
-    trn = TrainerExecutor(cfg, lr=1e-3, rho=4.0)
+    trn = spawn_actor(TrainerExecutor, cfg, lr=1e-3, rho=4.0)
     ctl = ExecutorController(
         [gen, rew, trn],
         [WeightsCommunicationChannel("policy_model", trn, gen),
@@ -61,19 +64,25 @@ def main():
 
     t0 = time.time()
     done = 0
-    while done < args.steps:
-        # repeated run() calls continue the controller: the generator and
-        # trainer threads are re-spawned, counters/queues persist
-        ctl.max_steps = min(args.eval_every, args.steps - done)
-        ctl.run()
-        done += ctl.max_steps
-        acc = evaluate(trn.state.params, cfg, tasks)
-        rew_tr = np.mean([h["mean_reward"]
-                          for h in trn.metrics_history[-10:]])
-        ov = ctl.stats.get("overlap_s", 0.0)
-        print(f"step {done:4d}  greedy_acc={acc:.3f}  "
-              f"train_reward={rew_tr:.3f}  gen/train_overlap={ov:.1f}s  "
-              f"elapsed={time.time()-t0:.0f}s", flush=True)
+    try:
+        while done < args.steps:
+            # repeated run() calls continue the controller: the generator
+            # and trainer threads are re-spawned, counters/queues persist
+            ctl.max_steps = min(args.eval_every, args.steps - done)
+            ctl.run()
+            done += ctl.max_steps
+            # handle endpoints instead of executor attributes: get_model /
+            # recent_metrics work identically for a process-backed trainer
+            # (and ship only the tail, not the whole growing history)
+            acc = evaluate(trn.call("get_model"), cfg, tasks)
+            rew_tr = np.mean([h["mean_reward"]
+                              for h in trn.call("recent_metrics", 10)])
+            ov = ctl.stats.get("overlap_s", 0.0)
+            print(f"step {done:4d}  greedy_acc={acc:.3f}  "
+                  f"train_reward={rew_tr:.3f}  gen/train_overlap={ov:.1f}s  "
+                  f"elapsed={time.time()-t0:.0f}s", flush=True)
+    finally:
+        close_all_actors()
 
 
 if __name__ == "__main__":

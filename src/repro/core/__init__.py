@@ -3,11 +3,23 @@ _EXPORTS = {
     "aipo_loss": "repro.core.aipo",
     "importance_weights": "repro.core.aipo",
     "token_logprobs": "repro.core.aipo",
+    "ActorDied": "repro.core.actors",
+    "ActorHandle": "repro.core.actors",
+    "InprocTransport": "repro.core.actors",
+    "ProcTransport": "repro.core.actors",
+    "RemoteActorError": "repro.core.actors",
+    "Transport": "repro.core.actors",
+    "as_handle": "repro.core.actors",
+    "close_all_actors": "repro.core.actors",
+    "spawn_actor": "repro.core.actors",
+    "serialize": "repro.core.wire",
+    "deserialize": "repro.core.wire",
     "CommType": "repro.core.channels",
     "CommunicationChannel": "repro.core.channels",
     "WeightsCommunicationChannel": "repro.core.channels",
     "ExecutorController": "repro.core.controller",
     "AsyncExecutorController": "repro.core.controller",
+    "SyncExecutorController": "repro.core.controller",
     "AdaptiveStalenessController": "repro.core.genpool",
     "FixedStaleness": "repro.core.genpool",
     "GeneratorPool": "repro.core.genpool",

@@ -1,0 +1,535 @@
+"""Placement-agnostic actor API: one single-controller contract for
+thread- and process-backed executors (paper Sec. 5.1).
+
+The paper's single-controller architecture has each executor own its
+model and submesh while the controller orchestrates them uniformly,
+regardless of where they physically run.  This module supplies the
+contract that makes placement a deployment knob instead of a code path:
+
+  * ``ActorHandle`` -- what the controller, channels and generator pool
+    hold instead of a raw ``Executor``.  Typed endpoints: ``call`` for
+    synchronous RPC (``init``/``step``/``get_output``/``emit_batch``...),
+    ``cast`` for fire-and-forget sends (``set_weights``), plus
+    ``healthy``/``join``/``close`` lifecycle.  ``call`` resolves plain
+    attributes too (``handle.call("weight_version")``), so the handle is
+    the full executor surface.
+  * ``Transport`` -- the pluggable hop under every handle endpoint and
+    every ``CommunicationChannel``/``StalenessBuffer`` payload hand-off.
+    ``prepare`` stages a channel payload toward the actor's devices
+    (resharding ``device_put``/DDMA for in-process submeshes; identity
+    for process-backed actors, whose staging *is* the serialization at
+    the pipe).
+
+Two transports with identical call/cast/error/close semantics:
+
+  * ``InprocTransport`` -- the executor lives in this process; endpoints
+    are direct method calls on the caller's thread.  The threaded
+    controller over inproc handles is bit-for-bit the pre-handle
+    behavior.
+  * ``ProcTransport`` -- the executor is constructed inside a *spawned*
+    subprocess with its own XLA client and GIL; endpoints travel a
+    duplex pipe as ``repro.core.wire`` payloads (pytree flatten +
+    dtype/shape headers, array bytes untouched).  Remote exceptions
+    re-raise on the caller with the remote traceback attached as
+    ``__cause__``; a dead child surfaces as ``ActorDied`` instead of a
+    hang; ``close()`` shuts the server down and joins the process,
+    mirroring the ``Closed`` unwinding of the in-process queues.
+
+Ordering guarantee both transports share: operations issued through one
+handle are executed in issue order (direct calls trivially; the pipe is
+FIFO and the server single-threaded), so ``cast("set_weights", ...)``
+followed by ``call("weight_version")`` always observes the cast.
+
+``spawn_actor(factory, *args, transport=..., **kwargs)`` builds an
+executor behind a handle; ``transport=None`` reads ``REPRO_TRANSPORT``
+(default ``inproc``), which is how the test suites and launcher flip an
+entire pipeline between placements without touching wiring code.
+"""
+from __future__ import annotations
+
+import multiprocessing as mp
+import os
+import pickle
+import threading
+import time
+import traceback
+import weakref
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.core import ddma
+from repro.core import wire
+
+
+class ActorDied(RuntimeError):
+    """The process backing an actor exited (or was killed): the handle
+    fails fast instead of blocking on a pipe nobody will ever write."""
+
+
+class RemoteActorError(RuntimeError):
+    """Carries a remote traceback.  When the remote exception itself is
+    picklable it re-raises as its original type with this as its
+    ``__cause__``; otherwise this is the raised error."""
+
+
+def _pack_exc(e: BaseException) -> Tuple[Optional[bytes], str]:
+    tb = "".join(traceback.format_exception(type(e), e, e.__traceback__))
+    try:
+        blob = pickle.dumps(e)
+    except Exception:
+        blob = None
+    return blob, tb
+
+
+def _unpack_exc(payload, actor: str) -> BaseException:
+    blob, tb = payload
+    cause = RemoteActorError(
+        f"remote traceback from actor '{actor}':\n{tb}")
+    if blob is not None:
+        try:
+            exc = pickle.loads(blob)
+        except Exception:
+            exc = None
+        if isinstance(exc, BaseException):
+            exc.__cause__ = cause
+            return exc
+    return cause
+
+
+# --------------------------------------------------------------- transports --
+
+def _describe_executor(ex, fallback_name: str) -> Dict[str, Any]:
+    """The actor identity/capability surface, computed next to the
+    executor (in-process or child-side) -- one definition, so inproc and
+    proc handles can never disagree about a capability flag."""
+    return {"name": getattr(ex, "name", fallback_name),
+            "role": getattr(ex, "role", "generic"),
+            "chunk_hooks": hasattr(ex, "begin_batch"),
+            "pinned_hooks": hasattr(ex, "begin_batch_pinned")}
+
+
+def _invoke(ex, method: str, args, kwargs):
+    """Endpoint dispatch: a callable attribute is invoked, a plain
+    attribute is read (args rejected) -- shared by both transports."""
+    attr = getattr(ex, method)
+    if callable(attr):
+        return attr(*args, **(kwargs or {}))
+    assert not args and not kwargs, \
+        f"'{method}' is an attribute, not an endpoint"
+    return attr
+
+def _payload_sharding(mesh, comm_type, x):
+    from repro.core.channels import CommType   # circular at import time only
+    if mesh is None:
+        return None
+    if comm_type == CommType.SCATTER and hasattr(x, "ndim") and x.ndim >= 1:
+        axes = mesh.axis_names
+        return NamedSharding(mesh, P(axes[0]))
+    return NamedSharding(mesh, P())            # replicated
+
+
+class Transport:
+    """Strategy hosting one actor and carrying its endpoints.
+
+    ``describe()`` returns static identity (``name``/``role``/
+    ``chunk_hooks``); ``mesh`` is the live submesh for in-process actors
+    (None for process-backed ones -- their mesh lives with them);
+    ``prepare`` stages a channel payload toward the actor's devices."""
+
+    def describe(self) -> Dict[str, Any]:
+        raise NotImplementedError
+
+    #: True when endpoints cross a process boundary (payloads serialized)
+    remote: bool = False
+
+    @property
+    def mesh(self):
+        return None
+
+    def call(self, method: str, args=(), kwargs=None,
+             timeout: Optional[float] = None):
+        raise NotImplementedError
+
+    def cast(self, method: str, args=(), kwargs=None):
+        raise NotImplementedError
+
+    def prepare(self, data, comm_type):
+        return data
+
+    def healthy(self) -> bool:
+        return True
+
+    def join(self, timeout: Optional[float] = None):
+        pass
+
+    def close(self):
+        pass
+
+
+class InprocTransport(Transport):
+    """The executor lives in this process; endpoints are direct method
+    calls on the caller's thread -- today's threaded controller, behind
+    the placement-agnostic contract."""
+
+    def __init__(self, executor):
+        self.executor = executor
+
+    def describe(self):
+        return _describe_executor(self.executor,
+                                  type(self.executor).__name__)
+
+    @property
+    def mesh(self):
+        return getattr(self.executor, "mesh", None)
+
+    def call(self, method, args=(), kwargs=None, timeout=None):
+        return _invoke(self.executor, method, args, kwargs)
+
+    def cast(self, method, args=(), kwargs=None):
+        self.call(method, args, kwargs)
+
+    def prepare(self, data, comm_type):
+        """Stage a channel payload onto this actor's submesh: DDMA/PS
+        reshard for weight payloads, resharding ``device_put`` for data
+        (the ICI/DCN zero-copy path); no-ops without a mesh."""
+        from repro.core.channels import CommType   # lazy: import cycle
+        mesh = self.mesh
+        if comm_type.is_weights:
+            if mesh is not None:
+                sharding = NamedSharding(mesh, P())
+                sync = (ddma.ddma_weight_sync
+                        if comm_type == CommType.DDMA_WEIGHTS_UPDATE
+                        else ddma.ps_weight_sync)
+                data = sync(data, sharding)
+            return data
+        if mesh is not None:
+            data = jax.tree.map(
+                lambda x: jax.device_put(
+                    x, _payload_sharding(mesh, comm_type, x))
+                if isinstance(x, (jax.Array, jnp.ndarray)) else x,
+                data)
+        return data
+
+
+# Child-side server: one message loop, one executor, FIFO execution.
+# Runs in a *spawned* interpreter, so it owns a fresh XLA client and GIL.
+def _actor_server(conn, factory, args, kwargs):
+    try:
+        ex = factory(*args, **kwargs)
+        conn.send_bytes(wire.serialize(
+            ("hello",
+             _describe_executor(ex, getattr(factory, "__name__", "?")))))
+    except BaseException as e:
+        conn.send_bytes(wire.serialize(("hello_err", _pack_exc(e))))
+        return
+    while True:
+        try:
+            msg = conn.recv_bytes()
+        except (EOFError, OSError):
+            return                           # parent went away
+        seq, kind, method, cargs, ckw = wire.deserialize(msg)
+        if kind == "shutdown":
+            conn.send_bytes(wire.serialize((seq, "ok", None)))
+            return
+        try:
+            result = _invoke(ex, method, cargs, ckw)
+            if kind == "call":
+                conn.send_bytes(wire.serialize((seq, "ok", result)))
+        except BaseException as e:
+            # call errors answer the caller; cast errors surface on the
+            # next call through this handle (FIFO pipe, status-first)
+            conn.send_bytes(wire.serialize((seq, "err", _pack_exc(e))))
+
+
+_LIVE_PROC_TRANSPORTS: "weakref.WeakSet[ProcTransport]" = weakref.WeakSet()
+
+
+class ProcTransport(Transport):
+    """Hosts the executor in a spawned subprocess with its own XLA client.
+
+    The factory and its arguments are shipped to the child (spawn
+    semantics: fresh interpreter, no inherited XLA state), the executor
+    is constructed there, and every endpoint travels the duplex pipe as
+    a ``wire`` payload.  A per-handle lock serializes request/response
+    pairs, so replies match requests without a reader thread; liveness
+    is polled while waiting, so a killed child raises ``ActorDied``
+    within ~100ms instead of hanging until the deadline."""
+
+    _POLL_S = 0.1
+    remote = True
+
+    def __init__(self, factory, args=(), kwargs=None, *,
+                 spawn_timeout: float = 180.0, call_timeout: float = 600.0):
+        self._ctx = mp.get_context("spawn")
+        self._conn, child_conn = self._ctx.Pipe(duplex=True)
+        self._proc = self._ctx.Process(
+            target=_actor_server,
+            args=(child_conn, factory, args, kwargs or {}),
+            daemon=True, name=f"actor-{getattr(factory, '__name__', '?')}")
+        self._lock = threading.RLock()
+        self._seq = 0
+        self._abandoned: set = set()     # seqs whose caller timed out
+        self._closed = False
+        self.call_timeout = call_timeout
+        self._proc.start()
+        child_conn.close()                   # parent keeps one end only
+        status, payload = self._recv(spawn_timeout, what="actor handshake")
+        if status == "hello_err":
+            self._shutdown_process()
+            raise _unpack_exc(payload, getattr(factory, "__name__", "?"))
+        assert status == "hello", f"bad handshake: {status!r}"
+        self._desc = payload
+        _LIVE_PROC_TRANSPORTS.add(self)
+
+    # ------------------------------------------------------------ plumbing --
+
+    def describe(self):
+        return dict(self._desc)
+
+    def _recv(self, timeout, what):
+        """One pipe message, polling child liveness while waiting."""
+        deadline = time.monotonic() + (timeout if timeout is not None
+                                       else self.call_timeout)
+        while True:
+            if self._conn.poll(self._POLL_S):
+                try:
+                    return wire.deserialize(self._conn.recv_bytes())
+                except (EOFError, OSError):
+                    raise self._died(what)
+            if not self._proc.is_alive():
+                # drain a reply that raced the exit before declaring death
+                if self._conn.poll(0):
+                    return wire.deserialize(self._conn.recv_bytes())
+                raise self._died(what)
+            if time.monotonic() > deadline:
+                raise TimeoutError(
+                    f"actor '{self.name}' gave no reply to {what} within "
+                    f"{timeout if timeout is not None else self.call_timeout}"
+                    f"s (pid {self._proc.pid} still alive)")
+
+    def _died(self, what) -> ActorDied:
+        self._closed = True
+        return ActorDied(
+            f"actor '{self.name}' process (pid {self._proc.pid}) exited "
+            f"with code {self._proc.exitcode} during {what}")
+
+    def _send(self, msg, what):
+        try:
+            self._conn.send_bytes(wire.serialize(msg))
+        except (BrokenPipeError, OSError):
+            raise self._died(what)
+
+    @property
+    def name(self):
+        return getattr(self, "_desc", {}).get("name", "?")
+
+    # ----------------------------------------------------------- endpoints --
+
+    def call(self, method, args=(), kwargs=None, timeout=None):
+        if self._closed:
+            raise ActorDied(f"actor '{self.name}' is closed")
+        with self._lock:
+            seq = self._seq
+            self._seq += 1
+            self._send((seq, "call", method, tuple(args), kwargs or {}),
+                       what=f"call '{method}'")
+            try:
+                rseq, status, payload = self._reply_for(
+                    seq, timeout, what=f"call '{method}'")
+            except TimeoutError:
+                # the child may still answer later: remember to discard
+                # that late reply so it is never handed to the next call
+                self._abandoned.add(seq)
+                raise
+        if status == "err":
+            raise _unpack_exc(payload, self.name)
+        return payload
+
+    def _reply_for(self, seq, timeout, what):
+        """The reply matching ``seq``, draining stale replies on the way.
+
+        Legitimate stale replies are (a) a failed *cast*'s error notice
+        (casts are silent on success) -- surfaced as this call's error,
+        but only after this call's own reply has been consumed, else the
+        next caller would read it (pipe desync) -- and (b) the late
+        reply to a call whose caller already timed out, which is
+        discarded."""
+        cast_error = None
+        while True:
+            rseq, status, payload = self._recv(timeout, what=what)
+            if rseq == seq:
+                if cast_error is not None:   # FIFO: the cast failed first
+                    return rseq, "err", cast_error
+                return rseq, status, payload
+            if rseq in self._abandoned:      # timed-out call's late reply
+                self._abandoned.discard(rseq)
+                continue
+            if status == "err" and rseq < seq:
+                if cast_error is None:
+                    cast_error = payload
+                continue
+            raise AssertionError(
+                f"actor '{self.name}': unexpected stale reply "
+                f"{rseq}/{status!r} while waiting for {seq}")
+
+    def cast(self, method, args=(), kwargs=None):
+        if self._closed:
+            raise ActorDied(f"actor '{self.name}' is closed")
+        with self._lock:
+            seq = self._seq
+            self._seq += 1
+            self._send((seq, "cast", method, tuple(args), kwargs or {}),
+                       what=f"cast '{method}'")
+
+    def healthy(self) -> bool:
+        return not self._closed and self._proc.is_alive()
+
+    def join(self, timeout: Optional[float] = None):
+        self._proc.join(timeout)
+
+    def close(self):
+        """Graceful shutdown -> join -> terminate -> kill.  Idempotent."""
+        if self._closed:
+            self._shutdown_process()
+            return
+        self._closed = True
+        try:
+            with self._lock:
+                seq = self._seq
+                self._seq += 1
+                self._send((seq, "shutdown", "", (), {}),
+                           what="shutdown")
+                self._reply_for(seq, 10.0, what="shutdown ack")
+        except (ActorDied, TimeoutError, OSError, AssertionError):
+            pass
+        self._shutdown_process()
+
+    def _shutdown_process(self):
+        if self._proc.is_alive():
+            self._proc.join(timeout=5.0)
+        if self._proc.is_alive():
+            self._proc.terminate()
+            self._proc.join(timeout=5.0)
+        if self._proc.is_alive():            # pragma: no cover - last resort
+            self._proc.kill()
+            self._proc.join(timeout=5.0)
+        self._conn.close()
+
+
+def close_all_actors():
+    """Close every live process-backed actor (test/teardown hygiene)."""
+    for t in list(_LIVE_PROC_TRANSPORTS):
+        t.close()
+
+
+# ------------------------------------------------------------------ handles --
+
+class ActorHandle:
+    """What the controller holds: typed endpoints over a Transport.
+
+    Identity is the handle object itself -- ``as_handle`` returns one
+    canonical handle per in-process executor, so channel/controller
+    membership checks (``ch.inbound in self.generators``) keep working.
+    """
+
+    def __init__(self, transport: Transport):
+        self.transport = transport
+        d = transport.describe()
+        self.name: str = d["name"]
+        self.role: str = d["role"]
+        self.chunk_hooks: bool = d.get("chunk_hooks", False)
+        self._pinned_hooks: bool = d.get("pinned_hooks", False)
+
+    @property
+    def mesh(self):
+        return self.transport.mesh
+
+    # -- typed endpoints ----------------------------------------------------
+
+    def call(self, method: str, *args, timeout: Optional[float] = None,
+             **kwargs):
+        """Synchronous RPC: invoke a method (or read an attribute) on the
+        actor and return the result; remote exceptions re-raise here."""
+        return self.transport.call(method, args, kwargs, timeout)
+
+    def cast(self, method: str, *args, **kwargs):
+        """Fire-and-forget send, FIFO-ordered with later calls through
+        this handle; errors surface on the next ``call``."""
+        self.transport.cast(method, args, kwargs)
+
+    def healthy(self) -> bool:
+        return self.transport.healthy()
+
+    def join(self, timeout: Optional[float] = None):
+        self.transport.join(timeout)
+
+    def close(self):
+        self.transport.close()
+
+    # -- chunk-stepping collaborator surface (RolloutScheduler) -------------
+    # The scheduler's executor contract is advance_chunk(job, state) with
+    # in-place job mutation.  Over a process boundary the mutation happens
+    # on the child's copy, so the handle routes through advance_chunk_rt
+    # (which returns the job) and mirrors the mutated fields back onto the
+    # caller's job object -- inproc this is the identity.  For remote
+    # actors the admission-time params snapshot is *pinned* actor-side
+    # (``begin_batch_pinned``): the job carries a small reference instead
+    # of round-tripping the whole weight pytree on every chunk.
+
+    def begin_batch(self, batch_index=None):
+        if self.transport.remote and self._pinned_hooks:
+            return self.call("begin_batch_pinned", batch_index)
+        return self.call("begin_batch", batch_index)
+
+    def advance_chunk(self, job, state):
+        job2, state = self.call("advance_chunk_rt", job, state)
+        if job2 is not job:
+            job.__dict__.update(job2.__dict__)
+        return state
+
+    def emit_batch(self, job, state):
+        return self.call("emit_batch", job, state)
+
+    def __repr__(self):
+        kind = type(self.transport).__name__
+        return f"<ActorHandle {self.name!r} role={self.role} via {kind}>"
+
+
+def as_handle(x) -> ActorHandle:
+    """Canonical handle for ``x``: handles pass through; a raw executor
+    gets one cached ``InprocTransport`` handle (identity-stable, so every
+    wiring site that names the same executor shares the same handle)."""
+    if isinstance(x, ActorHandle):
+        return x
+    h = getattr(x, "_actor_handle", None)
+    if h is None:
+        h = ActorHandle(InprocTransport(x))
+        try:
+            x._actor_handle = h
+        except (AttributeError, TypeError):  # pragma: no cover - slots etc.
+            pass
+    return h
+
+
+def spawn_actor(factory, *args, transport: Optional[str] = None,
+                spawn_timeout: float = 180.0, call_timeout: float = 600.0,
+                **kwargs) -> ActorHandle:
+    """Construct an executor behind an ``ActorHandle``.
+
+    ``transport`` is ``"inproc"`` (construct here, direct calls) or
+    ``"proc"`` (construct inside a spawned subprocess with its own XLA
+    client); ``None`` reads ``REPRO_TRANSPORT`` (default ``inproc``).
+    The factory and arguments must be picklable for ``proc``.
+    """
+    transport = transport or os.environ.get("REPRO_TRANSPORT", "inproc")
+    if transport == "inproc":
+        return as_handle(factory(*args, **kwargs))
+    if transport == "proc":
+        return ActorHandle(ProcTransport(
+            factory, args, kwargs, spawn_timeout=spawn_timeout,
+            call_timeout=call_timeout))
+    raise ValueError(
+        f"unknown transport {transport!r}: expected 'inproc' or 'proc'")

@@ -1,7 +1,7 @@
 """Communication channels (paper Sec. 5.1.2).
 
 A channel is a named, directed link between an outbound and an inbound
-executor with a communication type:
+*actor* with a communication type:
 
   BROADCAST -- outbound data replicated to the inbound executor's devices
   SCATTER   -- outbound data partitioned along the batch axis
@@ -9,33 +9,32 @@ executor with a communication type:
   DDMA_WEIGHTS_UPDATE -- model weights resharded trainer->generator via
                          direct device-to-device transfer (repro.core.ddma)
 
-With meshes attached, array payloads are moved with a resharding
-``jax.device_put`` (the ICI/DCN zero-copy path); without meshes (single-
-device dev box) transfers degrade gracefully to no-ops.
+Both ends are ``ActorHandle``s (raw executors are wrapped on the spot),
+and every hop goes through the inbound actor's pluggable ``Transport``:
+payload staging (``Transport.prepare``) is the resharding ``device_put``
+/ DDMA path for in-process submeshes and the identity for process-backed
+actors -- their staging *is* the wire serialization at the pipe -- and
+delivery lands through the handle's typed endpoints (``cast`` of
+``set_weights`` / ``put_input``).
 
 Channels are *queue-backed* so the two ends can live on different
-controller threads: ``send`` applies the transfer on the producer thread
-and enqueues, ``recv`` dequeues and delivers to the inbound executor's
-(thread-safe) port.  Weight payloads travel as ``(version, params)`` so
-the generator can pin the exact weight version the bounded-staleness
-schedule prescribes.  ``close()`` wakes any thread blocked in ``send`` or
-``recv`` with ``Closed`` -- the controller's deterministic shutdown path.
-The sequential controller paths keep using the direct
+controller threads: ``send`` stages the payload on the producer thread
+and enqueues, ``recv`` dequeues and delivers through the inbound handle.
+Weight payloads travel as ``(version, params)`` so the generator can pin
+the exact weight version the bounded-staleness schedule prescribes.
+``close()`` wakes any thread blocked in ``send`` or ``recv`` with
+``Closed`` -- the controller's deterministic shutdown path.  The
+sequential controller paths keep using the direct
 ``communicate``/``deliver`` calls.
 """
 from __future__ import annotations
 
 import enum
 import queue
-from dataclasses import dataclass, field
-from typing import Any, Optional
+from dataclasses import dataclass
+from typing import Optional
 
-import jax
-import jax.numpy as jnp
-from jax.sharding import NamedSharding, PartitionSpec as P
-
-from repro.core import ddma
-from repro.core.executor import Executor
+from repro.core.actors import ActorHandle, as_handle
 from repro.core.offpolicy import StalenessBuffer
 
 
@@ -52,24 +51,17 @@ class CommType(enum.Enum):
                         CommType.PS_WEIGHTS_UPDATE)
 
 
-def _payload_sharding(mesh, comm_type: CommType, x):
-    if mesh is None:
-        return None
-    if comm_type == CommType.SCATTER and hasattr(x, "ndim") and x.ndim >= 1:
-        axes = mesh.axis_names
-        return NamedSharding(mesh, P(axes[0]))
-    return NamedSharding(mesh, P())            # replicated
-
-
 @dataclass
 class CommunicationChannel:
     name: str
-    outbound: Executor
-    inbound: Executor
+    outbound: ActorHandle
+    inbound: ActorHandle
     comm_type: CommType
     capacity: int = 16          # queue depth bound for the threaded path
 
     def __post_init__(self):
+        self.outbound = as_handle(self.outbound)
+        self.inbound = as_handle(self.inbound)
         # a delay=0 StalenessBuffer is the closeable bounded FIFO: blocked
         # send/recv wake on notify (close() raises Closed into them), no
         # polling -- the same structure the controller's sample queue uses
@@ -78,41 +70,27 @@ class CommunicationChannel:
     # ------------------------------------------------------ transfer core --
 
     def _transfer(self, data):
-        """Move the payload toward the inbound executor's devices.  Runs on
-        the *producer* side so e.g. the DDMA reshard costs the trainer
-        thread, not the generator thread it feeds."""
-        mesh = self.inbound.mesh
-        if self.comm_type.is_weights:
-            if mesh is not None:
-                sharding = NamedSharding(mesh, P())
-                sync = (ddma.ddma_weight_sync
-                        if self.comm_type == CommType.DDMA_WEIGHTS_UPDATE
-                        else ddma.ps_weight_sync)
-                data = sync(data, sharding)
-            return data
-        if mesh is not None:
-            data = jax.tree.map(
-                lambda x: jax.device_put(
-                    x, _payload_sharding(mesh, self.comm_type, x))
-                if isinstance(x, (jax.Array, jnp.ndarray)) else x,
-                data)
-        return data
+        """Stage the payload toward the inbound actor through its
+        transport.  Runs on the *producer* side so e.g. the DDMA reshard
+        costs the trainer thread, not the generator thread it feeds."""
+        return self.inbound.transport.prepare(data, self.comm_type)
 
     def _hand_over(self, data, version: Optional[int]):
         if self.comm_type.is_weights:
-            self.inbound.set_weights(data, version=version)
+            self.inbound.cast("set_weights", data, version=version)
         else:
-            self.inbound.put_input(self.name, data)
+            self.inbound.cast("put_input", self.name, data)
 
     # ----------------------------------------------------- sequential path --
 
     def deliver(self, data, version: Optional[int] = None):
-        """Transfer + hand a given payload to the inbound executor."""
+        """Transfer + hand a given payload to the inbound actor."""
         self._hand_over(self._transfer(data), version)
 
     def communicate(self, version: Optional[int] = None):
         """Sequential path: pull from the outbound port and deliver."""
-        self.deliver(self.outbound.get_output(self.name), version=version)
+        self.deliver(self.outbound.call("get_output", self.name),
+                     version=version)
 
     # ------------------------------------------------------- threaded path --
 

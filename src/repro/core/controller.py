@@ -1,12 +1,20 @@
 """Single-controller RL loop (paper Sec. 5.1.3, Algorithm 1).
 
+The controller never touches an ``Executor`` directly: every stage is an
+``ActorHandle`` (``repro.core.actors``) whose typed endpoints -- ``call``
+for sync RPC, ``cast`` for fire-and-forget -- ride a pluggable transport.
+The same control script therefore drives thread-backed executors
+(``InprocTransport``, today's submeshes in one process) and
+process-backed ones (``ProcTransport``, each with its own XLA client)
+without a wiring change; raw executors passed in are wrapped on the spot.
+
 Two execution modes, matching Fig. 2:
 
   * mode="sync"  -- synchronous on-policy RL: generate -> score -> train,
     each stage blocking the next; weights synced every tick (the
     DeepSpeed-Chat-like baseline, up to the distributed placement).
   * mode="async" -- asynchronous off-policy RL with *real* threads
-    (``AsyncExecutorController``): a *pool* of generator executors (one
+    (``AsyncExecutorController``): a *pool* of generator actors (one
     worker thread each, batch indices interleaved round-robin) produces
     ``(weight_version, batch)`` pairs into a ``StalenessBuffer``; the
     reward/reference/trainer stages consume from it -- in batch order,
@@ -17,16 +25,23 @@ Two execution modes, matching Fig. 2:
     a straggler batch never delays the admission of its successors; see
     ``repro.core.genpool``.
 
+``ExecutorController(...)`` is the single construction entry point: it
+returns an ``AsyncExecutorController`` for mode="async" and the
+sequential ``SyncExecutorController`` otherwise, so constructor and
+validation errors (duplicate actor names, a pool handed to the
+sequential loop) surface through one code path.
+
 Bounded-staleness schedule (AIPO's assumption, paper Sec. 6): batch ``n``
 is generated with weights version ``max(0, n - staleness)`` and trained
 when the trainer has performed exactly ``n`` updates, so the trained
 sample is never more than ``staleness`` versions behind.  Versions are
 pinned *by count*, not by wall-clock arrival, which makes the threaded
 controller -- at pool size 1 and a fixed bound -- bit-for-bit identical
-to the sequential reference (``run_sequential``) at every staleness:
-threading changes wall-clock overlap, never numerics.  Passing an
-``AdaptiveStalenessController`` as ``adaptive`` lets the bound move
-online between its ``min_bound`` and ``max_bound``.
+to the sequential reference (``run_sequential``) at every staleness *and
+over either transport*: threading and placement change wall-clock
+overlap, never numerics.  Passing an ``AdaptiveStalenessController`` as
+``adaptive`` lets the bound move online between its ``min_bound`` and
+``max_bound``.
 
 ``history`` records, per trained step: the trainer metrics plus
 ``weight_version`` (of the batch's generator weights), ``trainer_version``,
@@ -38,7 +53,8 @@ producing ``generator``, ``queue_depth`` and per-executor idle time;
 Shutdown is deterministic: worker/consumer threads are non-daemon, and on
 completion, error or timeout the controller closes the sample queue and
 channels so any blocked peer unwinds with ``Closed`` and joins -- worker
-exceptions re-raise on the calling thread.
+exceptions (including re-raised remote exceptions and ``ActorDied`` from
+a killed child) re-raise on the calling thread.
 """
 from __future__ import annotations
 
@@ -48,8 +64,8 @@ import threading
 import time
 from typing import Dict, List, Optional
 
+from repro.core.actors import ActorHandle, as_handle
 from repro.core.channels import CommType, CommunicationChannel
-from repro.core.executor import Executor
 from repro.core.genpool import AdaptiveStalenessController, FixedStaleness, \
     GeneratorPool, PoolConfig
 from repro.core.offpolicy import Closed, StalenessBuffer
@@ -83,29 +99,38 @@ def _interval_overlap(a, b) -> float:
     return tot
 
 
-class ExecutorController:
-    """Sequential controller; constructing with mode="async" returns the
-    threaded ``AsyncExecutorController`` subclass."""
+def ExecutorController(executor_group, communication_channels, max_steps,
+                       mode: str = "async", **kwargs):
+    """Build the controller for ``mode``: the threaded
+    ``AsyncExecutorController`` for "async", the sequential
+    ``SyncExecutorController`` for "sync".  This factory is the one
+    construction path -- all validation (unique actor names, generator/
+    trainer presence) happens in the class initializers it delegates to,
+    never in a ``__new__`` shim."""
+    cls = AsyncExecutorController if mode == "async" \
+        else SyncExecutorController
+    return cls(executor_group, communication_channels, max_steps,
+               mode=mode, **kwargs)
 
-    def __new__(cls, executor_group=None, communication_channels=None,
-                max_steps=0, mode: str = "async", *args, **kwargs):
-        if cls is ExecutorController and mode == "async":
-            return super().__new__(AsyncExecutorController)
-        return super().__new__(cls)
 
-    def __init__(self, executor_group: List[Executor],
+class SyncExecutorController:
+    """Sequential single-controller loop over actor handles (also the
+    base class providing the plumbing the threaded subclass shares)."""
+
+    def __init__(self, executor_group: List[ActorHandle],
                  communication_channels: List[CommunicationChannel],
-                 max_steps: int, mode: str = "async", staleness: int = 1,
+                 max_steps: int, mode: str = "sync", staleness: int = 1,
                  checkpoint_every: int = 0, checkpoint_path: str = "",
                  timeout: float = 600.0,
                  pool: Optional[PoolConfig] = None,
                  adaptive: Optional[AdaptiveStalenessController] = None):
         assert mode in ("sync", "async")
-        names = [e.name for e in executor_group]
+        handles = [as_handle(e) for e in executor_group]
+        names = [h.name for h in handles]
         assert len(names) == len(set(names)), \
             f"executor names must be unique, got {names} (pool " \
             f"generators need explicit name= arguments)"
-        self.executors = {e.name: e for e in executor_group}
+        self.executors: Dict[str, ActorHandle] = {h.name: h for h in handles}
         self.channels = communication_channels
         self.max_steps = max_steps
         self.mode = mode
@@ -119,11 +144,11 @@ class ExecutorController:
         self.history: List[Dict] = []
         self.stats: Dict[str, float] = {}
         self.staleness_hist: collections.Counter = collections.Counter()
-        self.generators = [e for e in self.executors.values()
-                           if getattr(e, "role", "") == "generator"]
+        self.generators = [h for h in self.executors.values()
+                           if h.role == "generator"]
         self.generator = self.generators[0] if self.generators else None
-        self.trainer = next((e for e in self.executors.values()
-                             if getattr(e, "role", "") == "trainer"), None)
+        self.trainer = next((h for h in self.executors.values()
+                             if h.role == "trainer"), None)
         self._initialized = False
         self._tick = 0                       # trained steps == weight version
         self._weight_bufs: Dict[int, StalenessBuffer] = {}
@@ -154,25 +179,24 @@ class ExecutorController:
         for ch in (channels if channels is not None
                    else self._weight_channels()):
             buf = self._weight_buf(ch)
-            buf.push(tick, ch.outbound.get_output(ch.name))
+            buf.push(tick, ch.outbound.call("get_output", ch.name))
             released = buf.pop()
             if released is not None:
                 version, params = released
                 ch.deliver(params, version=version)
 
     def _pipeline(self):
-        """Walk data channels in declared order; each inbound executor steps
+        """Walk data channels in declared order; each inbound actor steps
         right after its channel delivers (gen -> reward -> trainer ...)."""
         for ch in self._data_channels():
             ch.communicate()
-            ch.inbound.step()
+            ch.inbound.call("step")
 
     def _record(self, step: int, step_time: float, *, weight_version: int,
                 queue_depth: int = 0, gen_idle_s: float = 0.0,
                 train_idle_s: float = 0.0, bound: Optional[int] = None,
                 generator: Optional[str] = None):
-        metrics = dict(self.trainer.metrics_history[-1]) if self.trainer \
-            and self.trainer.metrics_history else {}
+        metrics = self.trainer.call("last_metrics") if self.trainer else {}
         bound = self.staleness if bound is None else bound
         sample_staleness = step - weight_version
         if sample_staleness > bound:
@@ -193,18 +217,18 @@ class ExecutorController:
 
     def _maybe_checkpoint(self, step: int):
         if self.checkpoint_every and (step + 1) % self.checkpoint_every == 0:
-            for e in self.executors.values():
-                e.save_checkpoint(self.checkpoint_path, step)
+            for h in self.executors.values():
+                h.call("save_checkpoint", self.checkpoint_path, step)
 
     def init(self):
         if self._initialized:
             return
-        for e in self.executors.values():
-            e.init()
+        for h in self.executors.values():
+            h.call("init")
         # initial weights (version 0) go out with zero lag; the push seeds
         # each weight channel's StalenessBuffer for the delayed schedule
         for ch in self._weight_channels():
-            params = ch.outbound.get_output(ch.name)
+            params = ch.outbound.call("get_output", ch.name)
             buf = self._weight_buf(ch)
             buf.push(0, params)
             buf.pop()                       # delay=0 releases it; s>=1 keeps
@@ -224,15 +248,15 @@ class ExecutorController:
         for _ in range(self.max_steps):
             step = self._tick
             t0 = time.perf_counter()
-            for e in self.executors.values():
-                e.set_step(step)
+            for h in self.executors.values():
+                h.call("set_step", step)
             if step > 0:
                 self._sync_weights(step)
             if gen is not None:
-                gen.step()
+                gen.call("step")
             self._pipeline()
             self._tick += 1
-            wv = gen.weight_version if gen is not None else step
+            wv = gen.call("weight_version") if gen is not None else step
             self._record(step, time.perf_counter() - t0, weight_version=wv)
             self._maybe_checkpoint(step)
         wall = time.monotonic() - wall0
@@ -242,19 +266,21 @@ class ExecutorController:
         return self.history
 
 
-class AsyncExecutorController(ExecutorController):
+class AsyncExecutorController(SyncExecutorController):
     """Threaded asynchronous controller (the paper's Fig. 2b, for real).
 
     Producer side: a ``GeneratorPool`` of worker threads (one per
-    generator executor; batch indices interleaved round-robin), each
+    generator actor; batch indices interleaved round-robin), each
     waiting for the pinned weight version, chunk-scheduling its rollouts
     and pushing ``(version, batch)`` into the sample ``StalenessBuffer``
     the moment a batch completes.  Consumer thread: pops (reordering the
     multi-producer fan-in back into batch order), drives the
     reward/reference/trainer pipeline, publishes weights version ``n+1``
     to every worker's channel, and feeds queue-depth observations to the
-    staleness-bounds policy.  Exceptions on any thread stop and unwind the
-    others (via ``close()``) and re-raise in the caller; ``timeout``
+    staleness-bounds policy.  Whether a given actor computes on a thread
+    in this process or in its own spawned process is the handle's
+    transport, invisible here.  Exceptions on any thread stop and unwind
+    the others (via ``close()``) and re-raise in the caller; ``timeout``
     bounds every blocking wait (deadline propagation).
     """
 
@@ -295,11 +321,8 @@ class AsyncExecutorController(ExecutorController):
     # The sequential reference: identical schedule, identical numerics, one
     # thread, no overlap.  Used to verify the threaded path bit-for-bit.
     def run_sequential(self) -> List[Dict]:
-        assert len(self.generators) == 1, \
-            "run_sequential is the single-generator reference; a pool " \
-            "has no sequential counterpart"
         self._claim_entry_point("sequential")
-        return ExecutorController.run(self)
+        return SyncExecutorController.run(self)
 
     def shutdown(self):
         """Close the sample queue and all channels: every blocked thread
@@ -343,8 +366,8 @@ class AsyncExecutorController(ExecutorController):
 
     def _consumer_loop(self, first: int, last: int, stop: threading.Event,
                        intervals: list):
-        others = [e for e in self.executors.values()
-                  if e not in self.generators]
+        others = [h for h in self.executors.values()
+                  if h not in self.generators]
         pool_chs = self._pool_data_channels()
         pending: Dict[int, tuple] = {}       # out-of-order fan-in reorder
         for n in range(first, last):
@@ -361,8 +384,8 @@ class AsyncExecutorController(ExecutorController):
             depth = len(self._sample_queue) + len(pending)
             t0 = time.perf_counter()
             busy0 = time.monotonic()
-            for e in others:
-                e.set_step(n)
+            for h in others:
+                h.call("set_step", n)
             if n > 0:
                 # non-generator weight consumers get the same delayed
                 # delivery the sequential path gives them
@@ -372,7 +395,7 @@ class AsyncExecutorController(ExecutorController):
                     ch.deliver(item["snapshot"][ch.name])
                 else:
                     ch.communicate()
-                ch.inbound.step()
+                ch.inbound.call("step")
             # one transfer per distinct (payload, comm type, target mesh),
             # fanned out to every worker channel -- pool size must not
             # multiply the DDMA reshard cost on the consumer's hot path
@@ -382,7 +405,7 @@ class AsyncExecutorController(ExecutorController):
                        id(ch.inbound.mesh))
                 if key not in transferred:
                     transferred[key] = ch._transfer(
-                        ch.outbound.get_output(ch.name))
+                        ch.outbound.call("get_output", ch.name))
                 ch.send_transferred(transferred[key], version=n + 1,
                                     timeout=self.timeout)
             self._tick = n + 1

@@ -27,6 +27,19 @@ from repro.train.trainstep import TrainState, init_train_state, \
     make_train_step
 
 
+class PinnedParams:
+    """Marker standing in for ``RolloutJob.params`` when the admission-
+    time weight snapshot is *pinned* inside the generator actor
+    (``begin_batch_pinned``): the job round-trips a tiny reference over
+    the transport instead of the whole pytree; ``emit_batch`` releases
+    the pin."""
+
+    __slots__ = ("key",)
+
+    def __init__(self, key: int):
+        self.key = key
+
+
 class Executor:
     """Base executor (paper Sec. 5.1.1).
 
@@ -70,6 +83,26 @@ class Executor:
         with self._port_lock:
             return self._inputs.get(name, default)
 
+    def ping(self) -> str:
+        """Health endpoint: a live actor answers with its name."""
+        return self.name
+
+    def configure(self, **attrs):
+        """Set existing executor attributes by name -- the handle-API
+        replacement for poking attributes on a raw executor (a process-
+        backed actor's attributes live in its own process)."""
+        for k, v in attrs.items():
+            assert hasattr(self, k), \
+                f"executor '{self.name}' has no attribute {k!r}"
+            setattr(self, k, v)
+
+    def step_snapshot(self, names):
+        """``step()`` + output-port snapshot in one endpoint: a remote
+        caller pays one round-trip and one payload for a completed batch
+        instead of a discarded step() return plus a get_output refetch."""
+        self.step()
+        return {n: self.get_output(n) for n in names}
+
     def save_checkpoint(self, path: str, step: int):
         pass
 
@@ -103,6 +136,8 @@ class GeneratorExecutor(Executor):
         self.key = jax.random.PRNGKey(seed)
         self.params = None
         self.weight_version = -1        # version of self.params (-1 = unset)
+        self._pinned: Dict[int, Any] = {}    # admission snapshots by pin key
+        self._pin_seq = 0
 
     def set_weights(self, params, version: Optional[int] = None):
         """Receives DDMA'd trainer weights; applies generator quantization.
@@ -144,14 +179,38 @@ class GeneratorExecutor(Executor):
             max_new=self.max_new, chunk=chunk, n_chunks=n_chunks)
         return job, state
 
+    def begin_batch_pinned(self, batch_index: Optional[int] = None):
+        """``begin_batch`` with the params snapshot *pinned* executor-side
+        and replaced by a ``PinnedParams`` reference on the job, so a
+        remote scheduler round-trips kilobytes of job metadata per chunk
+        instead of the weight pytree.  ``emit_batch`` releases the pin;
+        a job abandoned before emit leaks its pin until the executor is
+        torn down (bounded by the pool's ``max_inflight``)."""
+        job, state = self.begin_batch(batch_index)
+        self._pin_seq += 1
+        self._pinned[self._pin_seq] = job.params
+        job.params = PinnedParams(self._pin_seq)
+        return job, state
+
+    def _job_params(self, job):
+        return self._pinned[job.params.key] \
+            if isinstance(job.params, PinnedParams) else job.params
+
     def advance_chunk(self, job, state):
         """One resumable ``rollout_chunk`` with the job's key discipline."""
         job.key, sub = jax.random.split(job.key)
-        state = rollout_chunk(job.params, self.cfg, state, sub,
+        state = rollout_chunk(self._job_params(job), self.cfg, state, sub,
                               n_steps=job.chunk,
                               temperature=self.temperature)
         job.chunks_done += 1
         return state
+
+    def advance_chunk_rt(self, job, state):
+        """``advance_chunk`` returning the (mutated) job alongside the
+        state: the round-trip form ``ActorHandle`` routes through so a
+        process-backed actor's job mutations (key split, chunk count)
+        reach the caller's copy."""
+        return job, self.advance_chunk(job, state)
 
     def emit_batch(self, job, state):
         """Finalize and publish the completed batch."""
@@ -164,8 +223,16 @@ class GeneratorExecutor(Executor):
             "answers": job.meta["answers"],
             "weight_version": job.weight_version,
         }
+        if isinstance(job.params, PinnedParams):
+            self._pinned.pop(job.params.key, None)
         self.set_output("completions", out)
         return out
+
+    def emit_batch_snapshot(self, job, state, names):
+        """``emit_batch`` + output-port snapshot in one endpoint (the
+        remote form: one round-trip, one batch payload)."""
+        self.emit_batch(job, state)
+        return {n: self.get_output(n) for n in names}
 
     def step(self):
         job, state = self.begin_batch()
@@ -300,6 +367,19 @@ class TrainerExecutor(Executor):
 
     def get_model(self):
         return self.state.params
+
+    def last_metrics(self) -> Dict[str, Any]:
+        """The most recent train-step metrics row (RPC-sized: the
+        controller records per step without shipping the whole
+        ``metrics_history`` across a transport)."""
+        return dict(self.metrics_history[-1]) if self.metrics_history \
+            else {}
+
+    def recent_metrics(self, n: int):
+        """The last ``n`` metrics rows -- the RPC-sized tail for eval
+        loops (``metrics_history`` itself grows with the run and would
+        cross the transport whole)."""
+        return [dict(m) for m in self.metrics_history[-max(0, n):]]
 
     def step(self):
         scored = self.get_input("completions_with_reward")

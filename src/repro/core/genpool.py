@@ -30,8 +30,13 @@ the threaded controller:
     trainer (sample queue repeatedly empty) buys throughput with a wider
     bound; a backlogged queue narrows it back toward on-policy.
 
-Process-level workers (separate hosts, serialized channel payloads) are
-the remaining step -- see ROADMAP.
+Workers drive their generator through an ``ActorHandle``
+(``repro.core.actors``), so each pool slot is placement-agnostic: an
+``InprocTransport`` actor computes on the worker's own thread (one
+process, shared XLA client) while a ``ProcTransport`` actor computes in
+its own spawned process -- the worker thread merely blocks on the RPC,
+and N process-backed generators plus the trainer genuinely overlap
+compute instead of sharing a GIL.
 """
 from __future__ import annotations
 
@@ -42,29 +47,34 @@ import time
 from dataclasses import dataclass
 from typing import Callable, Dict, List, Optional
 
+from repro.core.actors import spawn_actor
 from repro.core.offpolicy import PartialRolloutCache, StalenessBuffer
 from repro.rl.scheduler import RolloutScheduler
 
 
 def build_generator_pool(cfg, trainer, make_tasks, *, n_generators=1,
                          generator_cls=None, name="generator", seed=0,
-                         weight_port="policy_model", **gen_kwargs):
-    """The pool wiring convention, in one place: N generator executors
+                         weight_port="policy_model", transport=None,
+                         **gen_kwargs):
+    """The pool wiring convention, in one place: N generator actors
     (worker ``g`` named ``{name}{g}`` and seeded ``seed + g``; a pool of
     one keeps the bare ``name``) plus one versioned weight channel from
     the trainer into each.  ``make_tasks(g)`` builds worker ``g``'s task
-    source.  Returns ``(generators, weight_channels)``; the caller
-    declares data channels outbound from ``generators[0]`` -- they serve
-    the whole pool via per-item snapshots.
+    source.  ``transport`` picks the placement per generator ("inproc" /
+    "proc"; None reads ``REPRO_TRANSPORT``).  Returns
+    ``(generator_handles, weight_channels)``; the caller declares data
+    channels outbound from ``generators[0]`` -- they serve the whole
+    pool via per-item snapshots.
     """
     from repro.core.channels import WeightsCommunicationChannel
     from repro.core.executor import GeneratorExecutor
     generator_cls = generator_cls or GeneratorExecutor
     gens, chans = [], []
     for g in range(n_generators):
-        gen = generator_cls(
-            cfg, make_tasks(g), seed=seed + g,
-            name=name if n_generators == 1 else f"{name}{g}", **gen_kwargs)
+        gen = spawn_actor(
+            generator_cls, cfg, make_tasks(g), seed=seed + g,
+            name=name if n_generators == 1 else f"{name}{g}",
+            transport=transport, **gen_kwargs)
         gens.append(gen)
         chans.append(WeightsCommunicationChannel(weight_port, trainer, gen))
     return gens, chans
@@ -156,6 +166,25 @@ class AdaptiveStalenessController:
             self.bound_history.append(self._bound)
 
 
+class _SnapshotEmitter:
+    """Scheduler collaborator over an ``ActorHandle`` that fuses harvest
+    and port snapshot into one endpoint: ``emit_batch`` returns the
+    ``{channel name: output}`` snapshot the worker pushes, so a
+    process-backed generator ships each completed batch over the pipe
+    once instead of emit-return + ``get_output`` refetch."""
+
+    def __init__(self, gen, names):
+        self._gen = gen
+        self._names = list(names)
+
+    def advance_chunk(self, job, state):
+        return self._gen.advance_chunk(job, state)
+
+    def emit_batch(self, job, state):
+        return self._gen.call("emit_batch_snapshot", job, state,
+                              self._names)
+
+
 # ---------------------------------------------------------------- the pool --
 
 @dataclass
@@ -188,13 +217,16 @@ class GeneratorPool:
     """N generator worker loops fanning into one sample queue.
 
     Built by the async controller per ``run()``: the controller supplies
-    the generators, each generator's live weight channels, the pool-
-    outbound data channels (whose payloads travel by snapshot), the shared
-    sample queue, the staleness-bounds policy and its ``_await`` helper
-    (deadline + stop-event slicing).  ``loops(first, last, stop)`` hands
-    back one callable per worker for the controller to wrap in guarded
-    threads; each worker appends its busy intervals to ``intervals``
-    (thread-safe list appends) for the overlap stats.
+    the generator *handles*, each generator's live weight channels, the
+    pool-outbound data channels (whose payloads travel by snapshot), the
+    shared sample queue, the staleness-bounds policy and its ``_await``
+    helper (deadline + stop-event slicing).  ``loops(first, last, stop)``
+    hands back one callable per worker for the controller to wrap in
+    guarded threads; each worker appends its busy intervals to
+    ``intervals`` (thread-safe list appends) for the overlap stats.
+    Everything a worker does to its generator goes through the handle's
+    endpoints, so the same loop drives thread- and process-backed
+    actors.
     """
 
     def __init__(self, generators, channels_by_gen: Dict[str, list],
@@ -250,13 +282,13 @@ class GeneratorPool:
             lambda t: self.sample_queue.push(version, item, timeout=t),
             stop, f"room in sample queue for batch {item['batch_index']}")
 
-    def _snapshot(self, gen):
-        return {ch.name: gen.get_output(ch.name)
-                for ch in self.data_channels}
+    @property
+    def _snapshot_names(self):
+        return [ch.name for ch in self.data_channels]
 
     def _worker(self, idx: int, gen, first: int, last: int,
                 stop: threading.Event):
-        if self.config.chunk_scheduling and hasattr(gen, "begin_batch"):
+        if self.config.chunk_scheduling and gen.chunk_hooks:
             self._worker_chunked(idx, gen, first, last, stop)
         else:
             self._worker_monolithic(idx, gen, first, last, stop)
@@ -267,7 +299,7 @@ class GeneratorPool:
         for n in range(first + idx, last, len(self.generators)):
             idle = 0.0
             bound = self.bounds.bound()
-            while gen.weight_version < max(0, n - bound) and \
+            while gen.call("weight_version") < max(0, n - bound) and \
                     not stop.is_set():
                 t0 = time.monotonic()
                 if self._drain_one(gen, stop,
@@ -278,14 +310,16 @@ class GeneratorPool:
             if stop.is_set():
                 return
             t0 = time.monotonic()
-            gen.set_step(n)
-            gen.step()
+            gen.call("set_step", n)
+            # step + port snapshot in one endpoint: one round-trip, one
+            # batch payload for a process-backed generator
+            snapshot = gen.call("step_snapshot", self._snapshot_names)
             t1 = time.monotonic()
             self.intervals.append((t0, t1))
-            item = {"batch_index": n, "snapshot": self._snapshot(gen),
+            item = {"batch_index": n, "snapshot": snapshot,
                     "generator": gen.name, "bound": bound,
                     "gen_busy_s": t1 - t0, "gen_idle_s": idle,
-                    "_version": gen.weight_version}
+                    "_version": gen.call("weight_version")}
             if self._push(gen, stop, item) is None:
                 return
 
@@ -296,7 +330,8 @@ class GeneratorPool:
         cfg = self.config
         stride = len(self.generators)
         sched = RolloutScheduler(
-            gen, PartialRolloutCache(), early_exit=cfg.early_exit,
+            _SnapshotEmitter(gen, self._snapshot_names),
+            PartialRolloutCache(), early_exit=cfg.early_exit,
             chunk_delay=cfg.chunk_delay)
         todo = list(range(first + idx, last, stride))
         next_i = 0                          # next index into todo to admit
@@ -306,9 +341,9 @@ class GeneratorPool:
             if next_i < len(todo) and sched.pending() < cfg.max_inflight:
                 n = todo[next_i]
                 bound = self.bounds.bound()
-                if gen.weight_version >= max(0, n - bound):
+                if gen.call("weight_version") >= max(0, n - bound):
                     t0 = time.monotonic()
-                    gen.set_step(n)
+                    gen.call("set_step", n)
                     job, state = gen.begin_batch(n)
                     job.bound = bound
                     job.meta["idle_s"] = pending_idle
@@ -332,9 +367,9 @@ class GeneratorPool:
             self.intervals.append((t0, time.monotonic()))
             if done is None:
                 continue
-            job, _ = done
+            job, snapshot = done             # the emitter's port snapshot
             item = {"batch_index": job.batch_index,
-                    "snapshot": self._snapshot(gen),
+                    "snapshot": snapshot,
                     "generator": gen.name, "bound": job.bound,
                     "gen_busy_s": job.busy_s,
                     "gen_idle_s": job.meta.get("idle_s", 0.0),

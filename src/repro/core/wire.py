@@ -1,0 +1,110 @@
+"""Wire format for cross-process channel payloads.
+
+``ProcTransport`` hosts executors in spawned subprocesses, so every
+payload that crosses an actor boundary -- rollout batches, scored
+completions, versioned weight pytrees, RPC arguments -- must survive a
+pipe.  The format is the one the paper's DDMA layer implies for host
+transport: *pytree flatten + per-leaf dtype/shape header + raw buffers*,
+so array bytes move untouched (bit-for-bit, including bf16/int8/fp8
+leaves) and only the structure manifest goes through pickle.
+
+Layout of ``serialize(obj)``::
+
+    [8-byte big-endian manifest length]
+    [pickle((treedef, entries))]         # structure + per-leaf headers
+    [leaf 0 raw bytes][leaf 1 raw bytes]...
+
+``entries[i]`` is one of::
+
+    ("jarr", dtype_name, shape, nbytes)  # was a jax.Array
+    ("narr", dtype_name, shape, nbytes)  # was a numpy ndarray
+    ("raw", value)                       # non-array leaf, pickled inline
+
+Static pytree aux data (e.g. ``RolloutState.prompt_len``, registered as
+aux so jit sees a Python int) rides inside the pickled treedef, which is
+why a ``RolloutState`` round-trips with its aux intact.  ``deserialize``
+restores jax leaves as ``jnp.asarray`` of the exact bytes and numpy
+leaves as writable copies -- consumers like ``RewardExecutor`` mutate
+downstream views.
+
+Zero-size arrays (empty batches) and 0-d scalars round-trip: a leaf with
+``nbytes == 0`` reads as an empty buffer of the recorded dtype/shape.
+"""
+from __future__ import annotations
+
+import pickle
+import struct
+from typing import Any, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+_LEN = struct.Struct(">Q")
+
+
+def _is_jax_array(x) -> bool:
+    return isinstance(x, jax.Array)
+
+
+def _dtype_token(dtype: np.dtype) -> str:
+    """A string that reconstructs ``dtype`` exactly via ``np.dtype``.
+
+    ``dtype.str`` carries byte order and itemsize ('>i4', '<U3'), which
+    ``dtype.name`` drops (silent byte-swap corruption for non-native
+    arrays; unconstructible 'str96' for unicode) -- but extension dtypes
+    like ml_dtypes' bfloat16 only reconstruct from their *name* (their
+    ``.str`` is an anonymous void).  Prefer ``.str`` whenever it
+    round-trips, else fall back to ``.name``."""
+    try:
+        if np.dtype(dtype.str) == dtype:
+            return dtype.str
+    except TypeError:
+        pass
+    return dtype.name
+
+
+def serialize(obj: Any) -> bytes:
+    """Pytree -> bytes: structure manifest + concatenated leaf buffers."""
+    leaves, treedef = jax.tree_util.tree_flatten(obj)
+    entries: List[Tuple] = []
+    buffers: List[bytes] = []
+    for leaf in leaves:
+        if _is_jax_array(leaf) or isinstance(leaf, np.ndarray):
+            arr = np.asarray(leaf)
+            if not arr.flags.c_contiguous:
+                arr = np.ascontiguousarray(arr)
+            buf = arr.tobytes()
+            entries.append(("jarr" if _is_jax_array(leaf) else "narr",
+                            _dtype_token(arr.dtype), arr.shape, len(buf)))
+            buffers.append(buf)
+        else:
+            entries.append(("raw", leaf))
+    manifest = pickle.dumps((treedef, entries),
+                            protocol=pickle.HIGHEST_PROTOCOL)
+    return b"".join([_LEN.pack(len(manifest)), manifest] + buffers)
+
+
+def deserialize(data: bytes) -> Any:
+    """Bytes -> pytree; array leaves restored with their exact bytes."""
+    (n,) = _LEN.unpack_from(data, 0)
+    treedef, entries = pickle.loads(data[_LEN.size:_LEN.size + n])
+    offset = _LEN.size + n
+    leaves = []
+    for entry in entries:
+        if entry[0] == "raw":
+            leaves.append(entry[1])
+            continue
+        kind, dtype_name, shape, nbytes = entry
+        n_elems = 1
+        for s in shape:
+            n_elems *= s
+        # frombuffer with count/offset views the payload in place (no
+        # bytes-slice copy); the one unavoidable copy is jnp.asarray /
+        # .copy() -- frombuffer views are read-only and numpy consumers
+        # may mutate
+        arr = np.frombuffer(data, dtype=np.dtype(dtype_name),
+                            count=n_elems, offset=offset).reshape(shape)
+        offset += nbytes
+        leaves.append(jnp.asarray(arr) if kind == "jarr" else arr.copy())
+    return jax.tree_util.tree_unflatten(treedef, leaves)

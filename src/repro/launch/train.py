@@ -7,6 +7,12 @@ On a real TPU cluster this builds the production mesh, splits it into
 trainer/generator submeshes (theta fraction, paper Def. 7.4), and runs the
 single-controller loop.  On the CPU dev box (--smoke) it runs the reduced
 config on the local device -- same code path, same executors.
+
+``--transport proc`` hosts the trainer, every pool generator and (with
+--kl-coef) the frozen reference each in their own spawned process with a
+private XLA client -- the paper's fully-distributed placement, one flag
+away from the colocated thread run; the rule-based reward stays in the
+controller process (lightweight python, as in the paper's Fig. 1).
 """
 from __future__ import annotations
 
@@ -20,7 +26,8 @@ from repro import configs
 from repro.core import (AdaptiveStalenessController, CommType,
                         CommunicationChannel, ExecutorController,
                         RewardExecutor, TrainerExecutor,
-                        WeightsCommunicationChannel, build_generator_pool)
+                        WeightsCommunicationChannel, build_generator_pool,
+                        close_all_actors, spawn_actor)
 from repro.rl.data import ArithmeticTasks, VOCAB_SIZE
 
 
@@ -28,9 +35,9 @@ def build_controller(cfg, args):
     n_gens = max(1, args.n_generators)
     if args.mode == "sync" or args.sequential:
         assert n_gens == 1, "--n-generators > 1 needs mode=async threads"
-    trn = TrainerExecutor(cfg, lr=args.lr, rho=args.rho,
-                          clip_mode=args.clip_mode, kl_coef=args.kl_coef,
-                          seed=args.seed)
+    trn = spawn_actor(TrainerExecutor, cfg, lr=args.lr, rho=args.rho,
+                      clip_mode=args.clip_mode, kl_coef=args.kl_coef,
+                      seed=args.seed, transport=args.transport)
     gens, channels = build_generator_pool(
         cfg, trn,
         lambda g: ArithmeticTasks(prompt_len=args.prompt_len,
@@ -39,14 +46,14 @@ def build_controller(cfg, args):
         n_generators=n_gens, seed=args.seed, n_prompts=args.n_prompts,
         n_per_prompt=args.n_per_prompt, max_new=args.max_new,
         temperature=args.temp, quantize=args.quantize_generator,
-        chunk=args.rollout_chunk)
+        chunk=args.rollout_chunk, transport=args.transport)
     rew = RewardExecutor(n_per_prompt=args.n_per_prompt,
                          leave_one_out=args.rloo)
     executors = gens + [rew, trn]
     if args.kl_coef > 0:
         # paper Sec. 6: KL regularization against a frozen reference policy
         from repro.core import RefPolicyExecutor
-        ref = RefPolicyExecutor(cfg)
+        ref = spawn_actor(RefPolicyExecutor, cfg, transport=args.transport)
         executors.insert(len(gens), ref)
         channels += [
             WeightsCommunicationChannel("policy_model", trn, ref),
@@ -103,6 +110,13 @@ def main():
     ap.add_argument("--n-generators", type=int, default=1,
                     help="generator pool size (async mode): worker i "
                     "produces batches i, i+N, ... into the sample queue")
+    ap.add_argument("--transport", default=None,
+                    choices=["inproc", "proc"],
+                    help="actor placement: 'inproc' runs every executor "
+                    "on controller threads in this process; 'proc' hosts "
+                    "trainer/generators/reference each in a spawned "
+                    "subprocess with its own XLA client (default: "
+                    "$REPRO_TRANSPORT or inproc)")
     ap.add_argument("--adaptive-staleness", type=int, default=0,
                     help="if > 0, the max bound for the adaptive "
                     "staleness controller (starts at --staleness, moves "
@@ -126,8 +140,11 @@ def main():
     assert cfg.vocab >= VOCAB_SIZE, "config vocab too small for tokenizer"
 
     ctl = build_controller(cfg, args)
-    history = ctl.run_sequential() if args.sequential and \
-        args.mode == "async" else ctl.run()
+    try:
+        history = ctl.run_sequential() if args.sequential and \
+            args.mode == "async" else ctl.run()
+    finally:
+        close_all_actors()               # join process-backed executors
     for h in history:
         print({k: (round(v, 4) if isinstance(v, float) else v)
                for k, v in h.items()})

@@ -11,3 +11,12 @@ jax.config.update("jax_enable_x64", False)
 @pytest.fixture(scope="session")
 def rng():
     return jax.random.PRNGKey(0)
+
+
+@pytest.fixture(autouse=True)
+def _reap_proc_actors():
+    """Join every process-backed actor a test spawned (directly or via
+    REPRO_TRANSPORT=proc) so suites never leak children between tests."""
+    yield
+    from repro.core.actors import close_all_actors
+    close_all_actors()

@@ -1,6 +1,11 @@
 """Threaded async controller: bit-for-bit equivalence with the sequential
 reference, the bounded-staleness weight schedule, metrics recording,
-continuation across run() calls, and failure propagation."""
+continuation across run() calls, and failure propagation.
+
+Generators are constructed through ``spawn_actor``, so running this suite
+with ``REPRO_TRANSPORT=proc`` hosts every generator in its own spawned
+process (CI's multi-device job does exactly that) -- same assertions,
+different placement."""
 import threading
 import time
 
@@ -11,7 +16,8 @@ from repro.configs.llama_paper import smoke
 from repro.core import (AsyncExecutorController, CommType,
                         CommunicationChannel, ExecutorController,
                         GeneratorExecutor, RewardExecutor, StalenessBuffer,
-                        TrainerExecutor, WeightsCommunicationChannel)
+                        TrainerExecutor, WeightsCommunicationChannel,
+                        spawn_actor)
 from repro.rl.data import ArithmeticTasks
 
 # training metrics that must agree exactly between threaded and sequential
@@ -28,8 +34,8 @@ def build(seed=0, staleness=1, max_steps=4, mode="async", gen_cls=None,
     cfg = micro_cfg()
     tasks = ArithmeticTasks(prompt_len=8, max_operand=4, ops="+", seed=seed)
     gen_cls = gen_cls or GeneratorExecutor
-    gen = gen_cls(cfg, tasks, n_prompts=4, n_per_prompt=2, max_new=4,
-                  temperature=1.0, seed=seed, chunk=chunk)
+    gen = spawn_actor(gen_cls, cfg, tasks, n_prompts=4, n_per_prompt=2,
+                      max_new=4, temperature=1.0, seed=seed, chunk=chunk)
     rew = RewardExecutor(n_per_prompt=2)
     trn = TrainerExecutor(cfg, lr=5e-2, seed=seed)
     return ExecutorController(
@@ -148,8 +154,8 @@ def test_two_live_weight_channels_both_drained():
     version, or its bounded queue wedges the consumer's send."""
     cfg = micro_cfg()
     tasks = ArithmeticTasks(prompt_len=8, max_operand=4, ops="+", seed=2)
-    gen = GeneratorExecutor(cfg, tasks, n_prompts=4, n_per_prompt=2,
-                            max_new=4, seed=2)
+    gen = spawn_actor(GeneratorExecutor, cfg, tasks, n_prompts=4,
+                      n_per_prompt=2, max_new=4, seed=2)
     rew = RewardExecutor(n_per_prompt=2)
     trn = TrainerExecutor(cfg, lr=5e-2, seed=2)
     ctl = ExecutorController(
@@ -178,8 +184,8 @@ def test_kl_reference_pipeline_threaded_matches_sequential(staleness):
         cfg = micro_cfg()
         tasks = ArithmeticTasks(prompt_len=8, max_operand=4, ops="+",
                                 seed=seed)
-        gen = GeneratorExecutor(cfg, tasks, n_prompts=4, n_per_prompt=2,
-                                max_new=4, seed=seed, chunk=2)
+        gen = spawn_actor(GeneratorExecutor, cfg, tasks, n_prompts=4,
+                          n_per_prompt=2, max_new=4, seed=seed, chunk=2)
         ref = RefPolicyExecutor(cfg)
         rew = RewardExecutor(n_per_prompt=2)
         trn = TrainerExecutor(cfg, lr=5e-2, kl_coef=0.1, seed=seed)
@@ -238,8 +244,8 @@ def test_consumer_exception_unblocks_pool_and_joins():
 
     cfg = micro_cfg()
     tasks = ArithmeticTasks(prompt_len=8, max_operand=4, ops="+", seed=4)
-    gen = GeneratorExecutor(cfg, tasks, n_prompts=4, n_per_prompt=2,
-                            max_new=4, seed=4)
+    gen = spawn_actor(GeneratorExecutor, cfg, tasks, n_prompts=4,
+                      n_per_prompt=2, max_new=4, seed=4)
     rew = RewardExecutor(n_per_prompt=2)
     trn = _ExplodingTrainer(cfg, lr=5e-2, seed=4)
     ctl = ExecutorController(

@@ -8,8 +8,9 @@ from repro.configs.llama_paper import smoke
 from repro.core import (AdaptiveStalenessController, CommType,
                         CommunicationChannel, ExecutorController,
                         GeneratorExecutor, PartialRolloutCache, PoolConfig,
-                        RewardExecutor, TrainerExecutor,
-                        WeightsCommunicationChannel, build_generator_pool)
+                        RewardExecutor, SyncExecutorController,
+                        TrainerExecutor, WeightsCommunicationChannel,
+                        build_generator_pool)
 from repro.rl.data import ArithmeticTasks
 from repro.rl.scheduler import RolloutJob, RolloutScheduler
 
@@ -104,10 +105,13 @@ def test_duplicate_generator_names_rejected():
 
 def test_sequential_run_rejects_pool():
     """The sequential loop drives one generator; a pool slipping through
-    would silently step only worker 0."""
+    would silently step only worker 0 -- both the base ``run`` and the
+    async ``run_sequential`` funnel through the same check."""
     ctl = build_pool(n_gens=2, max_steps=1)
     with pytest.raises(AssertionError, match="pool"):
-        ExecutorController.run(ctl)          # the base sequential loop
+        SyncExecutorController.run(ctl)      # the base sequential loop
+    with pytest.raises(AssertionError, match="pool"):
+        ctl.run_sequential()
 
 
 # ----------------------------------------------------- adaptive staleness --
