@@ -1,0 +1,140 @@
+"""Weight-sync fabric benchmark -> BENCH_fabric.json.
+
+Three measurements, matching the fabric's three claims (ISSUE 5 /
+paper Sec. 5.2):
+
+  * ``payload`` -- one-way weight-publication throughput of each remote
+    transport for a weights-sized pytree: ``proc`` (every byte copied
+    through an OS pipe), ``shm`` (bytes scattered once into a
+    shared-memory ring slot, header over the pipe), ``socket``
+    (localhost TCP).  The acceptance bar: shm bytes/s strictly above
+    the proc pipe path.
+  * ``scatter`` -- ``wire.serialize`` (flatten + join allocation) vs
+    ``wire.plan`` + ``serialize_into`` a preallocated buffer (the shm
+    write path): the serialization toll with and without staging
+    copies.
+  * ``overlap`` -- the end-to-end async pipeline over ``shm`` with the
+    fabric's background publisher vs the blocking consumer fan-out:
+    publish wall-clock, the fraction hidden behind generation
+    (``publish_overlap_s / publish_s``), and trainer/generator idle
+    under each.  The acceptance bar: a nonzero overlap fraction for
+    the fabric.
+"""
+import json
+import os
+import time
+
+import numpy as np
+
+from benchmarks.common import build_pipeline, emit, tiny_cfg
+from repro.core import Executor, close_all_actors, spawn_actor
+from repro.core import wire
+
+PAYLOAD_MB = 16
+CASTS = 6
+REPEATS = 3
+
+
+def weights_tree(mb: int):
+    rng = np.random.default_rng(0)
+    n = mb * (1 << 20) // 4 // 8
+    return {f"layer{i}": {"w": rng.standard_normal(n).astype(np.float32)}
+            for i in range(8)}
+
+
+def bench_payload(transport: str, tree, mb: float) -> dict:
+    """One-way publication throughput: N ``stage_weights`` casts (the
+    fabric's data-plane write) closed by a call barrier."""
+    h = spawn_actor(Executor, f"sink-{transport}", transport=transport)
+    try:
+        # warm both directions (spawn, first attach/grow of shm slots)
+        h.cast("stage_weights", tree, 0)
+        h.call("staged_versions")
+        best = None
+        for _ in range(REPEATS):
+            t0 = time.perf_counter()
+            for _ in range(CASTS):
+                h.cast("stage_weights", tree, 0)   # overwrites one slot
+            h.call("staged_versions")              # barrier: all applied
+            dt = time.perf_counter() - t0
+            best = dt if best is None else min(best, dt)
+        return {"payload_mb": mb, "casts": CASTS,
+                "mb_per_s": mb * CASTS / best, "wall_s": best}
+    finally:
+        h.close()
+
+
+def bench_scatter(tree, mb: float) -> dict:
+    ser = scat = None
+    planned = wire.plan(tree)
+    buf = bytearray(planned.size)
+    for _ in range(REPEATS):
+        t0 = time.perf_counter()
+        blob = wire.serialize(tree)
+        ser = min(ser or 1e9, time.perf_counter() - t0)
+        t0 = time.perf_counter()
+        wire.serialize_into(wire.plan(tree), buf)
+        scat = min(scat or 1e9, time.perf_counter() - t0)
+    assert bytes(buf) == blob, "scatter layout must match serialize"
+    return {"payload_mb": mb, "serialize_mb_s": mb / ser,
+            "scatter_into_mb_s": mb / scat}
+
+
+def bench_overlap(overlap: bool) -> dict:
+    os.environ.setdefault("REPRO_SHM_THRESHOLD", str(1 << 12))
+    ctl = build_pipeline(tiny_cfg(n_layers=1, d_model=64, d_ff=128,
+                                  n_heads=2, n_kv_heads=2, head_dim=32),
+                         mode="async", staleness=2, max_steps=2,
+                         n_prompts=4, n_per_prompt=2, max_new=6,
+                         transport="shm")
+    ctl.overlap_publish = overlap
+    ctl._fabric.overlap = overlap
+    try:
+        ctl.run()                        # warm the jit caches / children
+        ctl.max_steps = 8
+        ctl.run()                        # measured continuation
+        s = dict(ctl.stats)
+        s["publish_overlap_frac"] = (s["publish_overlap_s"] /
+                                     max(s["publish_s"], 1e-9))
+        return {k: round(v, 4) for k, v in s.items()}
+    finally:
+        close_all_actors()
+
+
+def main() -> None:
+    tree = weights_tree(PAYLOAD_MB)
+    mb = sum(leaf["w"].nbytes for leaf in tree.values()) / (1 << 20)
+    payload = {t: bench_payload(t, tree, mb)
+               for t in ("proc", "shm", "socket")}
+    report = {
+        "payload": payload,
+        "scatter": bench_scatter(tree, mb),
+        "overlap": {"fabric": bench_overlap(True),
+                    "blocking_fanout": bench_overlap(False)},
+        "shm_vs_pipe_speedup":
+            payload["shm"]["mb_per_s"] / payload["proc"]["mb_per_s"],
+        # the acceptance flags: shm beats the pipe for weight-sized
+        # payloads, and the fabric hides publication behind generation
+        "shm_beats_pipe":
+            bool(payload["shm"]["mb_per_s"] > payload["proc"]["mb_per_s"]),
+    }
+    report["publish_overlap_nonzero"] = bool(
+        report["overlap"]["fabric"]["publish_overlap_frac"] > 0.0)
+    out = os.environ.get("REPRO_FABRIC_JSON", "BENCH_fabric.json")
+    with open(out, "w") as f:
+        json.dump(report, f, indent=2)
+    for t, r in payload.items():
+        emit(f"fabric_payload_{t}", r["wall_s"] * 1e6 / r["casts"],
+             f"{r['mb_per_s']:.0f}MB/s")
+    emit("fabric_shm_vs_pipe", 0.0,
+         f"speedup={report['shm_vs_pipe_speedup']:.2f}x;"
+         f"beats_pipe={report['shm_beats_pipe']}")
+    emit("fabric_publish_overlap", 0.0,
+         f"fabric={report['overlap']['fabric']['publish_overlap_frac']:.2f};"
+         f"blocking="
+         f"{report['overlap']['blocking_fanout']['publish_overlap_frac']:.2f}")
+    emit("fabric_json", 0.0, out)
+
+
+if __name__ == "__main__":
+    main()

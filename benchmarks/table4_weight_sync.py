@@ -1,54 +1,100 @@
 """Paper Table 4: weight-synchronization time, DDMA vs parameter-server.
 
-Measured on this box: resharding ``device_put`` (DDMA path, device-to-
-device) vs host-staged gather+scatter (the OpenRLHF-style slow path), over
-growing model sizes.  Derived column projects the DDMA path to paper scale
-(405B bf16 over ICI at 50 GB/s/link, fully distributed => time ~ shard
-bytes / link bw, the linear-scaling claim behind Table 4's 2.31 s).
+Run under the CI multi-device smoke job's 8 emulated devices this builds
+a *real trainer/generator mesh pair* (two disjoint (1, 4) submeshes,
+paper Def. 7.4's theta split): params start sharded across the trainer
+submesh, and each sync path moves them onto the generator submesh --
+resharding ``device_put`` (the DDMA path, device-to-device) vs
+host-staged gather+scatter (the OpenRLHF-style slow path).  On a
+single-device box both paths degrade to host memcpy and the run is
+labelled as such.  ``timed_sync`` warms up (layout/compilation) and
+syncs inputs before t0, so the numbers measure transfer, not tracing.
+
+Emits CSV lines plus ``BENCH_table4.json`` recording the mesh shapes
+alongside every timing.  The derived column projects the DDMA path to
+paper scale (405B bf16 over ICI at 50 GB/s/link, fully distributed =>
+time ~ shard bytes / link bw, the linear-scaling claim behind Table 4's
+2.31 s).
 """
 from __future__ import annotations
+
+import json
+import os
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-from benchmarks.common import emit, timeit
+from benchmarks.common import emit
 from repro.core import ddma
-from repro.launch.mesh import make_dev_mesh
+from repro.launch.mesh import make_dev_mesh, trainer_generator_submeshes
 
 
-def params_of_size(n_floats: int, key=0):
-    n = max(n_floats // 4, 1)
+def params_of_size(n_floats: int, lanes: int, key=0):
+    """Four 1-D fp32 leaves, sized to a multiple of ``lanes`` so a
+    model-axis sharding divides them evenly."""
+    n = max(n_floats // 4 // lanes, 1) * lanes
     ks = jax.random.split(jax.random.PRNGKey(key), 4)
     return {f"w{i}": jax.random.normal(ks[i], (n,), jnp.float32)
             for i in range(4)}
 
 
+def _mesh_desc(mesh) -> dict:
+    return {"shape": [int(mesh.shape[a]) for a in mesh.axis_names],
+            "axes": list(mesh.axis_names),
+            "n_devices": int(np.prod([mesh.shape[a]
+                                      for a in mesh.axis_names]))}
+
+
 def main():
-    mesh = make_dev_mesh()
-    sh = NamedSharding(mesh, P())
     n_dev = len(jax.devices())
-    note = ("note=single-device: both paths are host memcpy; the TPU "
-            "difference is structural (no host staging)" if n_dev == 1 else
-            f"note={n_dev}-device mesh (emulated on CPU under "
-            "xla_force_host_platform_device_count): DDMA replicates "
-            "device-to-device, PS stages through one host copy")
+    report = {"n_devices": n_dev, "sizes_mb": [], "results": {}}
+    if n_dev >= 2:
+        # the real pair: disjoint trainer/generator submeshes; trainer
+        # shards along its model axis, the sync reshards onto the
+        # generator's model axis -- every leaf actually changes devices
+        t_mesh, g_mesh = trainer_generator_submeshes(0.5)
+        src_sh = NamedSharding(t_mesh, P("model"))
+        dst_sh = NamedSharding(g_mesh, P("model"))
+        lanes = int(t_mesh.shape["model"]) * int(g_mesh.shape["model"])
+        report["trainer_mesh"] = _mesh_desc(t_mesh)
+        report["generator_mesh"] = _mesh_desc(g_mesh)
+        note = (f"trainer_mesh={report['trainer_mesh']['shape']};"
+                f"generator_mesh={report['generator_mesh']['shape']};"
+                "disjoint submeshes, trainer-sharded -> generator-sharded")
+    else:
+        mesh = make_dev_mesh()
+        src_sh = dst_sh = NamedSharding(mesh, P())
+        lanes = 1
+        report["trainer_mesh"] = report["generator_mesh"] = _mesh_desc(mesh)
+        note = ("single-device: both paths are host memcpy; the TPU "
+                "difference is structural (no host staging)")
     for mb in (1, 8, 64):
-        params = params_of_size(mb * 1_000_000 // 4)
-        t_ddma, _ = ddma.timed_sync(ddma.ddma_weight_sync, params, sh)
-        t_ps, _ = ddma.timed_sync(ddma.ps_weight_sync, params, sh)
+        params = jax.device_put(params_of_size(mb * 1_000_000 // 4, lanes),
+                                src_sh)
+        t_ddma, _ = ddma.timed_sync(ddma.ddma_weight_sync, params, dst_sh)
+        t_ps, _ = ddma.timed_sync(ddma.ps_weight_sync, params, dst_sh)
+        report["sizes_mb"].append(mb)
+        report["results"][f"{mb}MB"] = {
+            "ddma_s": t_ddma, "ps_s": t_ps,
+            "ratio_ps_over_ddma": t_ps / max(t_ddma, 1e-9)}
         emit(f"table4/ddma_{mb}MB", t_ddma * 1e6,
              f"ps={t_ps*1e6:.0f}us;ratio={t_ps/max(t_ddma,1e-9):.1f}x;"
-             + note)
+             f"note={note}")
     # paper-scale projection: 405B bf16 = 810GB spread over 512 generator
     # chips => ~1.6 GB/chip; at 50 GB/s/link with direct ICI transfers and
     # full parallelism the wire time is ~32 ms; the paper measures 2.31 s
     # end-to-end (layout + rendezvous overheads dominate the wire time).
     shard_gb = 405e9 * 2 / 512 / 1e9
     wire_s = shard_gb / 50.0
+    report["projected_405b_wire_s"] = wire_s
     emit("table4/projected_405b_wire", wire_s * 1e6,
          "paper_measured=2.31s;linear_in_shard_bytes")
+    out = os.environ.get("REPRO_TABLE4_JSON", "BENCH_table4.json")
+    with open(out, "w") as f:
+        json.dump(report, f, indent=2)
+    emit("table4/json", 0.0, out)
 
 
 if __name__ == "__main__":

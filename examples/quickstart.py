@@ -46,6 +46,11 @@ def main():
 
     try:
         history = controller.run()
+        # recent_metrics is the RPC-sized tail: works identically for a
+        # process-backed trainer without shipping its whole metrics
+        # history -- fetched before close_all_actors() tears the
+        # transport down
+        tail = trainer.call("recent_metrics", 5)
     finally:
         close_all_actors()               # join process-backed executors
     print(f"{'step':>4} {'reward':>7} {'loss':>8} {'ratio':>6} "
@@ -58,6 +63,11 @@ def main():
     print(f"wall={s['wall_s']:.1f}s  gen/train overlap={s['overlap_s']:.1f}s "
           f"(the controller really does run the generator and trainer "
           f"actors concurrently)")
+    print(f"weight publication: {s['publish_s']:.2f}s total, "
+          f"{s['publish_overlap_s']:.2f}s hidden behind generation, "
+          f"consumer waited {s['publish_wait_s']*1e3:.0f}ms")
+    print("last-5 train reward:",
+          round(sum(m["mean_reward"] for m in tail) / max(len(tail), 1), 3))
 
 
 if __name__ == "__main__":

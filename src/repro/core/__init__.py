@@ -5,17 +5,23 @@ _EXPORTS = {
     "token_logprobs": "repro.core.aipo",
     "ActorDied": "repro.core.actors",
     "ActorHandle": "repro.core.actors",
+    "DeviceSpec": "repro.core.actors",
     "InprocTransport": "repro.core.actors",
     "ProcTransport": "repro.core.actors",
     "RemoteActorError": "repro.core.actors",
+    "ShmTransport": "repro.core.actors",
+    "SocketTransport": "repro.core.actors",
     "Transport": "repro.core.actors",
     "as_handle": "repro.core.actors",
     "close_all_actors": "repro.core.actors",
+    "serve_actor_host": "repro.core.actors",
     "spawn_actor": "repro.core.actors",
     "serialize": "repro.core.wire",
     "deserialize": "repro.core.wire",
+    "WeightFabric": "repro.core.fabric",
     "CommType": "repro.core.channels",
     "CommunicationChannel": "repro.core.channels",
+    "StagedWeights": "repro.core.channels",
     "WeightsCommunicationChannel": "repro.core.channels",
     "ExecutorController": "repro.core.controller",
     "AsyncExecutorController": "repro.core.controller",

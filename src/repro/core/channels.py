@@ -38,6 +38,23 @@ from repro.core.actors import ActorHandle, as_handle
 from repro.core.offpolicy import StalenessBuffer
 
 
+class StagedWeights:
+    """Channel marker for a weight payload the fabric already *staged*
+    actor-side (``stage_weights`` over the data plane): delivery through
+    the channel is a tiny ``commit_weights`` cast -- the staleness-legal
+    slot flip -- instead of the payload itself.  ``on_commit`` (if set)
+    tells the fabric the subscriber released a slot."""
+
+    __slots__ = ("version", "on_commit")
+
+    def __init__(self, version: int, on_commit=None):
+        self.version = version
+        self.on_commit = on_commit
+
+    def __repr__(self):
+        return f"<StagedWeights v{self.version}>"
+
+
 class CommType(enum.Enum):
     BROADCAST = "broadcast"
     SCATTER = "scatter"
@@ -77,7 +94,14 @@ class CommunicationChannel:
 
     def _hand_over(self, data, version: Optional[int]):
         if self.comm_type.is_weights:
-            self.inbound.cast("set_weights", data, version=version)
+            if isinstance(data, StagedWeights):
+                # payload already lives in the actor's staged slot: the
+                # commit is the cheap pointer flip at this boundary
+                self.inbound.cast("commit_weights", data.version)
+                if data.on_commit is not None:
+                    data.on_commit()
+            else:
+                self.inbound.cast("set_weights", data, version=version)
         else:
             self.inbound.cast("put_input", self.name, data)
 

@@ -66,6 +66,7 @@ from typing import Dict, List, Optional
 
 from repro.core.actors import ActorHandle, as_handle
 from repro.core.channels import CommType, CommunicationChannel
+from repro.core.fabric import WeightFabric, payload_key
 from repro.core.genpool import AdaptiveStalenessController, FixedStaleness, \
     GeneratorPool, PoolConfig
 from repro.core.offpolicy import Closed, StalenessBuffer
@@ -123,7 +124,8 @@ class SyncExecutorController:
                  checkpoint_every: int = 0, checkpoint_path: str = "",
                  timeout: float = 600.0,
                  pool: Optional[PoolConfig] = None,
-                 adaptive: Optional[AdaptiveStalenessController] = None):
+                 adaptive: Optional[AdaptiveStalenessController] = None,
+                 overlap_publish: bool = True):
         assert mode in ("sync", "async")
         handles = [as_handle(e) for e in executor_group]
         names = [h.name for h in handles]
@@ -141,6 +143,7 @@ class SyncExecutorController:
         self.timeout = timeout
         self.pool_config = pool
         self.adaptive = adaptive
+        self.overlap_publish = overlap_publish
         self.history: List[Dict] = []
         self.stats: Dict[str, float] = {}
         self.staleness_hist: collections.Counter = collections.Counter()
@@ -317,6 +320,20 @@ class AsyncExecutorController(SyncExecutorController):
             # in-flight window below 2*bound + pool size, so make sure the
             # channel queue can hold it
             ch.resize(max(ch.capacity, 2 * max_bound + n_gens + 4))
+        # the weight-sync fabric: the consumer snapshots the trainer port
+        # synchronously (so a later step can never leak into a version)
+        # and hands publication -- reshard + shm/socket staging -- to the
+        # fabric's publisher thread, overlapped with ongoing generation.
+        # The staged-slot bound matches the channel capacity (the
+        # schedule's in-flight window): in steady state a worker commits
+        # one version per admission so slots stay double-buffered, but at
+        # the end of a run the versions trailing a worker's last batch
+        # stay staged -- exactly like the old payload queue -- until a
+        # continuation run drains them; a tighter bound would park the
+        # publisher against commits that only the next run can perform.
+        self._fabric = WeightFabric(
+            self._live_weight_channels, overlap=self.overlap_publish,
+            max_staged=2 * max_bound + n_gens + 4, timeout=self.timeout)
 
     # The sequential reference: identical schedule, identical numerics, one
     # thread, no overlap.  Used to verify the threaded path bit-for-bit.
@@ -325,12 +342,13 @@ class AsyncExecutorController(SyncExecutorController):
         return SyncExecutorController.run(self)
 
     def shutdown(self):
-        """Close the sample queue and all channels: every blocked thread
-        unwinds with ``Closed``.  Idempotent; the controller cannot run
-        again afterwards."""
+        """Close the sample queue, all channels and the weight fabric:
+        every blocked thread unwinds with ``Closed``.  Idempotent; the
+        controller cannot run again afterwards."""
         self._sample_queue.close()
         for ch in self.channels:
             ch.close()
+        self._fabric.close()
 
     def _claim_entry_point(self, which: str):
         """Threaded and sequential runs keep weight state in different
@@ -365,7 +383,7 @@ class AsyncExecutorController(SyncExecutorController):
                 if ch.outbound in self.generators]
 
     def _consumer_loop(self, first: int, last: int, stop: threading.Event,
-                       intervals: list):
+                       intervals: list, publish_wait: list):
         others = [h for h in self.executors.values()
                   if h not in self.generators]
         pool_chs = self._pool_data_channels()
@@ -396,18 +414,19 @@ class AsyncExecutorController(SyncExecutorController):
                 else:
                     ch.communicate()
                 ch.inbound.call("step")
-            # one transfer per distinct (payload, comm type, target mesh),
-            # fanned out to every worker channel -- pool size must not
-            # multiply the DDMA reshard cost on the consumer's hot path
-            transferred: Dict[tuple, object] = {}
+            # weight publication goes to the fabric: snapshot the source
+            # port *now* (synchronously -- the next trainer step must
+            # not leak into version n+1), then let the publisher thread
+            # run the DDMA reshard and the shm/socket staging overlapped
+            # with ongoing generation
+            payloads: Dict[tuple, object] = {}
             for ch in self._live_weight_channels:
-                key = (ch.name, id(ch.outbound), ch.comm_type,
-                       id(ch.inbound.mesh))
-                if key not in transferred:
-                    transferred[key] = ch._transfer(
-                        ch.outbound.call("get_output", ch.name))
-                ch.send_transferred(transferred[key], version=n + 1,
-                                    timeout=self.timeout)
+                key = payload_key(ch)
+                if key not in payloads:
+                    payloads[key] = ch.outbound.call("get_output", ch.name)
+            tp0 = time.perf_counter()
+            self._fabric.publish(n + 1, payloads)
+            publish_wait.append(time.perf_counter() - tp0)
             self._tick = n + 1
             self._bounds.observe(queue_depth=depth, train_idle_s=wait,
                                  sample_staleness=n - version)
@@ -427,6 +446,7 @@ class AsyncExecutorController(SyncExecutorController):
         stop = threading.Event()
         errors: List[BaseException] = []
         train_iv: list = []
+        publish_wait: list = []
         pool = GeneratorPool(
             self.generators, self._channels_by_gen,
             self._pool_data_channels(), self._sample_queue, self._bounds,
@@ -446,11 +466,12 @@ class AsyncExecutorController(SyncExecutorController):
             return body
 
         wall0 = time.monotonic()
+        pub0 = len(self._fabric.intervals)
         threads = [threading.Thread(target=guarded(loop), name=name)
                    for name, loop in pool.loops(first, last, stop)]
         threads.append(threading.Thread(
             target=guarded(self._consumer_loop, first, last, stop,
-                           train_iv),
+                           train_iv, publish_wait),
             name="consumer"))
         for t in threads:
             t.start()
@@ -468,9 +489,20 @@ class AsyncExecutorController(SyncExecutorController):
         if errors:
             self.shutdown()
             raise errors[0]
+        try:
+            # drain in-flight publications, then park the publisher
+            # thread so nothing outlives this run (the fabric restarts
+            # it on the next run's first publish)
+            self._fabric.flush(self.timeout)
+        except BaseException:
+            self.shutdown()
+            raise
+        finally:
+            self._fabric.quiesce()
         wall = time.monotonic() - wall0
         rows = self.history[first:last]
         gen_iv = _merge_intervals(pool.intervals)
+        pub_iv = _merge_intervals(self._fabric.intervals[pub0:])
         self.stats = {
             "wall_s": wall,
             # wall-clock with >= 1 worker busy (pre-pool semantics; never
@@ -481,5 +513,12 @@ class AsyncExecutorController(SyncExecutorController):
             "overlap_s": _interval_overlap(gen_iv, train_iv),
             "gen_idle_s": sum(r["gen_idle_s"] for r in rows),
             "train_idle_s": sum(r["train_idle_s"] for r in rows),
+            # weight publication wall-clock, how much of it was hidden
+            # behind generation, and how long the consumer's hot path
+            # actually waited in publish() (the fabric's whole point:
+            # publish_wait_s ~ 0 while publish_s happens elsewhere)
+            "publish_s": sum(e - s for s, e in pub_iv),
+            "publish_overlap_s": _interval_overlap(gen_iv, pub_iv),
+            "publish_wait_s": sum(publish_wait),
         }
         return self.history

@@ -46,8 +46,19 @@ def ps_weight_sync(params, target_shardings) -> Any:
     return jax.device_put(host, target_shardings)          # host -> device
 
 
-def timed_sync(fn: Callable, params, shardings, repeats: int = 3):
-    """Benchmark helper: median wall-clock of a sync path."""
+def timed_sync(fn: Callable, params, shardings, repeats: int = 3,
+               warmup: int = 1):
+    """Benchmark helper: median wall-clock of a sync path.
+
+    Inputs are synced (``block_until_ready``) before ``t0`` so the
+    measurement never absorbs an in-flight producer, and ``warmup``
+    untimed iterations absorb first-call layout/compilation work --
+    Table 4 numbers measure *transfer*, not tracing."""
+    jax.block_until_ready(params)
+    out = None
+    for _ in range(max(0, warmup)):
+        out = fn(params, shardings)
+        jax.block_until_ready(out)
     times = []
     for _ in range(repeats):
         t0 = time.perf_counter()

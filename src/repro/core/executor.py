@@ -57,6 +57,7 @@ class Executor:
         self._port_lock = threading.RLock()
         self._outputs: Dict[str, Any] = {}
         self._inputs: Dict[str, Any] = {}
+        self._staged_weights: Dict[int, Any] = {}
 
     def init(self):
         pass
@@ -86,6 +87,45 @@ class Executor:
     def ping(self) -> str:
         """Health endpoint: a live actor answers with its name."""
         return self.name
+
+    # ------------------------------------------- weight-fabric slot surface --
+    # The weight-sync fabric (repro.core.fabric) separates *publication*
+    # from *application*: ``stage_weights`` parks a versioned snapshot in
+    # a slot -- for a remote actor this is where the shm/socket transfer
+    # lands, overlapped with whatever the actor is computing -- and the
+    # tiny ``commit_weights`` cast later flips the executor to that slot
+    # at a staleness-legal boundary.  The previous slot's params stay
+    # alive (jax arrays are refcounted; in-flight jobs pin their own
+    # admission snapshot) until every reader drops them -- the paper's
+    # "generation never blocks on weight transfer" property.
+
+    def stage_weights(self, params, version: int):
+        """Park a published weight snapshot without applying it.
+
+        Slots are refcounted: several channels publishing the same
+        version into one actor stage/commit it once each, exactly like
+        the old path delivered (idempotent) ``set_weights`` per
+        channel."""
+        with self._port_lock:
+            cur = self._staged_weights.get(version)
+            self._staged_weights[version] = \
+                (params, 1 if cur is None else cur[1] + 1)
+
+    def commit_weights(self, version: int):
+        """Apply a previously staged snapshot; release its slot once
+        every stager's commit arrived."""
+        with self._port_lock:
+            params, n = self._staged_weights[version]
+            if n <= 1:
+                self._staged_weights.pop(version)
+            else:
+                self._staged_weights[version] = (params, n - 1)
+        self.set_weights(params, version=version)
+
+    def staged_versions(self):
+        """Versions currently staged but not yet committed (tests)."""
+        with self._port_lock:
+            return sorted(self._staged_weights)
 
     def configure(self, **attrs):
         """Set existing executor attributes by name -- the handle-API

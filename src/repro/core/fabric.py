@@ -1,0 +1,256 @@
+"""Weight-sync fabric: overlapped DDMA-style weight publication
+(paper Sec. 5.2, Table 4).
+
+LlamaRL's DDMA moves trainer shards straight into generator shards on a
+*side channel*, so weight synchronization costs the training loop almost
+nothing: generation keeps running while the new version lands, and each
+generator flips to it at its next legal boundary.  ``WeightFabric`` is
+that data plane for this repo's controller:
+
+  * the async controller's consumer thread calls
+    ``publish(version, payloads)`` and returns immediately -- the
+    *publisher thread* then runs, per subscriber channel, (1) the DDMA
+    reshard / ``device_put`` staging (``Transport.prepare``, deduped per
+    distinct (port, comm type, target mesh)) and (2) the transport write
+    -- a ``stage_weights`` cast that scatters the payload over the shm
+    ring or socket for remote actors -- all *overlapped with ongoing
+    generation*;
+  * each subscriber owns versioned **slots**: ``stage_weights`` parks
+    the snapshot actor-side without applying it, and the channel then
+    carries only a ``StagedWeights`` marker whose delivery at the
+    worker's next staleness-legal drain is a tiny ``commit_weights``
+    cast (the slot flip).  The previous slot's params stay alive until
+    every reader releases them (jax refcounting + per-job pins), which
+    is the paper's "generation never blocks on weight transfer"
+    property;
+  * slot depth is bounded (``max_staged``): the publisher blocks -- not
+    the consumer -- when a subscriber falls behind, and the
+    ``on_commit`` release from the worker's drain wakes it.  In steady
+    state a worker commits one version per admission, so slots stay
+    double-buffered; the controller sizes the bound to the schedule's
+    whole in-flight window (channel capacity) because the versions
+    trailing a worker's *last* batch of a run stay staged until a
+    continuation run drains them;
+  * in-process subscribers skip the staging hop (their payload is a
+    device array shared by reference; the reshard *is* the transfer),
+    so the fixed-staleness schedule stays bit-for-bit identical to the
+    sequential reference over every transport.
+
+Version *delivery order* is exactly publication order -- one publisher
+thread, FIFO queue, per-version sends into the same versioned channels
+the blocking fan-out used -- so overlap changes wall-clock, never the
+bounded-staleness schedule.
+
+``intervals`` records publisher busy spans; the controller intersects
+them with generator busy spans to report ``publish_overlap_s`` -- the
+fraction of weight-publication wall-clock hidden behind generation
+(``BENCH_fabric.json``).
+"""
+from __future__ import annotations
+
+import collections
+import threading
+import time
+from typing import Any, Dict, List, Optional, Tuple
+
+from repro.core.channels import StagedWeights
+from repro.core.offpolicy import Closed
+
+
+def payload_key(ch) -> Tuple[str, int]:
+    """How publishers name a source port: (port name, outbound actor)."""
+    return (ch.name, id(ch.outbound))
+
+
+class WeightFabric:
+    """Background weight publication over a set of weight channels.
+
+    ``channels`` are the live per-generator weight channels the async
+    controller already fans out to; ``overlap=False`` degrades to the
+    old blocking fan-out on the caller's thread (the benchmark
+    baseline)."""
+
+    def __init__(self, channels, *, overlap: bool = True,
+                 max_staged: int = 2, timeout: float = 600.0):
+        self.channels = list(channels)
+        self.overlap = overlap
+        self.max_staged = max(1, int(max_staged))
+        self.timeout = timeout
+        self._cond = threading.Condition()
+        self._queue: collections.deque = collections.deque()
+        self._staged_out: Dict[int, int] = {}   # id(ch) -> uncommitted slots
+        self._thread: Optional[threading.Thread] = None
+        self._quiescing = False
+        self._closed = False
+        self._busy = False
+        self._error: Optional[BaseException] = None
+        #: publisher busy spans (t0, t1) and per-version wall seconds
+        self.intervals: List[Tuple[float, float]] = []
+        self.published: List[Tuple[int, float]] = []
+
+    # -------------------------------------------------------------- publish --
+
+    def publish(self, version: int, payloads: Dict[Tuple[str, int], Any]):
+        """Queue version ``version`` for delivery to every subscriber.
+
+        ``payloads`` maps ``payload_key(ch)`` to the (already
+        snapshotted) source-port value -- the caller snapshots
+        synchronously so a later trainer step can never leak into this
+        version.  Returns immediately when overlapping; raises any
+        publisher-thread failure from a previous publish."""
+        self.raise_if_failed()
+        if not self.overlap:
+            self._publish_now(version, payloads)
+            return
+        with self._cond:
+            if self._closed:
+                raise Closed("WeightFabric closed")
+            self._queue.append((version, payloads))
+            self._cond.notify_all()
+            if self._thread is None:
+                self._quiescing = False
+                # daemon is the last-resort backstop only: every normal
+                # path joins deterministically (run() flushes+quiesces,
+                # shutdown() closes), but an abandoned fabric -- a test
+                # failure mid-publish -- must not wedge interpreter exit
+                self._thread = threading.Thread(
+                    target=self._run, name="weight-fabric", daemon=True)
+                self._thread.start()
+
+    def _run(self):
+        while True:
+            with self._cond:
+                while not self._queue and not self._closed \
+                        and not self._quiescing:
+                    self._cond.wait()
+                if not self._queue:          # closed or quiesced while idle
+                    self._thread = None
+                    self._cond.notify_all()
+                    return
+                version, payloads = self._queue.popleft()
+                self._busy = True
+            try:
+                self._publish_now(version, payloads)
+            except Closed:                   # controller shutdown, not error
+                with self._cond:
+                    self._closed = True
+            except BaseException as e:       # surfaces on next publish/flush
+                with self._cond:
+                    self._error = e
+            finally:
+                with self._cond:
+                    self._busy = False
+                    if self._error is not None or self._closed:
+                        self._queue.clear()
+                        self._thread = None
+                        self._cond.notify_all()
+                        return
+                    self._cond.notify_all()
+
+    def _publish_now(self, version: int, payloads):
+        t0 = time.monotonic()
+        transferred: Dict[tuple, Any] = {}
+        for ch in self.channels:
+            pkey = payload_key(ch)
+            # one reshard per distinct (payload, comm type, target mesh),
+            # fanned out to every same-target channel
+            tkey = (pkey, ch.comm_type, id(ch.inbound.mesh))
+            if tkey not in transferred:
+                transferred[tkey] = ch._transfer(payloads[pkey])
+            prepared = transferred[tkey]
+            if ch.inbound.staged_weights and ch.inbound.transport.remote:
+                # data plane: ship the bytes now (shm scatter / socket
+                # write, overlapped with generation); the channel later
+                # delivers only the commit marker
+                self._wait_slot(ch)
+                ch.inbound.cast("stage_weights", prepared, version)
+                with self._cond:
+                    self._staged_out[id(ch)] = \
+                        self._staged_out.get(id(ch), 0) + 1
+                ch.send_transferred(
+                    StagedWeights(version,
+                                  on_commit=lambda c=ch: self._released(c)),
+                    version=version, timeout=self.timeout)
+            else:
+                ch.send_transferred(prepared, version=version,
+                                    timeout=self.timeout)
+        t1 = time.monotonic()
+        self.intervals.append((t0, t1))
+        self.published.append((version, t1 - t0))
+
+    # ---------------------------------------------------------------- slots --
+
+    def _wait_slot(self, ch):
+        """Block the *publisher* until the subscriber has a free slot."""
+        deadline = time.monotonic() + self.timeout
+        with self._cond:
+            while self._staged_out.get(id(ch), 0) >= self.max_staged:
+                if self._closed:
+                    raise Closed("WeightFabric closed")
+                if not self._cond.wait(0.2) and \
+                        time.monotonic() > deadline:
+                    raise TimeoutError(
+                        f"subscriber '{ch.inbound.name}' held "
+                        f"{self.max_staged} staged weight slots for "
+                        f"{self.timeout}s without committing")
+
+    def _released(self, ch):
+        with self._cond:
+            self._staged_out[id(ch)] = \
+                max(0, self._staged_out.get(id(ch), 0) - 1)
+            self._cond.notify_all()
+
+    def staged_out(self, ch) -> int:
+        with self._cond:
+            return self._staged_out.get(id(ch), 0)
+
+    # ------------------------------------------------------------ lifecycle --
+
+    def pending(self) -> int:
+        with self._cond:
+            return len(self._queue) + (1 if self._busy else 0)
+
+    def raise_if_failed(self):
+        with self._cond:
+            if self._error is not None:
+                e, self._error = self._error, None
+                raise e
+
+    def flush(self, timeout: Optional[float] = None):
+        """Wait until every queued publication has been delivered into
+        its channels; re-raise a publisher failure."""
+        deadline = time.monotonic() + (timeout if timeout is not None
+                                       else self.timeout)
+        with self._cond:
+            while (self._queue or self._busy) and self._error is None \
+                    and not self._closed:
+                if not self._cond.wait(0.2) and \
+                        time.monotonic() > deadline:
+                    raise TimeoutError(
+                        f"weight fabric still publishing after "
+                        f"{timeout if timeout is not None else self.timeout}"
+                        f"s ({len(self._queue)} queued)")
+        self.raise_if_failed()
+
+    def quiesce(self, timeout: float = 10.0):
+        """Stop the (idle) publisher thread between runs: the fabric
+        stays usable -- the next ``publish`` restarts it -- but no
+        thread outlives the controller's ``run()``."""
+        with self._cond:
+            self._quiescing = True
+            self._cond.notify_all()
+            t = self._thread
+        if t is not None:
+            t.join(timeout)
+        with self._cond:
+            self._quiescing = False
+
+    def close(self):
+        """Unblock and stop the publisher (controller shutdown path).
+        Queued publications are dropped; idempotent."""
+        with self._cond:
+            self._closed = True
+            self._cond.notify_all()
+            t = self._thread
+        if t is not None:
+            t.join(timeout=10.0)

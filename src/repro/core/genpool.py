@@ -55,26 +55,35 @@ from repro.rl.scheduler import RolloutScheduler
 def build_generator_pool(cfg, trainer, make_tasks, *, n_generators=1,
                          generator_cls=None, name="generator", seed=0,
                          weight_port="policy_model", transport=None,
+                         device_spec=None, addresses=None,
                          **gen_kwargs):
     """The pool wiring convention, in one place: N generator actors
     (worker ``g`` named ``{name}{g}`` and seeded ``seed + g``; a pool of
     one keeps the bare ``name``) plus one versioned weight channel from
     the trainer into each.  ``make_tasks(g)`` builds worker ``g``'s task
     source.  ``transport`` picks the placement per generator ("inproc" /
-    "proc"; None reads ``REPRO_TRANSPORT``).  Returns
-    ``(generator_handles, weight_channels)``; the caller declares data
-    channels outbound from ``generators[0]`` -- they serve the whole
-    pool via per-item snapshots.
+    "proc" / "shm" / "socket"; None reads ``REPRO_TRANSPORT``).
+    ``device_spec`` pins each remote generator's device world -- a
+    ``DeviceSpec`` shared by all workers, or a callable ``g -> spec``
+    for per-worker submeshes; ``addresses`` (socket transport) assigns
+    worker ``g`` the ``g``-th ``--listen`` host, self-hosting any
+    worker beyond the list.  Returns ``(generator_handles,
+    weight_channels)``; the caller declares data channels outbound from
+    ``generators[0]`` -- they serve the whole pool via per-item
+    snapshots.
     """
     from repro.core.channels import WeightsCommunicationChannel
     from repro.core.executor import GeneratorExecutor
     generator_cls = generator_cls or GeneratorExecutor
     gens, chans = [], []
     for g in range(n_generators):
+        spec = device_spec(g) if callable(device_spec) else device_spec
+        addr = addresses[g] if addresses and g < len(addresses) else None
         gen = spawn_actor(
             generator_cls, cfg, make_tasks(g), seed=seed + g,
             name=name if n_generators == 1 else f"{name}{g}",
-            transport=transport, **gen_kwargs)
+            transport=transport, device_spec=spec, address=addr,
+            **gen_kwargs)
         gens.append(gen)
         chans.append(WeightsCommunicationChannel(weight_port, trainer, gen))
     return gens, chans

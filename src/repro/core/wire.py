@@ -29,12 +29,23 @@ downstream views.
 
 Zero-size arrays (empty batches) and 0-d scalars round-trip: a leaf with
 ``nbytes == 0`` reads as an empty buffer of the recorded dtype/shape.
+
+Scatter mode (the shared-memory data plane): ``plan(obj)`` computes the
+manifest and total size once, then ``serialize_into(planned, buf)``
+writes the identical byte layout straight into a caller-provided
+writable buffer -- e.g. a ``multiprocessing.shared_memory`` ring slot --
+with each leaf copied exactly once (``np.copyto`` into a view of the
+target region; no intermediate ``tobytes``/``join`` allocations).
+``deserialize`` accepts any buffer (bytes, bytearray, memoryview of a
+shm mapping) and never retains views into it: jax leaves are copied by
+``jnp.asarray`` and numpy leaves by ``.copy()``, so the source slot can
+be reused the moment it returns.
 """
 from __future__ import annotations
 
 import pickle
 import struct
-from typing import Any, List, Tuple
+from typing import Any, List, NamedTuple, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -64,31 +75,77 @@ def _dtype_token(dtype: np.dtype) -> str:
     return dtype.name
 
 
-def serialize(obj: Any) -> bytes:
-    """Pytree -> bytes: structure manifest + concatenated leaf buffers."""
+class Planned(NamedTuple):
+    """One flatten pass, reusable by ``serialize``/``serialize_into``:
+    the pickled manifest, the array leaves in order, and the exact size
+    of the serialized blob (what a shm slot must hold)."""
+    manifest: bytes
+    arrays: List[np.ndarray]
+    size: int
+
+
+def plan(obj: Any) -> Planned:
+    """Flatten + header pass without writing leaf bytes anywhere."""
     leaves, treedef = jax.tree_util.tree_flatten(obj)
     entries: List[Tuple] = []
-    buffers: List[bytes] = []
+    arrays: List[np.ndarray] = []
+    total = 0
     for leaf in leaves:
         if _is_jax_array(leaf) or isinstance(leaf, np.ndarray):
+            # np.asarray on a jax.Array is the one unavoidable
+            # device->host transfer; non-contiguous numpy leaves stay as
+            # views here -- np.copyto handles their layout at write time
             arr = np.asarray(leaf)
-            if not arr.flags.c_contiguous:
-                arr = np.ascontiguousarray(arr)
-            buf = arr.tobytes()
             entries.append(("jarr" if _is_jax_array(leaf) else "narr",
-                            _dtype_token(arr.dtype), arr.shape, len(buf)))
-            buffers.append(buf)
+                            _dtype_token(arr.dtype), arr.shape, arr.nbytes))
+            arrays.append(arr)
+            total += arr.nbytes
         else:
             entries.append(("raw", leaf))
     manifest = pickle.dumps((treedef, entries),
                             protocol=pickle.HIGHEST_PROTOCOL)
-    return b"".join([_LEN.pack(len(manifest)), manifest] + buffers)
+    return Planned(manifest, arrays, _LEN.size + len(manifest) + total)
 
 
-def deserialize(data: bytes) -> Any:
-    """Bytes -> pytree; array leaves restored with their exact bytes."""
-    (n,) = _LEN.unpack_from(data, 0)
-    treedef, entries = pickle.loads(data[_LEN.size:_LEN.size + n])
+def serialize_into(planned: Planned, buf) -> int:
+    """Scatter a planned pytree into ``buf`` (writable buffer, e.g. a
+    shm slot); returns bytes written.  Leaves are written directly into
+    their final position -- one copy per leaf, no staging."""
+    mv = memoryview(buf)
+    assert len(mv) >= planned.size, \
+        f"buffer of {len(mv)} bytes cannot hold {planned.size}"
+    _LEN.pack_into(mv, 0, len(planned.manifest))
+    offset = _LEN.size
+    mv[offset:offset + len(planned.manifest)] = planned.manifest
+    offset += len(planned.manifest)
+    for arr in planned.arrays:
+        if arr.nbytes:
+            dst = np.ndarray(arr.shape, arr.dtype, buffer=mv, offset=offset)
+            np.copyto(dst, arr)
+            offset += arr.nbytes
+    return planned.size
+
+
+def serialize(obj: Any) -> bytes:
+    """Pytree -> bytes: structure manifest + concatenated leaf buffers."""
+    planned = obj if isinstance(obj, Planned) else plan(obj)
+    out = bytearray(planned.size)
+    serialize_into(planned, out)
+    return bytes(out)
+
+
+def deserialize(data, *, copy_arrays: bool = False) -> Any:
+    """Buffer -> pytree; array leaves restored with their exact bytes.
+
+    ``data`` may be bytes or any buffer.  ``copy_arrays=True`` is
+    REQUIRED when ``data`` borrows memory that will be reused or
+    unmapped (a shm ring slot): ``jnp.asarray`` zero-copies aligned
+    host buffers on CPU, so without the explicit copy a jax leaf would
+    silently *alias the slot* -- corrupted the moment the ring recycles
+    it, and an exported pointer that blocks unmapping."""
+    mv = data if isinstance(data, memoryview) else memoryview(data)
+    (n,) = _LEN.unpack_from(mv, 0)
+    treedef, entries = pickle.loads(mv[_LEN.size:_LEN.size + n])
     offset = _LEN.size + n
     leaves = []
     for entry in entries:
@@ -101,10 +158,13 @@ def deserialize(data: bytes) -> Any:
             n_elems *= s
         # frombuffer with count/offset views the payload in place (no
         # bytes-slice copy); the one unavoidable copy is jnp.asarray /
-        # .copy() -- frombuffer views are read-only and numpy consumers
-        # may mutate
-        arr = np.frombuffer(data, dtype=np.dtype(dtype_name),
+        # .copy() -- frombuffer views are read-only, numpy consumers may
+        # mutate, and the source buffer (a shm slot) may be reused
+        arr = np.frombuffer(mv, dtype=np.dtype(dtype_name),
                             count=n_elems, offset=offset).reshape(shape)
         offset += nbytes
-        leaves.append(jnp.asarray(arr) if kind == "jarr" else arr.copy())
+        if kind == "jarr":
+            leaves.append(jnp.asarray(arr.copy() if copy_arrays else arr))
+        else:
+            leaves.append(arr.copy())
     return jax.tree_util.tree_unflatten(treedef, leaves)

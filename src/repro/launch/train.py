@@ -13,6 +13,18 @@ config on the local device -- same code path, same executors.
 private XLA client -- the paper's fully-distributed placement, one flag
 away from the colocated thread run; the rule-based reward stays in the
 controller process (lightweight python, as in the paper's Fig. 1).
+``--transport shm`` is the same placement with weight- and batch-sized
+payloads moving over shared-memory rings instead of pipe copies (the
+DDMA-style data plane).  ``--transport socket`` goes multi-host: run
+
+    python -m repro.launch.train --listen 0.0.0.0:9001 --host-devices 4
+
+on each generator machine, then point the controller at them with
+``--connect host1:9001,host2:9001`` -- actors are assigned trainer
+first, then pool generators, then the reference, and any actor beyond
+the list self-hosts on localhost.  ``--child-devices``/``--child-mesh``
+give every spawned child its own emulated device world and submesh (a
+remote actor pins its own XLA device set).
 """
 from __future__ import annotations
 
@@ -24,20 +36,40 @@ import jax.numpy as jnp
 
 from repro import configs
 from repro.core import (AdaptiveStalenessController, CommType,
-                        CommunicationChannel, ExecutorController,
-                        RewardExecutor, TrainerExecutor,
+                        CommunicationChannel, DeviceSpec,
+                        ExecutorController, RewardExecutor, TrainerExecutor,
                         WeightsCommunicationChannel, build_generator_pool,
                         close_all_actors, spawn_actor)
 from repro.rl.data import ArithmeticTasks, VOCAB_SIZE
+
+
+def _parse_addr(s: str):
+    host, _, port = s.strip().rpartition(":")
+    return (host or "0.0.0.0", int(port))
+
+
+def _parse_mesh(s: str):
+    """'1x4' -> (1, 4)."""
+    return tuple(int(p) for p in s.lower().split("x")) if s else ()
 
 
 def build_controller(cfg, args):
     n_gens = max(1, args.n_generators)
     if args.mode == "sync" or args.sequential:
         assert n_gens == 1, "--n-generators > 1 needs mode=async threads"
+    spec = None
+    if args.child_devices or args.child_mesh:
+        spec = DeviceSpec(device_count=args.child_devices,
+                          mesh_shape=_parse_mesh(args.child_mesh))
+    # --connect addresses are consumed trainer-first, then generators,
+    # then the reference; actors beyond the list self-host on localhost
+    addrs = [_parse_addr(a) for a in args.connect.split(",")
+             if a.strip()] if args.connect else []
     trn = spawn_actor(TrainerExecutor, cfg, lr=args.lr, rho=args.rho,
                       clip_mode=args.clip_mode, kl_coef=args.kl_coef,
-                      seed=args.seed, transport=args.transport)
+                      seed=args.seed, transport=args.transport,
+                      device_spec=spec,
+                      address=addrs[0] if addrs else None)
     gens, channels = build_generator_pool(
         cfg, trn,
         lambda g: ArithmeticTasks(prompt_len=args.prompt_len,
@@ -46,14 +78,18 @@ def build_controller(cfg, args):
         n_generators=n_gens, seed=args.seed, n_prompts=args.n_prompts,
         n_per_prompt=args.n_per_prompt, max_new=args.max_new,
         temperature=args.temp, quantize=args.quantize_generator,
-        chunk=args.rollout_chunk, transport=args.transport)
+        chunk=args.rollout_chunk, transport=args.transport,
+        device_spec=spec, addresses=addrs[1:1 + n_gens])
     rew = RewardExecutor(n_per_prompt=args.n_per_prompt,
                          leave_one_out=args.rloo)
     executors = gens + [rew, trn]
     if args.kl_coef > 0:
         # paper Sec. 6: KL regularization against a frozen reference policy
         from repro.core import RefPolicyExecutor
-        ref = spawn_actor(RefPolicyExecutor, cfg, transport=args.transport)
+        ref = spawn_actor(RefPolicyExecutor, cfg, transport=args.transport,
+                          device_spec=spec,
+                          address=addrs[1 + n_gens]
+                          if len(addrs) > 1 + n_gens else None)
         executors.insert(len(gens), ref)
         channels += [
             WeightsCommunicationChannel("policy_model", trn, ref),
@@ -81,7 +117,8 @@ def build_controller(cfg, args):
         executors, channels,
         max_steps=args.steps, mode=args.mode, staleness=args.staleness,
         checkpoint_every=args.checkpoint_every,
-        checkpoint_path=args.checkpoint_path, adaptive=adaptive)
+        checkpoint_path=args.checkpoint_path, adaptive=adaptive,
+        overlap_publish=not args.no_overlap_publish)
 
 
 def main():
@@ -111,12 +148,41 @@ def main():
                     help="generator pool size (async mode): worker i "
                     "produces batches i, i+N, ... into the sample queue")
     ap.add_argument("--transport", default=None,
-                    choices=["inproc", "proc"],
+                    choices=["inproc", "proc", "shm", "socket"],
                     help="actor placement: 'inproc' runs every executor "
                     "on controller threads in this process; 'proc' hosts "
                     "trainer/generators/reference each in a spawned "
-                    "subprocess with its own XLA client (default: "
+                    "subprocess with its own XLA client; 'shm' is proc "
+                    "with weight/batch payloads over shared-memory rings "
+                    "(the DDMA-style data plane); 'socket' speaks the "
+                    "same wire format over TCP to --connect hosts or "
+                    "local self-hosted helpers (default: "
                     "$REPRO_TRANSPORT or inproc)")
+    ap.add_argument("--listen", default="",
+                    help="actor-host mode: serve executors to a remote "
+                    "controller on HOST:PORT and never train locally "
+                    "(pairs with a controller running --transport socket "
+                    "--connect THIS_HOST:PORT)")
+    ap.add_argument("--connect", default="",
+                    help="comma-separated HOST:PORT actor hosts for "
+                    "--transport socket, assigned trainer first, then "
+                    "pool generators, then the reference; actors beyond "
+                    "the list self-host on localhost")
+    ap.add_argument("--host-devices", type=int, default=0,
+                    help="with --listen: emulated host device count for "
+                    "this actor host (sets XLA_FLAGS before the backend "
+                    "initializes)")
+    ap.add_argument("--child-devices", type=int, default=0,
+                    help="emulated device count for every spawned child "
+                    "actor (proc/shm/self-hosted socket): each child "
+                    "pins its own XLA device set")
+    ap.add_argument("--child-mesh", default="",
+                    help="mesh shape (e.g. '1x4') built from each "
+                    "child's own devices and passed as its mesh=")
+    ap.add_argument("--no-overlap-publish", action="store_true",
+                    help="publish weights on the consumer thread "
+                    "(blocking fan-out) instead of the weight fabric's "
+                    "background publisher -- the Table-4-style baseline")
     ap.add_argument("--adaptive-staleness", type=int, default=0,
                     help="if > 0, the max bound for the adaptive "
                     "staleness controller (starts at --staleness, moves "
@@ -129,6 +195,20 @@ def main():
                     "reference; numerically identical, no overlap)")
     ap.add_argument("--out", default="")
     args = ap.parse_args()
+
+    if args.listen:
+        # actor-host mode: this process owns its own device world and
+        # serves one executor per inbound connection until killed.  The
+        # XLA backend has not initialized yet (imports are lazy about
+        # devices), so the device-count flag still takes effect.
+        if args.host_devices:
+            DeviceSpec(device_count=args.host_devices).apply_env()
+        from repro.core import serve_actor_host
+        host, port = _parse_addr(args.listen)
+        print(f"actor host listening on {host}:{port} "
+              f"(devices={args.host_devices or 'inherited'})", flush=True)
+        serve_actor_host(host, port)
+        return
 
     if args.arch == "llama31-8b":
         from repro.configs.llama_paper import LLAMA31_8B, smoke

@@ -147,6 +147,16 @@ class EchoExecutor(Executor):
     def echo(self, x):
         return x
 
+    def device_world(self):
+        """What this actor's own XLA client sees (DeviceSpec tests)."""
+        import jax as _jax
+        mesh = self.mesh
+        return {"n_devices": len(_jax.devices()),
+                "mesh_shape": None if mesh is None else
+                [int(mesh.shape[a]) for a in mesh.axis_names],
+                "mesh_axes": None if mesh is None else
+                list(mesh.axis_names)}
+
     def boom(self):
         raise ValueError("kaboom")
 
@@ -227,6 +237,49 @@ def test_killed_child_raises_actor_died_not_hang():
         h.call("ping", timeout=30.0)
     assert time.monotonic() - t0 < 10.0      # liveness poll, not deadline
     assert not h.healthy()
+
+
+# ------------------------------------------------ shm / device-spec extras --
+
+def test_shm_ring_reuse_and_growth_exact_bytes():
+    """Payloads over the threshold ride ring slots; repeated echoes
+    recycle slots and a payload larger than any existing slot grows one
+    -- every byte exact throughout."""
+    h = spawn_actor(EchoExecutor, "shm-echo", transport="shm")
+    try:
+        rng = np.random.default_rng(7)
+        mid = {"w": rng.standard_normal((256, 300)).astype(np.float32),
+               "q": jnp.arange(123, dtype=jnp.bfloat16), "meta": ["x", 1]}
+        for _ in range(5):                   # slot recycling
+            assert_tree_equal(h.call("echo", mid), mid)
+        big = {"w": rng.standard_normal(3_000_000).astype(np.float32)}
+        assert_tree_equal(h.call("echo", big), big)   # forces ring growth
+        assert_tree_equal(h.call("echo", mid), mid)   # small again after
+        # casts and calls stay FIFO through the shm plane
+        h.cast("put_input", "k", 11)
+        assert h.call("get_input", "k") == 11
+    finally:
+        h.close()
+
+
+@pytest.mark.parametrize("transport", ["proc", "socket"])
+def test_device_spec_pins_child_device_world(transport):
+    """A spawned child owns its own XLA client: the spec's emulated
+    device count and mesh shape must show up in the *child*, while this
+    process keeps its single CPU device."""
+    from repro.core import DeviceSpec
+    h = spawn_actor(EchoExecutor, "dev-probe", transport=transport,
+                    device_spec=DeviceSpec(device_count=2,
+                                           mesh_shape=(1, 2)))
+    try:
+        world = h.call("device_world")
+        assert world["n_devices"] == 2
+        assert world["mesh_shape"] == [1, 2]
+        assert world["mesh_axes"] == ["data", "model"]
+        assert len(jax.devices()) == 1       # parent untouched
+        assert h.mesh is None                # the mesh lives with the child
+    finally:
+        h.close()
 
 
 # ------------------------------------------- controller over ProcTransport --

@@ -1,0 +1,268 @@
+"""Weight-sync fabric: non-blocking publish, version-ordered delivery,
+staged slot accounting (double-buffer bound, release-on-commit), error
+propagation, and the data-plane transports underneath it -- shm ring
+reuse without aliasing, leak-free close after a killed child, and the
+acceptance check that pool-of-1 fixed-staleness over ``ShmTransport``
+and ``SocketTransport`` trains bit-for-bit the sequential reference."""
+import threading
+import time
+
+import multiprocessing.shared_memory as sm
+import numpy as np
+import pytest
+
+from repro.core import (ActorDied, ActorHandle, Executor, StagedWeights,
+                        WeightFabric, WeightsCommunicationChannel,
+                        as_handle, spawn_actor)
+from repro.core.actors import InprocTransport
+from repro.core.fabric import payload_key
+
+from test_actors import (METRIC_KEYS, assert_tree_equal, build_controller,
+                         EchoExecutor)
+
+
+class WeightSink(Executor):
+    """Records applied weights/versions; importable for remote spawns."""
+
+    def __init__(self, name="sink", delay=0.0):
+        super().__init__(name)
+        self.delay = delay
+        self.params = None
+        self.weight_version = -1
+        self.applied = []
+
+    def set_weights(self, params, version=None):
+        if self.delay:
+            time.sleep(self.delay)
+        self.params = params
+        if version is not None:
+            self.weight_version = version
+        self.applied.append(version)
+
+    def weights_sum(self) -> float:
+        return float(np.sum(np.asarray(self.params["w"], dtype=np.float64)))
+
+    def staged_sum(self, version) -> float:
+        with self._port_lock:
+            w = self._staged_weights[version][0]["w"]
+        return float(np.sum(np.asarray(w, dtype=np.float64)))
+
+
+class _RemoteishTransport(InprocTransport):
+    """Inproc semantics flagged as remote: drives the fabric's staged
+    data-plane path deterministically, no subprocess required."""
+    remote = True
+
+
+def remoteish(ex) -> ActorHandle:
+    return ActorHandle(_RemoteishTransport(ex))
+
+
+class Source(Executor):
+    def __init__(self):
+        super().__init__("trainer")
+
+
+def make_fabric(sink_handle, **kw):
+    src = as_handle(Source())
+    ch = WeightsCommunicationChannel("policy_model", src, sink_handle)
+    fab = WeightFabric([ch], **kw)
+    return fab, ch
+
+
+def payloads_for(ch, value):
+    return {payload_key(ch): value}
+
+
+# ------------------------------------------------------------ fabric unit --
+
+def test_publish_is_nonblocking_and_version_ordered():
+    sink = WeightSink(delay=0.15)
+    h = remoteish(sink)
+    fab, ch = make_fabric(h, overlap=True, max_staged=8)
+    t0 = time.monotonic()
+    for v in (1, 2, 3):
+        fab.publish(v, payloads_for(ch, {"w": np.full(4, float(v))}))
+    assert time.monotonic() - t0 < 0.1       # publisher thread does the work
+    # drain: each recv delivers the commit at this consumer's boundary
+    seen = [ch.recv(timeout=10.0)[0] for _ in range(3)]
+    fab.flush(10.0)
+    assert seen == [1, 2, 3]
+    assert sink.applied == [1, 2, 3]         # commits in publication order
+    assert sink.weight_version == 3 and sink.weights_sum() == 12.0
+    assert sink.staged_versions() == []      # every slot released
+    fab.quiesce()
+
+
+def test_staged_slots_bounded_until_reader_commits():
+    sink = WeightSink()
+    h = remoteish(sink)
+    fab, ch = make_fabric(h, overlap=True, max_staged=2)
+    try:
+        for v in (1, 2, 3, 4):
+            fab.publish(v, payloads_for(ch, {"w": np.full(2, float(v))}))
+        deadline = time.monotonic() + 5.0
+        while fab.staged_out(ch) < 2 and time.monotonic() < deadline:
+            time.sleep(0.01)
+        time.sleep(0.1)
+        # the publisher parks at the double-buffer bound, consumer
+        # untouched
+        assert fab.staged_out(ch) == 2
+        assert sorted(sink.staged_versions()) == [1, 2]
+        assert sink.weight_version == -1     # nothing applied yet
+        for expect in (1, 2, 3, 4):
+            assert ch.recv(timeout=10.0)[0] == expect
+        fab.flush(10.0)
+        assert sink.applied == [1, 2, 3, 4]
+        assert sink.staged_versions() == []
+    finally:
+        fab.close()
+
+
+def test_inproc_subscriber_skips_staging():
+    sink = WeightSink()
+    h = as_handle(sink)                      # genuinely inproc
+    fab, ch = make_fabric(h, overlap=True)
+    fab.publish(1, payloads_for(ch, {"w": np.ones(3)}))
+    version, data = ch.recv(timeout=10.0)
+    fab.flush(10.0)
+    assert version == 1 and not isinstance(data, StagedWeights)
+    assert sink.weight_version == 1 and sink.staged_versions() == []
+    fab.quiesce()
+
+
+def test_publisher_error_surfaces_on_next_publish():
+    class BoomSink(WeightSink):
+        def stage_weights(self, params, version):
+            raise RuntimeError("stage kaboom")
+
+    sink = BoomSink()
+    fab, ch = make_fabric(remoteish(sink), overlap=True)
+    fab.publish(1, payloads_for(ch, {"w": np.ones(2)}))
+    with pytest.raises(RuntimeError, match="stage kaboom"):
+        deadline = time.monotonic() + 10.0
+        while time.monotonic() < deadline:
+            fab.publish(2, payloads_for(ch, {"w": np.ones(2)}))
+            time.sleep(0.01)
+    fab.close()
+
+
+def test_close_unblocks_parked_publisher():
+    sink = WeightSink()
+    fab, ch = make_fabric(remoteish(sink), overlap=True, max_staged=1)
+    fab.publish(1, payloads_for(ch, {"w": np.ones(2)}))
+    fab.publish(2, payloads_for(ch, {"w": np.ones(2)}))  # parks on the bound
+    time.sleep(0.2)
+    t0 = time.monotonic()
+    fab.close()                              # must not hang on the slot wait
+    assert time.monotonic() - t0 < 5.0
+
+
+def test_blocking_mode_runs_on_caller_thread():
+    sink = WeightSink()
+    fab, ch = make_fabric(as_handle(sink), overlap=False)
+    fab.publish(1, payloads_for(ch, {"w": np.ones(2)}))
+    assert fab.pending() == 0 and len(fab.intervals) == 1
+    assert ch.recv(timeout=1.0)[0] == 1
+    assert sink.weight_version == 1
+
+
+# -------------------------------------------------- shm data-plane hygiene --
+
+def test_shm_staged_payloads_survive_slot_reuse():
+    """Slot-reuse aliasing regression: stage several distinct large
+    payloads through the same ring, then verify each staged copy still
+    holds its own bytes (a zero-copy alias would have been clobbered by
+    the next payload through the slot)."""
+    h = spawn_actor(WeightSink, "shm-sink", transport="shm")
+    try:
+        big = 1 << 18                        # 1MB fp32, over the threshold
+        sums = {}
+        for v in (1, 2, 3):
+            w = np.full(big, float(v), np.float32)
+            h.cast("stage_weights", {"w": w}, v)
+            sums[v] = float(w.astype(np.float64).sum())
+        for v in (1, 2, 3):
+            assert h.call("staged_sum", v) == sums[v], \
+                f"staged v{v} was clobbered by a later slot write"
+        h.call("commit_weights", 1)
+        assert h.call("weights_sum") == sums[1]
+    finally:
+        h.close()
+
+
+@pytest.mark.parametrize("kill", [False, True])
+def test_shm_segments_unlinked_on_close(kill):
+    """Every shm segment is parent-owned: ``close()`` unlinks them all,
+    whether the child shut down gracefully or was SIGKILLed mid-life."""
+    h = spawn_actor(EchoExecutor, "leaky", transport="shm")
+    payload = {"w": np.arange(1 << 17, dtype=np.float32)}
+    assert_tree_equal(h.call("echo", payload), payload)
+    names = h.transport.segment_names()
+    assert names, "large echo must have allocated ring segments"
+    if kill:
+        h.transport._proc.kill()
+        with pytest.raises(ActorDied):
+            h.call("ping", timeout=30.0)
+    h.close()
+    for name in names:
+        with pytest.raises(FileNotFoundError):
+            sm.SharedMemory(name=name)
+
+
+def test_socket_dropped_connection_raises_actor_died():
+    h = spawn_actor(EchoExecutor, "sock-victim", transport="socket")
+    assert h.call("ping") == "sock-victim"
+    h.transport._proc.kill()                 # the self-hosted peer dies
+    t0 = time.monotonic()
+    with pytest.raises(ActorDied):
+        h.call("ping", timeout=30.0)
+    assert time.monotonic() - t0 < 10.0
+    assert not h.healthy()
+    h.close()
+
+
+def test_socket_listen_host_serves_and_closes():
+    """The ``--listen`` path: a host thread accepts, serves one actor
+    per connection, and the client handle shuts it down cleanly."""
+    from repro.core import serve_actor_host
+    from repro.core.actors import SocketTransport
+    port_box = []
+    t = threading.Thread(
+        target=serve_actor_host,
+        args=("127.0.0.1", 0),
+        kwargs={"once": True, "ready": port_box.append}, daemon=True)
+    t.start()
+    deadline = time.monotonic() + 10.0
+    while not port_box and time.monotonic() < deadline:
+        time.sleep(0.01)
+    h = ActorHandle(SocketTransport(
+        EchoExecutor, ("hosted",), address=("127.0.0.1", port_box[0])))
+    payload = {"x": np.arange(1000, dtype=np.int32)}
+    assert h.call("ping") == "hosted"
+    assert_tree_equal(h.call("echo", payload), payload)
+    h.close()
+    t.join(timeout=10.0)
+    assert not t.is_alive()
+
+
+# --------------------------------------- acceptance: bit-for-bit equality --
+
+@pytest.mark.parametrize("transport", ["shm", "socket"])
+def test_fabric_transport_pool_of_one_matches_sequential(transport):
+    """ISSUE 5 acceptance: a pool-of-1 fixed-staleness run over the shm
+    and socket data planes -- weights staged by the fabric's publisher
+    thread, committed at the worker's staleness-legal boundary -- trains
+    bit-for-bit the all-inproc sequential reference (chunk-scheduled, so
+    job/state round-trips cross the data plane too)."""
+    threaded = build_controller(seed=11, staleness=1, max_steps=3,
+                                transport=transport, chunk=2)
+    sequential = build_controller(seed=11, staleness=1, max_steps=3,
+                                  transport="inproc", chunk=2)
+    ht = threaded.run()
+    hs = sequential.run_sequential()
+    assert [[h[k] for k in METRIC_KEYS] for h in ht] == \
+        [[h[k] for k in METRIC_KEYS] for h in hs]
+    assert [h["weight_version"] for h in ht] == \
+        [h["weight_version"] for h in hs] == [0, 0, 1]
+    assert threaded.stats["publish_s"] > 0.0

@@ -1,0 +1,170 @@
+"""Property tests for the wire format (``repro.core.wire``): random
+dtypes (incl. bf16 / int8 / byte-swapped), 0-size leaves, nested
+pytrees and ``RolloutState`` static aux must all round-trip exactly --
+and the scatter path (``plan`` + ``serialize_into``) must produce the
+identical byte layout ``serialize`` does, since the shm data plane and
+the pipe share one ``deserialize``.
+
+Uses the ``tests/_hypothesis_compat.py`` guard: without hypothesis the
+property tests skip individually, the plain unit tests still run."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from _hypothesis_compat import HAVE_HYPOTHESIS, given, settings, st
+from repro.core import wire
+from repro.rl.rollout import RolloutState
+
+# dtype tokens covering native, extension (bf16), sub-byte-order and
+# unusual-itemsize cases; all reconstructible via np.dtype(token)
+DTYPES = ["float32", "float64", "int8", "uint8", "int32", "bool",
+          ">i4", "<u2", ">f8", "bfloat16", "float16", "int64"]
+
+
+def _np_dtype(token):
+    if token == "bfloat16":
+        import ml_dtypes
+        return np.dtype(ml_dtypes.bfloat16)
+    return np.dtype(token)
+
+
+def assert_tree_equal(a, b):
+    la, ta = jax.tree_util.tree_flatten(a)
+    lb, tb = jax.tree_util.tree_flatten(b)
+    assert ta == tb
+    for x, y in zip(la, lb):
+        if isinstance(x, (jax.Array, np.ndarray)):
+            assert isinstance(x, jax.Array) == isinstance(y, jax.Array)
+            xa, ya = np.asarray(x), np.asarray(y)
+            assert xa.dtype == ya.dtype and xa.shape == ya.shape
+            assert xa.tobytes() == ya.tobytes()
+        else:
+            assert x == y
+
+
+if HAVE_HYPOTHESIS:
+    shapes = st.lists(st.integers(0, 5), min_size=0, max_size=3) \
+        .map(tuple)
+
+    @st.composite
+    def np_arrays(draw):
+        """An ndarray of a drawn dtype/shape built from raw bytes, so
+        every bit pattern (NaNs, denormals, byte-swapped ints) is fair
+        game."""
+        dtype = _np_dtype(draw(st.sampled_from(DTYPES)))
+        shape = draw(shapes)
+        n = int(np.prod(shape, dtype=np.int64)) if shape else 1
+        raw = draw(st.binary(min_size=n * dtype.itemsize,
+                             max_size=n * dtype.itemsize))
+        return np.frombuffer(raw, dtype=dtype).reshape(shape).copy()
+
+    leaves = st.one_of(
+        np_arrays(),
+        st.integers(-2**31, 2**31), st.booleans(), st.none(),
+        st.text(max_size=8), st.floats(allow_nan=False))
+
+    trees = st.recursive(
+        leaves,
+        lambda kids: st.one_of(
+            st.lists(kids, max_size=3),
+            st.dictionaries(st.text(max_size=4), kids, max_size=3),
+            st.tuples(kids, kids)),
+        max_leaves=8)
+else:                                    # pragma: no cover - seed image
+    def np_arrays():
+        return None
+
+    trees = None
+
+
+@given(tree=trees)
+@settings(max_examples=60, deadline=None)
+def test_roundtrip_random_pytrees(tree):
+    assert_tree_equal(wire.deserialize(wire.serialize(tree)), tree)
+
+
+@given(arr=np_arrays())
+@settings(max_examples=60, deadline=None)
+def test_scatter_layout_matches_serialize(arr):
+    """The shm write path and the pipe path must be byte-identical:
+    one deserialize serves both."""
+    # a jax twin leaf only for dtypes jax accepts (native byte order)
+    j = jnp.asarray(np.ascontiguousarray(arr[..., :1])) \
+        if arr.ndim and arr.dtype.isnative else arr
+    tree = {"a": arr, "j": j, "meta": [1, "x"]}
+    blob = wire.serialize(tree)
+    planned = wire.plan(tree)
+    assert planned.size == len(blob)
+    buf = bytearray(planned.size + 7)    # deliberately oversized
+    n = wire.serialize_into(planned, buf)
+    assert n == len(blob) and bytes(buf[:n]) == blob
+    assert_tree_equal(wire.deserialize(memoryview(buf)[:n],
+                                       copy_arrays=True), tree)
+
+
+@given(arr=np_arrays())
+@settings(max_examples=40, deadline=None)
+def test_roundtrip_copy_arrays_never_aliases(arr):
+    """With ``copy_arrays=True`` no leaf may alias the source buffer:
+    scribbling over the buffer after deserialize must not change any
+    leaf (the shm slot-reuse regression)."""
+    blob = bytearray(wire.serialize({"x": arr}))
+    out = wire.deserialize(memoryview(blob), copy_arrays=True)
+    before = np.asarray(out["x"]).tobytes()
+    for i in range(len(blob)):
+        blob[i] = (blob[i] + 1) % 256
+    assert np.asarray(out["x"]).tobytes() == before
+
+
+@given(b=st.integers(1, 3) if HAVE_HYPOTHESIS else st.none(),
+       prompt_len=st.integers(1, 6) if HAVE_HYPOTHESIS else st.none())
+@settings(max_examples=20, deadline=None)
+def test_rollout_state_static_aux(b, prompt_len):
+    """``prompt_len`` is static pytree aux (a Python int through jit);
+    it must survive as exactly that, never as an array leaf."""
+    total = prompt_len + 4
+    state = RolloutState(
+        tokens=jnp.zeros((b, total), jnp.int32),
+        behavior_logp=jnp.zeros((b, total), jnp.float32),
+        cache={"pos": jnp.asarray(prompt_len)},
+        last_logits=jnp.zeros((b, 7), jnp.float32),
+        done=jnp.zeros((b,), bool),
+        prompt_len=prompt_len)
+    out = wire.deserialize(wire.serialize(state))
+    assert isinstance(out, RolloutState)
+    assert type(out.prompt_len) is int and out.prompt_len == prompt_len
+    assert_tree_equal(out, state)
+
+
+# ------------------------------------------------- plain unit coverage --
+# (runs on the seed image without hypothesis)
+
+def test_zero_size_and_scalar_leaves():
+    tree = {"empty": np.zeros((0, 12), np.float32),
+            "jempty": jnp.zeros((3, 0), jnp.bfloat16),
+            "scalar": np.float64(2.5), "jscalar": jnp.int32(7)}
+    out = wire.deserialize(wire.serialize(tree))
+    assert_tree_equal(out, tree)
+    assert out["empty"].shape == (0, 12)
+    assert out["jempty"].dtype == jnp.bfloat16
+
+
+def test_serialize_into_exact_fit_and_too_small():
+    tree = {"w": np.arange(128, dtype=np.float32)}
+    planned = wire.plan(tree)
+    buf = bytearray(planned.size)
+    assert wire.serialize_into(planned, buf) == planned.size
+    assert_tree_equal(wire.deserialize(bytes(buf)), tree)
+    with pytest.raises(AssertionError, match="cannot hold"):
+        wire.serialize_into(planned, bytearray(planned.size - 1))
+
+
+def test_noncontiguous_sources_scatter_correctly():
+    arr = np.arange(24, dtype=np.float32).reshape(4, 6).T   # F-order view
+    tree = {"t": arr, "s": arr[::2]}
+    blob = wire.serialize(tree)
+    buf = bytearray(wire.plan(tree).size)
+    wire.serialize_into(wire.plan(tree), buf)
+    assert bytes(buf) == blob
+    assert_tree_equal(wire.deserialize(blob), tree)
