@@ -70,6 +70,7 @@ entire pipeline between placements without touching wiring code.
 from __future__ import annotations
 
 import collections
+import logging
 import multiprocessing as mp
 import os
 import pickle
@@ -89,6 +90,8 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.core import ddma
 from repro.core import wire
+
+_log = logging.getLogger(__name__)
 
 
 class ActorDied(RuntimeError):
@@ -684,8 +687,11 @@ class _RpcTransport(Transport):
                             self._conn.recv_bytes(), what)
                         if kind == "msg":
                             return obj
-                except (EOFError, OSError):
-                    pass
+                except (EOFError, OSError) as e:
+                    # expected when the peer died mid-write; log so a
+                    # torn frame is distinguishable from a clean exit
+                    _log.debug("actor '%s': connection drained after peer "
+                               "exit during %s: %r", self.name, what, e)
                 raise self._died(what)
             if time.monotonic() > deadline:
                 raise TimeoutError(
@@ -805,8 +811,13 @@ class _RpcTransport(Transport):
                 self._send((seq, "shutdown", "", (), {}),
                            what="shutdown")
                 self._reply_for(seq, 10.0, what="shutdown ack")
-        except (ActorDied, TimeoutError, OSError, AssertionError):
-            pass
+        except (ActorDied, TimeoutError, OSError, AssertionError) as e:
+            # graceful shutdown is best-effort (the peer may already be
+            # gone), but an unacked shutdown is worth a trace when
+            # debugging teardown hangs
+            _log.debug("actor '%s': graceful shutdown not acknowledged "
+                       "(%s: %s); proceeding to teardown",
+                       self.name, type(e).__name__, e)
         self._teardown()
 
     def _teardown(self):
@@ -976,8 +987,10 @@ class _SockConn:
     def close(self):
         try:
             self._sock.shutdown(socketlib.SHUT_RDWR)
-        except OSError:
-            pass
+        except OSError as e:
+            # ENOTCONN when the peer closed first: normal; still logged
+            # so half-closed-socket issues leave a trail
+            _log.debug("socket shutdown during close: %r", e)
         self._sock.close()
 
 

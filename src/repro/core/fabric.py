@@ -122,7 +122,9 @@ class WeightFabric:
             with self._cond:
                 while not self._queue and not self._closed \
                         and not self._quiescing:
-                    self._cond.wait()
+                    # timed wait inside the predicate loop: a lost/raced
+                    # notify must not park the publisher forever
+                    self._cond.wait(1.0)
                 if not self._queue:          # closed or quiesced while idle
                     self._thread = None
                     self._cond.notify_all()
@@ -175,8 +177,11 @@ class WeightFabric:
                 ch.send_transferred(prepared, version=version,
                                     timeout=self.timeout)
         t1 = time.monotonic()
-        self.intervals.append((t0, t1))
-        self.published.append((version, t1 - t0))
+        # the controller reads these while the publisher thread is live
+        # (overlap accounting), so the appends take the fabric lock
+        with self._cond:
+            self.intervals.append((t0, t1))
+            self.published.append((version, t1 - t0))
 
     # ---------------------------------------------------------------- slots --
 

@@ -1,3 +1,21 @@
+import os
+import sys
+
+# repo root on sys.path so tests can reach tools.analysis (the analysis
+# suite and the opt-in sanitizer live outside src/)
+_REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+if _REPO_ROOT not in sys.path:
+    sys.path.insert(0, _REPO_ROOT)
+
+# REPRO_SANITIZE=1: instrument threading lock allocation BEFORE any repro
+# module constructs a lock (locks are built at instance-construction
+# time, but import-time module locks like actors._SHM_REGISTRY_LOCK need
+# the patch in place first)
+_SANITIZE = os.environ.get("REPRO_SANITIZE") == "1"
+if _SANITIZE:
+    from tools.analysis import sanitizer as _sanitizer
+    _sanitizer.install()
+
 import jax
 import pytest
 
@@ -20,3 +38,17 @@ def _reap_proc_actors():
     yield
     from repro.core.actors import close_all_actors
     close_all_actors()
+
+
+@pytest.fixture(scope="session", autouse=True)
+def _sanitizer_gate():
+    """Under REPRO_SANITIZE=1, fail the session on recorded lock-order
+    cycles / held-lock blocking calls and on leaked threads or shm
+    segments at session end."""
+    yield
+    if not _SANITIZE:
+        return
+    from tools.analysis import sanitizer
+    problems = sanitizer.findings() + sanitizer.check_leaks()
+    assert not problems, \
+        "sanitizer findings:\n" + "\n".join("  " + p for p in problems)

@@ -1,0 +1,163 @@
+"""The analyzers themselves: each AST pass must report exactly the
+planted defect in its fixture module and nothing on the clean control;
+the full run over src/repro must match the committed baseline (the same
+gate CI applies); and the shared jaxpr helpers must agree with the
+kernel-level ground truth they were promoted from."""
+import os
+import subprocess
+import sys
+
+import pytest
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+if REPO_ROOT not in sys.path:
+    sys.path.insert(0, REPO_ROOT)
+
+from tools.analysis import blocking, lockorder, sharedstate  # noqa: E402
+from tools.analysis.common import diff_baseline, load_baseline  # noqa: E402
+
+FIXTURES = os.path.join(REPO_ROOT, "tools", "analysis", "fixtures")
+
+
+def _fixture(name):
+    return os.path.join(FIXTURES, name)
+
+
+# ------------------------------------------------------------- lockorder --
+
+def test_lockorder_detects_planted_cycle(tmp_path):
+    import shutil
+    shutil.copy(_fixture("lock_cycle.py"), tmp_path / "lock_cycle.py")
+    findings = lockorder.run(str(tmp_path))
+    cycles = [f for f in findings if f.kind == "cycle"]
+    assert len(cycles) == 1, findings
+    assert "Ledger._audit_lock" in cycles[0].detail
+    assert "Ledger._book_lock" in cycles[0].detail
+
+
+def test_lockorder_clean_control(tmp_path):
+    import shutil
+    shutil.copy(_fixture("clean.py"), tmp_path / "clean.py")
+    assert lockorder.run(str(tmp_path)) == []
+
+
+def test_lockorder_edge_goes_through_call(tmp_path):
+    """The audit->book edge only exists interprocedurally (reconcile ->
+    _post): the fixpoint must surface it."""
+    import shutil
+    shutil.copy(_fixture("lock_cycle.py"), tmp_path / "lock_cycle.py")
+    edges = lockorder.observed_edges(str(tmp_path))
+    assert ("Ledger._audit_lock", "Ledger._book_lock") in edges
+    assert ("Ledger._book_lock", "Ledger._audit_lock") in edges
+
+
+# -------------------------------------------------------------- blocking --
+
+def test_blocking_detects_planted_defects(tmp_path):
+    import shutil
+    shutil.copy(_fixture("blocked_under_lock.py"),
+                tmp_path / "blocked_under_lock.py")
+    findings = blocking.run(str(tmp_path))
+    kinds = {(f.scope, f.kind) for f in findings}
+    assert ("Mailbox.fetch", "recv") in kinds
+    assert ("Mailbox.park", "untimed-wait") in kinds
+    assert ("Mailbox.nap", "sleep") in kinds
+
+
+def test_blocking_clean_control(tmp_path):
+    import shutil
+    shutil.copy(_fixture("clean.py"), tmp_path / "clean.py")
+    assert blocking.run(str(tmp_path)) == []
+
+
+# ----------------------------------------------------------- sharedstate --
+
+def test_sharedstate_detects_planted_defect(tmp_path):
+    import shutil
+    shutil.copy(_fixture("blocked_under_lock.py"),
+                tmp_path / "blocked_under_lock.py")
+    findings = sharedstate.run(str(tmp_path))
+    assert any(f.scope == "Mailbox" and f.detail == "delivered"
+               for f in findings), findings
+
+
+def test_sharedstate_clean_control(tmp_path):
+    import shutil
+    shutil.copy(_fixture("clean.py"), tmp_path / "clean.py")
+    assert sharedstate.run(str(tmp_path)) == []
+
+
+# ------------------------------------------------------- baseline gating --
+
+def test_src_findings_match_committed_baseline():
+    """The exact gate CI applies: AST passes over src/repro produce no
+    findings outside baseline.json, and no baseline entry is stale."""
+    from tools.analysis import jaxpr_budget
+    findings = (lockorder.run() + blocking.run() + sharedstate.run()
+                + jaxpr_budget.lint_sources())
+    new, stale = diff_baseline(findings, load_baseline())
+    stale = [s for s in stale if not s.startswith("jaxpr:")]
+    assert not new, "unbaselined findings:\n" + \
+        "\n".join(f.render() for f in new)
+    assert not stale, f"stale baseline entries: {stale}"
+
+
+def test_cli_runs_clean():
+    r = subprocess.run(
+        [sys.executable, "-m", "tools.analysis", "--skip-trace"],
+        cwd=REPO_ROOT, capture_output=True, text=True, timeout=120)
+    assert r.returncode == 0, r.stdout + r.stderr
+    assert "analysis clean" in r.stdout
+
+
+def test_cli_fails_on_unbaselined_finding(tmp_path):
+    """A findings diff must exit nonzero: run the passes against a tree
+    containing a planted defect via a tiny driver script."""
+    import shutil
+    shutil.copy(_fixture("lock_cycle.py"), tmp_path / "lock_cycle.py")
+    code = (
+        "import sys; sys.path.insert(0, %r)\n"
+        "from tools.analysis import lockorder\n"
+        "fs = lockorder.run(%r)\n"
+        "sys.exit(1 if fs else 0)\n" % (REPO_ROOT, str(tmp_path)))
+    r = subprocess.run([sys.executable, "-c", code],
+                       capture_output=True, text=True, timeout=60)
+    assert r.returncode == 1, r.stdout + r.stderr
+
+
+# ------------------------------------------------------- jaxpr helpers ---
+
+def test_float_eqn_sizes_counts_and_recurses():
+    jax = pytest.importorskip("jax")
+    import jax.numpy as jnp
+    from tools.analysis.jaxpr_budget import (count_big_intermediates,
+                                             float_eqn_sizes)
+
+    def f(x):
+        def body(c, _):
+            return c * 2.0, c.sum()
+        out, _ = jax.lax.scan(body, x, None, length=3)
+        return out.sum()
+
+    jx = jax.make_jaxpr(f)(jnp.ones((8, 16)))
+    sizes = float_eqn_sizes(jx.jaxpr)
+    assert 128 in sizes                       # the scan-body mul, recursed
+    assert count_big_intermediates(jx.jaxpr, 128) >= 1
+    assert count_big_intermediates(jx.jaxpr, 10**9) == 0
+
+
+def test_jit_cache_entries_counts_retraces():
+    jax = pytest.importorskip("jax")
+    import jax.numpy as jnp
+    from tools.analysis.jaxpr_budget import jit_cache_entries
+
+    @jax.jit
+    def g(x):
+        return x + 1
+
+    base = jit_cache_entries(g)
+    g(jnp.ones((2,)))
+    g(jnp.ones((2,)))                          # same signature: no retrace
+    assert jit_cache_entries(g) == base + 1
+    g(jnp.ones((3,)))                          # new shape: one more
+    assert jit_cache_entries(g) == base + 2

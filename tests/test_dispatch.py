@@ -192,26 +192,11 @@ def test_attention_dispatch_fallbacks(rng, monkeypatch):
 
 
 # ---------------------------------------------- intermediate-size asserts ---
-
-def _float_eqn_sizes(jaxpr):
-    """All float eqn-output sizes in a jaxpr, recursing into sub-jaxprs;
-    `reshape` is excluded (pure aliasing in XLA, never a materialization)."""
-    sizes = []
-    for eqn in jaxpr.eqns:
-        if eqn.primitive.name != "reshape":
-            for var in eqn.outvars:
-                aval = var.aval
-                if hasattr(aval, "shape") and jnp.issubdtype(
-                        aval.dtype, jnp.floating):
-                    sizes.append(int(np.prod(aval.shape)) if aval.shape
-                                 else 1)
-        for val in eqn.params.values():
-            for sub in (val if isinstance(val, (list, tuple)) else [val]):
-                if isinstance(sub, jax.core.ClosedJaxpr):
-                    sizes.extend(_float_eqn_sizes(sub.jaxpr))
-                elif isinstance(sub, jax.core.Jaxpr):
-                    sizes.extend(_float_eqn_sizes(sub))
-    return sizes
+# jaxpr accounting lives in tools.analysis.jaxpr_budget (shared with the
+# `python -m tools.analysis` hot-path gate); conftest puts the repo root
+# on sys.path
+from tools.analysis.jaxpr_budget import (count_big_intermediates,  # noqa: E402
+                                         float_eqn_sizes)
 
 
 @pytest.mark.parametrize("fn_name", ["logprob", "sample"])
@@ -229,7 +214,7 @@ def test_no_full_vocab_materialization_forward(fn_name, kernel_mode, rng):
         jx = jax.make_jaxpr(
             lambda l: dispatch.sample(l, jax.random.PRNGKey(0), 1.0,
                                       block_v=bv))(logits)
-    big = [s for s in _float_eqn_sizes(jx.jaxpr) if s >= T * V]
+    big = [s for s in float_eqn_sizes(jx.jaxpr) if s >= T * V]
     assert not big, f"full-vocab float intermediates in {fn_name}: {big}"
 
 
@@ -243,8 +228,8 @@ def test_grad_materializes_less_than_naive(kernel_mode, rng):
         lambda l: dispatch.token_logprob(l, toks, block_v=bv).sum()))(logits)
     jx_n = jax.make_jaxpr(jax.grad(
         lambda l: _naive_logprob(l, toks).sum()))(logits)
-    big_s = len([s for s in _float_eqn_sizes(jx_s.jaxpr) if s >= T * V])
-    big_n = len([s for s in _float_eqn_sizes(jx_n.jaxpr) if s >= T * V])
+    big_s = count_big_intermediates(jx_s.jaxpr, T * V)
+    big_n = count_big_intermediates(jx_n.jaxpr, T * V)
     # zeros-init + scan output + the in-body carry write (XLA aliases the
     # latter two); the naive grad shows ~14 full-vocab intermediates here
     assert big_s <= 3

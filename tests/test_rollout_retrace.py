@@ -10,6 +10,7 @@ import pytest
 from repro.configs.llama_paper import smoke
 from repro.rl import rollout
 from repro.rl.rollout import action_mask, generate
+from tools.analysis.jaxpr_budget import jit_cache_entries
 
 
 @pytest.fixture(scope="module")
@@ -28,15 +29,15 @@ def test_ragged_generate_compiles_rollout_chunk_once(cfg, params):
     """max_new=10, chunk=4 -> 3 chunks of 4 steps: ONE jit entry, not two
     (pre-fix the trailing 2-step chunk retraced with a new static n_steps)."""
     prompts = jnp.full((5, 7), 5, jnp.int32)     # unique shapes for this test
-    before = rollout.rollout_chunk._cache_size()
+    before = jit_cache_entries(rollout.rollout_chunk)
     st = generate(params, cfg, prompts, max_new=10,
                   key=jax.random.PRNGKey(1), temperature=1.0, chunk=4)
-    added = rollout.rollout_chunk._cache_size() - before
+    added = jit_cache_entries(rollout.rollout_chunk) - before
     assert added == 1, f"ragged generate added {added} jit cache entries"
     # repeat calls (fresh key) add nothing
     generate(params, cfg, prompts, max_new=10, key=jax.random.PRNGKey(2),
              temperature=1.0, chunk=4)
-    assert rollout.rollout_chunk._cache_size() - before == 1
+    assert jit_cache_entries(rollout.rollout_chunk) - before == 1
 
 
 def test_ragged_generate_output_contract(cfg, params):

@@ -1,0 +1,227 @@
+"""Runtime lock-order sanitizer: install/uninstall hygiene, cycle and
+held-lock-blocking detection on live threads, and the leak checks.
+Each test installs the sanitizer locally and restores the real
+threading primitives in a finally block -- the suite itself runs
+unsanitized unless REPRO_SANITIZE=1."""
+import os
+import sys
+import threading
+import time
+
+import pytest
+
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+if REPO_ROOT not in sys.path:
+    sys.path.insert(0, REPO_ROOT)
+
+from tools.analysis import sanitizer  # noqa: E402
+
+pytestmark = pytest.mark.skipif(
+    os.environ.get("REPRO_SANITIZE") == "1",
+    reason="sanitizer already installed globally; local install/uninstall "
+           "would tear down the session instrumentation")
+
+
+@pytest.fixture()
+def san():
+    sanitizer.reset()
+    sanitizer.install()
+    try:
+        yield sanitizer
+    finally:
+        sanitizer.uninstall()
+        sanitizer.reset()
+
+
+def test_repo_locks_are_wrapped_stdlib_locks_are_not(san):
+    lock = threading.Lock()          # allocated from tests/ -> wrapped
+    assert hasattr(lock, "site")
+    cond = threading.Condition()
+    assert hasattr(cond, "site")
+    # a real Condition's internal RLock is allocated from threading.py
+    # and must come through unwrapped (no recursive instrumentation)
+    assert not hasattr(cond._real._lock, "site")
+
+
+def test_consistent_order_is_clean(san):
+    a, b = threading.Lock(), threading.Lock()
+    for _ in range(3):
+        with a:
+            with b:
+                pass
+    assert san.findings() == []
+
+
+def test_lock_order_cycle_detected(san):
+    a = threading.Lock()
+    b = threading.Lock()
+
+    def forward():
+        with a:
+            with b:
+                pass
+
+    def backward():
+        with b:
+            with a:
+                pass
+
+    t = threading.Thread(target=forward)
+    t.start()
+    t.join()
+    t = threading.Thread(target=backward)
+    t.start()
+    t.join()
+    assert any("lock-order cycle" in f for f in san.findings()), \
+        san.findings()
+
+
+def test_sleep_under_lock_detected(san):
+    lock = threading.Lock()
+    with lock:
+        time.sleep(0.01)
+    assert any("time.sleep" in f for f in san.findings()), san.findings()
+
+
+def test_sleep_without_lock_is_clean(san):
+    time.sleep(0.01)
+    assert san.findings() == []
+
+
+def test_untimed_wait_holding_other_lock_detected(san):
+    lock = threading.Lock()
+    cond = threading.Condition()
+
+    def waiter():
+        with lock:
+            with cond:
+                cond.wait()          # untimed, while holding `lock`
+
+    t = threading.Thread(target=waiter)
+    t.start()
+    time.sleep(0.1)
+    with cond:
+        cond.notify_all()
+    t.join(timeout=5)
+    assert not t.is_alive()
+    assert any("untimed Condition.wait" in f for f in san.findings()), \
+        san.findings()
+
+
+def test_timed_wait_in_predicate_loop_is_clean(san):
+    cond = threading.Condition()
+    done = []
+
+    def waiter():
+        with cond:
+            while not done:
+                cond.wait(0.05)
+
+    t = threading.Thread(target=waiter)
+    t.start()
+    time.sleep(0.05)
+    with cond:
+        done.append(1)
+        cond.notify_all()
+    t.join(timeout=5)
+    assert not t.is_alive()
+    assert san.findings() == []
+
+
+def test_condition_wait_does_not_fabricate_edges(san):
+    """While parked in wait() the condition is NOT held: another thread
+    acquiring (cond, lock) must not see a cycle against the waiter's
+    (lock, cond) entry order."""
+    lock = threading.Lock()
+    cond = threading.Condition()
+    done = []
+
+    def waiter():
+        with lock:
+            with cond:                    # edge: lock -> cond
+                while not done:
+                    cond.wait(0.05)
+
+    def other():
+        with cond:
+            with lock:                    # would be cond -> lock if the
+                pass                      # waiter still "held" cond
+
+    t = threading.Thread(target=waiter)
+    t.start()
+    time.sleep(0.1)
+    # `other` needs `lock`, which waiter holds -- run it after release
+    done.append(1)
+    with cond:
+        cond.notify_all()
+    t.join(timeout=5)
+    t2 = threading.Thread(target=other)
+    t2.start()
+    t2.join(timeout=5)
+    cycles = [f for f in san.findings() if "cycle" in f]
+    # cond was dropped during wait, so the only edges ever recorded are
+    # lock->cond (waiter, at entry) and cond->lock (other): that IS a
+    # potential AB/BA cycle and must be reported -- but had the waiter
+    # taken the edge while parked it would self-report spuriously with
+    # no `other` thread at all.  Verify the no-other-thread case:
+    assert cycles  # with both orders present, report it
+    san.reset()
+
+    def waiter2():
+        with lock:
+            with cond:
+                while len(done) < 2:
+                    cond.wait(0.05)
+
+    t3 = threading.Thread(target=waiter2)
+    t3.start()
+    time.sleep(0.1)
+    done.append(1)
+    with cond:
+        cond.notify_all()
+    t3.join(timeout=5)
+    assert not [f for f in san.findings() if "cycle" in f]
+
+
+def test_rlock_reentry_is_clean(san):
+    r = threading.RLock()
+    with r:
+        with r:
+            pass
+    assert san.findings() == []
+
+
+def test_failed_same_thread_acquire_is_clean(san):
+    lock = threading.Lock()
+    with lock:
+        assert not lock.acquire(True, 0.01)   # failed acquire: no finding
+    assert san.findings() == []
+
+
+def test_check_leaks_reports_parked_repo_thread(san):
+    stop = threading.Event()
+    t = threading.Thread(target=stop.wait, name="actor-leak-probe",
+                         daemon=True)
+    t.start()
+    try:
+        leaks = san.check_leaks()
+        assert any("actor-leak-probe" in m for m in leaks), leaks
+    finally:
+        stop.set()
+        t.join(timeout=5)
+
+
+def test_check_leaks_clean_after_join(san):
+    t = threading.Thread(target=lambda: None, name="actor-short")
+    t.start()
+    t.join()
+    assert san.check_leaks() == []
+
+
+def test_uninstall_restores_real_primitives():
+    sanitizer.install()
+    sanitizer.uninstall()
+    assert threading.Lock is sanitizer._REAL_LOCK
+    assert threading.RLock is sanitizer._REAL_RLOCK
+    assert threading.Condition is sanitizer._REAL_CONDITION
+    assert time.sleep is sanitizer._REAL_SLEEP

@@ -1,0 +1,25 @@
+"""repro-lint: repo-specific static analysis + runtime sanitizers.
+
+Three layers, all wired into CI as a gating job (``python -m
+tools.analysis``):
+
+* AST concurrency passes over ``src/repro`` -- a lock-order graph with
+  potential-deadlock cycle detection (``lockorder``), a
+  blocking-call-under-lock lint (``blocking``), and a shared-state pass
+  flagging attributes mutated from worker-thread run loops without a
+  common lock (``sharedstate``).
+* JAX hot-path budgets (``jaxpr_budget``) -- a registry of declared hot
+  paths traced to jaxprs and checked for full-vocab float
+  intermediates, retrace-count regressions, and direct jnp calls that
+  bypass ``kernels/dispatch.py``.
+* an opt-in runtime sanitizer (``sanitizer``, ``REPRO_SANITIZE=1``) --
+  instruments ``threading`` lock allocation in repo code, records the
+  observed lock-order graph while the test suite runs, and fails on
+  runtime ordering cycles, held-lock blocking calls, and leaked
+  threads/shm segments at session end.
+
+Findings are compared against ``baseline.json``: the job fails only on
+*new* findings, so intentional patterns (e.g. the RPC transport's
+request/response serialization under the per-handle lock) are recorded
+once, with a note, instead of suppressing the pass.
+"""

@@ -1,0 +1,90 @@
+"""CLI: run every analysis pass and diff against the baseline.
+
+    python -m tools.analysis                  # all passes, gate on baseline
+    python -m tools.analysis --skip-trace     # AST passes only (no jax)
+    python -m tools.analysis --update-baseline
+    python -m tools.analysis --list           # print findings w/ notes
+
+Exit code 1 on findings not in ``baseline.json`` (and on baseline
+entries that no longer fire, so stale suppressions can't linger).
+"""
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+from .common import (BASELINE_PATH, REPO_ROOT, diff_baseline, load_baseline,
+                     save_baseline)
+
+
+def collect(skip_trace: bool = False):
+    from . import blocking, jaxpr_budget, lockorder, sharedstate
+    findings = []
+    findings += lockorder.run()
+    findings += blocking.run()
+    findings += sharedstate.run()
+    findings += jaxpr_budget.lint_sources()
+    if not skip_trace:
+        src = os.path.join(REPO_ROOT, "src")
+        if src not in sys.path:
+            sys.path.insert(0, src)
+        findings += jaxpr_budget.run_hot_paths()
+    return findings
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(prog="tools.analysis")
+    ap.add_argument("--skip-trace", action="store_true",
+                    help="skip the jax hot-path tracing passes")
+    ap.add_argument("--update-baseline", action="store_true",
+                    help="rewrite baseline.json with current findings "
+                    "(preserving existing notes)")
+    ap.add_argument("--list", action="store_true",
+                    help="print every finding with its baseline note")
+    args = ap.parse_args(argv)
+
+    findings = collect(skip_trace=args.skip_trace)
+    baseline = load_baseline()
+
+    if args.update_baseline:
+        save_baseline(findings, BASELINE_PATH, notes=baseline)
+        print(f"baseline updated: {len(findings)} findings "
+              f"-> {BASELINE_PATH}")
+        return 0
+
+    if args.list:
+        for f in sorted(findings, key=lambda f: f.id):
+            note = baseline.get(f.id)
+            tag = "baselined" if note is not None else "NEW"
+            print(f"[{tag}] {f.render()}")
+            if note:
+                print(f"           note: {note}")
+
+    new, stale = diff_baseline(findings, baseline)
+    if args.skip_trace:
+        # tracing passes didn't run; their baseline entries are not stale
+        stale = [s for s in stale if not s.startswith("jaxpr:")]
+    ok = True
+    if new:
+        ok = False
+        print(f"\n{len(new)} NEW finding(s) not in baseline:")
+        for f in sorted(new, key=lambda f: f.id):
+            print("  " + f.render())
+        print("\nFix the finding, or (for an accepted pattern) run "
+              "`python -m tools.analysis --update-baseline` and add a "
+              "note in baseline.json.")
+    if stale:
+        ok = False
+        print(f"\n{len(stale)} stale baseline entr(ies) no longer fire "
+              "(remove them):")
+        for s in stale:
+            print("  " + s)
+    if ok:
+        print(f"analysis clean: {len(findings)} finding(s), all baselined"
+              + (" (trace passes skipped)" if args.skip_trace else ""))
+    return 0 if ok else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

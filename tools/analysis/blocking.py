@@ -1,0 +1,179 @@
+"""Blocking-call-under-lock lint.
+
+Flags operations that can block indefinitely while a ``threading``
+lock/condition is held: pipe/socket ``recv``/``accept``, unbounded
+``join()``, ``Condition.wait()`` with no timeout, ``time.sleep``,
+``block_until_ready`` (device sync), transport RPC (``.call``/
+``.cast``), and buffer ``pop_wait``.  A thread parked on one of these
+inside a critical section stalls every other thread contending for the
+lock -- and if the unblock depends on another thread taking the same
+lock, deadlocks it.
+
+``wait(t)``/``wait_for(pred, t)`` with *any* timeout argument (literal
+or variable) is accepted: the repo convention is a timed wait inside a
+predicate loop, and a variable timeout is a caller decision, not a
+structural bug.  Blocking-ness propagates one level through resolved
+calls so ``with self._lock: self._recv()`` is caught even though the
+``conn.recv_bytes`` lives in the helper.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Optional, Set, Tuple
+
+from .common import (ClassModel, CodeModel, Finding, build_model,
+                     iter_source_files, resolve_call)
+from .lockorder import _lock_name
+
+#: attribute-call names that block regardless of receiver
+_BLOCKING_ATTRS = {
+    "recv": "pipe/socket recv",
+    "recv_bytes": "pipe recv_bytes",
+    "send_bytes": "pipe send_bytes (can block on full pipe)",
+    "accept": "socket accept",
+    "block_until_ready": "device sync",
+    "pop_wait": "buffer pop_wait",
+    "call": "transport RPC",
+    "cast": "transport cast",
+    "connect": "socket connect",
+}
+
+#: names where only a missing/None timeout argument blocks forever
+_TIMEOUT_GATED = {"wait", "join", "wait_for"}
+
+
+def _has_timeout(call: ast.Call) -> bool:
+    if any(kw.arg in ("timeout", None) for kw in call.keywords):
+        return True
+    args = call.args
+    if call.func.attr == "wait_for":          # wait_for(pred, timeout)
+        return len(args) >= 2
+    return len(args) >= 1                     # wait(timeout)/join(timeout)
+
+
+def _blocking_reason(call: ast.Call) -> Optional[Tuple[str, str]]:
+    """(kind slug, human reason) when this call can block indefinitely."""
+    func = call.func
+    if isinstance(func, ast.Attribute):
+        name = func.attr
+        if isinstance(func.value, ast.Name) and func.value.id == "time" \
+                and name == "sleep":
+            return ("sleep", "time.sleep under lock")
+        if name in _BLOCKING_ATTRS:
+            return (name, _BLOCKING_ATTRS[name])
+        if name in _TIMEOUT_GATED and not _has_timeout(call):
+            return (f"untimed-{name}", f"untimed .{name}()")
+    elif isinstance(func, ast.Name):
+        if func.id == "sleep":
+            return ("sleep", "sleep under lock")
+    return None
+
+
+def _select_reason(call: ast.Call) -> Optional[Tuple[str, str]]:
+    f = call.func
+    if isinstance(f, ast.Attribute) and f.attr == "select" \
+            and isinstance(f.value, ast.Name) and f.value.id == "select":
+        return ("select", "select.select under lock")
+    return None
+
+
+class _Walker(ast.NodeVisitor):
+    def __init__(self, model: CodeModel, cls: Optional[ClassModel],
+                 qual: str, path: str,
+                 blocking_funcs: Dict[str, Tuple[str, str]],
+                 findings: List[Finding]):
+        self.model = model
+        self.cls = cls
+        self.qual = qual
+        self.path = path
+        self.blocking_funcs = blocking_funcs
+        self.findings = findings
+        self.held: List[str] = []
+
+    def visit_With(self, node: ast.With):
+        acquired = []
+        for item in node.items:
+            name = _lock_name(self.model, self.cls, item.context_expr)
+            if name is not None:
+                self.held.append(name)
+                acquired.append(name)
+        for stmt in node.body:
+            self.visit(stmt)
+        for _ in acquired:
+            self.held.pop()
+
+    def visit_Call(self, node: ast.Call):
+        if self.held:
+            reason = _blocking_reason(node) or _select_reason(node)
+            callee = None
+            if reason is None:
+                hit = resolve_call(self.model, self.cls, node)
+                if hit is not None and hit[0] in self.blocking_funcs:
+                    callee = hit[0]
+                    reason = self.blocking_funcs[callee]
+            if reason is not None:
+                # Condition.wait ON the held condition releases it -- only
+                # the *untimed* form is still a liveness bug (no wakeup
+                # guarantee); timed waits on the held cond are the repo's
+                # standard predicate-loop pattern and never flagged here.
+                kind, why = reason
+                via = f" via {callee}" if callee else ""
+                self.findings.append(Finding(
+                    "blocking", self.path, self.qual, kind,
+                    f"{'+'.join(self.held)}:{kind}{via}",
+                    f"{why}{via} while holding {'+'.join(self.held)} "
+                    f"(line {node.lineno})", node.lineno))
+        self.generic_visit(node)
+
+    def visit_FunctionDef(self, node: ast.FunctionDef):
+        pass
+
+    visit_AsyncFunctionDef = visit_FunctionDef
+
+    def walk(self, func: ast.FunctionDef):
+        for stmt in func.body:
+            self.visit(stmt)
+
+
+def _collect_blocking_funcs(model: CodeModel
+                            ) -> Dict[str, Tuple[str, str]]:
+    """qual -> (kind, reason) for functions containing an unconditionally
+    blocking op NOT guarded inside their own with-lock (those are already
+    flagged at the definition site)."""
+    out: Dict[str, Tuple[str, str]] = {}
+
+    def scan(qual: str, node: ast.FunctionDef):
+        for sub in ast.walk(node):
+            if isinstance(sub, ast.Call):
+                r = _blocking_reason(sub) or _select_reason(sub)
+                if r is not None:
+                    out[qual] = r
+                    return
+
+    for cls in model.classes.values():
+        for mname, mnode in cls.methods.items():
+            scan(f"{cls.name}.{mname}", mnode)
+    for fname, (_, fnode) in model.functions.items():
+        scan(fname, fnode)
+    return out
+
+
+def run(root: Optional[str] = None) -> List[Finding]:
+    paths = iter_source_files(root) if root else iter_source_files()
+    model = build_model(paths)
+    blocking_funcs = _collect_blocking_funcs(model)
+    findings: List[Finding] = []
+    seen: Set[str] = set()
+    for cls in model.classes.values():
+        for mname, mnode in cls.methods.items():
+            _Walker(model, cls, f"{cls.name}.{mname}", cls.module,
+                    blocking_funcs, findings).walk(mnode)
+    for fname, (path, fnode) in model.functions.items():
+        _Walker(model, None, fname, path,
+                blocking_funcs, findings).walk(fnode)
+    uniq = []
+    for f in findings:
+        if f.id not in seen:
+            seen.add(f.id)
+            uniq.append(f)
+    return uniq

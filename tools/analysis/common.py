@@ -1,0 +1,268 @@
+"""Shared plumbing for the analysis passes: findings, baselines, and the
+AST code model the concurrency passes walk.
+
+A ``Finding`` has a stable ``id`` that deliberately excludes line
+numbers (line drift must not churn the baseline); the display message
+carries the location.  ``baseline.json`` stores accepted finding ids
+with a human note each -- the CLI fails only on findings whose id is
+not in the baseline.
+"""
+from __future__ import annotations
+
+import ast
+import json
+import os
+from dataclasses import dataclass, field
+from typing import Dict, Iterable, List, Optional, Set, Tuple
+
+REPO_ROOT = os.path.dirname(os.path.dirname(
+    os.path.dirname(os.path.abspath(__file__))))
+SRC_ROOT = os.path.join(REPO_ROOT, "src", "repro")
+BASELINE_PATH = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                             "baseline.json")
+
+
+@dataclass(frozen=True)
+class Finding:
+    pass_name: str      # lockorder | blocking | sharedstate | jaxpr | hotpath
+    path: str           # repo-relative file (or hot-path name for jaxpr)
+    scope: str          # Class.method / Class / function / hot-path stage
+    kind: str           # finding category slug
+    detail: str         # stable discriminator within (path, scope, kind)
+    message: str = ""   # human text with line numbers etc.
+    lineno: int = 0
+
+    @property
+    def id(self) -> str:
+        return f"{self.pass_name}:{self.path}:{self.scope}:" \
+               f"{self.kind}:{self.detail}"
+
+    def render(self) -> str:
+        loc = f"{self.path}:{self.lineno}" if self.lineno else self.path
+        return f"[{self.pass_name}/{self.kind}] {loc} {self.scope}: " \
+               f"{self.message or self.detail}"
+
+
+def load_baseline(path: str = BASELINE_PATH) -> Dict[str, str]:
+    """id -> note for every accepted finding."""
+    if not os.path.exists(path):
+        return {}
+    with open(path) as f:
+        data = json.load(f)
+    return {e["id"]: e.get("note", "") for e in data.get("findings", [])}
+
+
+def save_baseline(findings: Iterable[Finding], path: str = BASELINE_PATH,
+                  notes: Optional[Dict[str, str]] = None):
+    notes = notes or {}
+    entries = [{"id": f.id, "note": notes.get(f.id, f.message)}
+               for f in sorted(findings, key=lambda f: f.id)]
+    with open(path, "w") as f:
+        json.dump({"findings": entries}, f, indent=2)
+        f.write("\n")
+
+
+def diff_baseline(findings: List[Finding],
+                  baseline: Dict[str, str]) -> Tuple[List[Finding],
+                                                     List[str]]:
+    """(new findings not in baseline, stale baseline ids not seen)."""
+    seen = {f.id for f in findings}
+    new = [f for f in findings if f.id not in baseline]
+    stale = sorted(i for i in baseline if i not in seen)
+    return new, stale
+
+
+def iter_source_files(root: str = SRC_ROOT) -> List[str]:
+    out = []
+    for dirpath, _, names in os.walk(root):
+        for n in sorted(names):
+            if n.endswith(".py"):
+                out.append(os.path.join(dirpath, n))
+    return out
+
+
+def relpath(path: str) -> str:
+    return os.path.relpath(path, REPO_ROOT)
+
+
+# ------------------------------------------------------------- code model --
+
+_LOCK_FACTORIES = {"Lock": "lock", "RLock": "rlock", "Condition": "cond"}
+
+
+def _lock_kind(node: ast.AST) -> Optional[str]:
+    """'lock'/'rlock'/'cond' when ``node`` is ``threading.X()``."""
+    if isinstance(node, ast.Call) and isinstance(node.func, ast.Attribute) \
+            and isinstance(node.func.value, ast.Name) \
+            and node.func.value.id == "threading":
+        return _LOCK_FACTORIES.get(node.func.attr)
+    return None
+
+
+@dataclass
+class ClassModel:
+    name: str
+    module: str                      # repo-relative path of defining file
+    node: ast.ClassDef
+    bases: List[str] = field(default_factory=list)
+    lock_attrs: Dict[str, str] = field(default_factory=dict)  # attr -> kind
+    methods: Dict[str, ast.FunctionDef] = field(default_factory=dict)
+    # self.X = ClassName(...) attribute type inference (and annotations)
+    attr_types: Dict[str, str] = field(default_factory=dict)
+
+    def all_lock_attrs(self, model: "CodeModel") -> Dict[str, str]:
+        """Lock attrs including inherited ones (single-level name lookup)."""
+        out = dict(self.lock_attrs)
+        for b in self.bases:
+            base = model.classes.get(b)
+            if base is not None:
+                for k, v in base.all_lock_attrs(model).items():
+                    out.setdefault(k, v)
+        return out
+
+
+@dataclass
+class CodeModel:
+    classes: Dict[str, ClassModel] = field(default_factory=dict)
+    # module-level NAME = threading.Lock() -> (module, kind)
+    module_locks: Dict[str, Tuple[str, str]] = field(default_factory=dict)
+    functions: Dict[str, Tuple[str, ast.FunctionDef]] = \
+        field(default_factory=dict)          # module funcs by name (unique)
+    _ambiguous_funcs: Set[str] = field(default_factory=set)
+    # method name -> [(class name, node)] across every class
+    methods_by_name: Dict[str, List[Tuple[str, ast.FunctionDef]]] = \
+        field(default_factory=dict)
+
+
+def build_model(paths: Iterable[str]) -> CodeModel:
+    model = CodeModel()
+    for path in paths:
+        with open(path) as f:
+            try:
+                tree = ast.parse(f.read(), filename=path)
+            except SyntaxError:
+                continue
+        rel = relpath(path)
+        for node in tree.body:
+            if isinstance(node, ast.Assign) and len(node.targets) == 1 \
+                    and isinstance(node.targets[0], ast.Name):
+                kind = _lock_kind(node.value)
+                if kind:
+                    model.module_locks[node.targets[0].id] = (rel, kind)
+            elif isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                if node.name in model.functions:
+                    model._ambiguous_funcs.add(node.name)
+                    model.functions.pop(node.name, None)
+                elif node.name not in model._ambiguous_funcs:
+                    model.functions[node.name] = (rel, node)
+            elif isinstance(node, ast.ClassDef):
+                model.classes[node.name] = _build_class(node, rel)
+        for cls in model.classes.values():
+            for mname, mnode in cls.methods.items():
+                model.methods_by_name.setdefault(mname, []).append(
+                    (cls.name, mnode))
+    return model
+
+
+def _build_class(node: ast.ClassDef, module: str) -> ClassModel:
+    cm = ClassModel(name=node.name, module=module, node=node,
+                    bases=[b.id for b in node.bases
+                           if isinstance(b, ast.Name)])
+    for item in node.body:
+        if not isinstance(item, ast.FunctionDef):
+            continue
+        cm.methods[item.name] = item
+        if item.name != "__init__":
+            continue
+        # __init__-time inference: lock attrs + attribute types
+        params = {a.arg: a.annotation for a in item.args.args}
+        for sub in ast.walk(item):
+            if isinstance(sub, ast.Assign) and len(sub.targets) == 1:
+                tgt = sub.targets[0]
+            elif isinstance(sub, ast.AnnAssign):
+                tgt = sub.target
+            else:
+                continue
+            if not (isinstance(tgt, ast.Attribute)
+                    and isinstance(tgt.value, ast.Name)
+                    and tgt.value.id == "self"):
+                continue
+            value = sub.value
+            kind = _lock_kind(value) if value is not None else None
+            if kind:
+                cm.lock_attrs[tgt.attr] = kind
+                continue
+            # self.X = ClassName(...)  ->  X: ClassName
+            if isinstance(value, ast.Call) \
+                    and isinstance(value.func, ast.Name) \
+                    and value.func.id[:1].isupper():
+                cm.attr_types[tgt.attr] = value.func.id
+            # self.X = param  where __init__(..., param: ClassName)
+            elif isinstance(value, ast.Name) and value.id in params:
+                ann = params[value.id]
+                if isinstance(ann, ast.Name):
+                    cm.attr_types[tgt.attr] = ann.id
+    # lock attrs may also be created outside __init__ (rare)
+    for item in node.body:
+        if isinstance(item, ast.FunctionDef) and item.name != "__init__":
+            for sub in ast.walk(item):
+                if isinstance(sub, ast.Assign) and len(sub.targets) == 1 \
+                        and isinstance(sub.targets[0], ast.Attribute) \
+                        and isinstance(sub.targets[0].value, ast.Name) \
+                        and sub.targets[0].value.id == "self":
+                    kind = _lock_kind(sub.value)
+                    if kind:
+                        cm.lock_attrs.setdefault(sub.targets[0].attr, kind)
+    return cm
+
+
+# ------------------------------------------------------- call resolution --
+
+#: method names too generic to resolve by global-uniqueness (builtin
+#: container/file/view methods would alias them and fabricate edges)
+GENERIC_NAMES = frozenset({
+    "release", "acquire", "close", "get", "put", "join", "append", "add",
+    "clear", "update", "pop", "popleft", "send", "recv", "wait", "items",
+    "values", "keys", "copy", "read", "write", "flush", "decode", "encode",
+    "step", "init", "start", "run", "stop", "open", "next", "submit",
+    "extend", "insert", "remove", "sort", "count", "index", "poll",
+    "notify", "notify_all", "wait_for", "set", "is_set", "locked",
+})
+
+
+def resolve_call(model: CodeModel, cls: Optional[ClassModel],
+                 call: ast.Call) -> Optional[Tuple[str, ast.FunctionDef]]:
+    """Resolve a call to ('Class.method' or 'function', node) or None.
+
+    Tiers: ``self.m()`` in own/base class; ``self.X.m()`` where X's class
+    was inferred from ``__init__``; bare ``f()`` module functions; and a
+    global unique-name fallback for distinctive (non-generic) names.
+    """
+    func = call.func
+    if isinstance(func, ast.Name):
+        hit = model.functions.get(func.id)
+        return (func.id, hit[1]) if hit else None
+    if not isinstance(func, ast.Attribute):
+        return None
+    mname = func.attr
+    recv = func.value
+    if isinstance(recv, ast.Name) and recv.id == "self" and cls is not None:
+        c: Optional[ClassModel] = cls
+        while c is not None:
+            if mname in c.methods:
+                return (f"{c.name}.{mname}", c.methods[mname])
+            c = model.classes.get(c.bases[0]) if c.bases else None
+        return None
+    if isinstance(recv, ast.Attribute) and isinstance(recv.value, ast.Name) \
+            and recv.value.id == "self" and cls is not None:
+        tname = cls.attr_types.get(recv.attr)
+        target = model.classes.get(tname) if tname else None
+        if target is not None and mname in target.methods:
+            return (f"{target.name}.{mname}", target.methods[mname])
+    if mname in GENERIC_NAMES:
+        return None
+    hits = model.methods_by_name.get(mname, [])
+    if len(hits) == 1:
+        cname, node = hits[0]
+        return (f"{cname}.{mname}", node)
+    return None

@@ -1,0 +1,8 @@
+"""Planted-defect fixture modules for the analyzer test suite.
+
+Each module is analyzed in isolation by ``tests/test_analysis.py``:
+``lock_cycle`` carries a known A->B / B->A ordering cycle,
+``blocked_under_lock`` a blocking recv inside a critical section, and
+``clean`` the same shapes written correctly (the false-positive
+control).  They are data, not code to import at runtime.
+"""

@@ -1,0 +1,40 @@
+"""Planted defect: indefinitely blocking operations inside critical
+sections -- a pipe ``recv`` and an untimed ``Condition.wait`` under a
+held lock, which the blocking pass must flag, plus a worker thread
+mutating shared state without the lock for the sharedstate pass.
+"""
+import threading
+import time
+
+
+class Mailbox:
+    def __init__(self, conn):
+        self._lock = threading.Lock()
+        self._cond = threading.Condition()
+        self._conn = conn
+        self._queue = []
+        self.delivered = []
+
+    def fetch(self):
+        with self._lock:
+            return self._conn.recv()        # blocks the lock on a quiet peer
+
+    def park(self):
+        with self._cond:
+            self._cond.wait()               # untimed: lost notify wedges it
+
+    def nap(self):
+        with self._lock:
+            time.sleep(0.5)                 # sleep inside the critical section
+
+    def _worker(self):
+        while True:
+            item = object()
+            self.delivered.append(item)     # worker-side write, no lock
+            with self._lock:
+                self._queue.append(item)
+
+    def drain(self):
+        with self._lock:
+            out, self._queue = self._queue, []
+        return out + self.delivered         # caller-side read, no lock

@@ -1,0 +1,56 @@
+"""False-positive control: the same structures as the defect fixtures,
+written with the repo's correct patterns -- consistent lock order,
+timed predicate-loop waits, blocking I/O outside critical sections,
+and worker-shared state always under the lock.  Every pass must come
+back empty on this module.
+"""
+import threading
+
+
+class Ledger:
+    def __init__(self):
+        self._book_lock = threading.Lock()
+        self._audit_lock = threading.Lock()
+        self.entries = []
+
+    def transfer(self, entry):
+        with self._book_lock:
+            with self._audit_lock:          # book -> audit, everywhere
+                self.entries.append(entry)
+
+    def reconcile(self, entry):
+        with self._book_lock:               # same order on every path
+            with self._audit_lock:
+                self.entries.append(entry)
+
+
+class Mailbox:
+    def __init__(self, conn):
+        self._lock = threading.Lock()
+        self._cond = threading.Condition()
+        self._conn = conn
+        self._queue = []
+
+    def fetch(self):
+        payload = self._conn.recv()         # blocking I/O outside the lock
+        with self._lock:
+            self._queue.append(payload)
+
+    def park(self, deadline_s: float):
+        with self._cond:
+            while not self._queue:
+                if not self._cond.wait(0.2):   # timed predicate loop
+                    deadline_s -= 0.2
+                    if deadline_s <= 0:
+                        raise TimeoutError
+
+    def _worker(self):
+        while True:
+            item = object()
+            with self._lock:
+                self._queue.append(item)    # worker writes under the lock
+
+    def drain(self):
+        with self._lock:
+            out, self._queue = self._queue, []
+        return out

@@ -1,0 +1,29 @@
+"""Planted defect: two locks taken in opposite orders on two paths.
+
+``transfer`` holds ``_book_lock`` then takes ``_audit_lock``;
+``reconcile`` holds ``_audit_lock`` then calls ``_post`` which takes
+``_book_lock`` -- a classic AB/BA deadlock the lockorder pass must
+report as a cycle (the second edge travels through a call, so this
+also exercises the interprocedural fixpoint).
+"""
+import threading
+
+
+class Ledger:
+    def __init__(self):
+        self._book_lock = threading.Lock()
+        self._audit_lock = threading.Lock()
+        self.entries = []
+
+    def _post(self, entry):
+        with self._book_lock:
+            self.entries.append(entry)
+
+    def transfer(self, entry):
+        with self._book_lock:
+            with self._audit_lock:          # edge: book -> audit
+                self.entries.append(entry)
+
+    def reconcile(self, entry):
+        with self._audit_lock:
+            self._post(entry)               # edge: audit -> book (via call)

@@ -1,0 +1,239 @@
+"""JAX hot-path budgets: jaxpr intermediate accounting, retrace
+counting, and a dispatch-bypass source lint.
+
+The jaxpr helpers here are the single source of truth shared with
+``tests/test_dispatch.py`` and ``tests/test_rollout_retrace.py``.  The
+``HOT_PATHS`` registry declares each hot path (trainer loss,
+``fused_logprob``/``fused_sample``, ``rollout_chunk``, attention) with
+a budget -- the max number of float intermediates at or above the
+path's "full materialization" size, or the max number of fresh jit
+cache entries -- and ``run()`` fails when a path exceeds its budget
+(i.e. someone reintroduced a full-vocab log-softmax or a per-call
+retrace).
+
+``lint_sources`` is a static companion: direct ``jax.nn.softmax`` /
+``jax.nn.log_softmax`` calls outside ``src/repro/kernels/`` are
+reported so full-vocab math can't silently bypass
+``kernels/dispatch.py`` (legitimate per-block attention softmaxes are
+baseline entries).
+"""
+from __future__ import annotations
+
+import ast
+import os
+from dataclasses import dataclass
+from typing import Callable, List, Optional
+
+from .common import Finding, iter_source_files, relpath
+
+
+# --------------------------------------------------------- jaxpr helpers --
+
+def float_eqn_sizes(jaxpr) -> List[int]:
+    """All float eqn-output sizes in a jaxpr, recursing into sub-jaxprs
+    (scan/while/cond/pallas bodies via ``eqn.params``); ``reshape`` is
+    excluded (pure aliasing in XLA, never a materialization)."""
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    sizes = []
+    for eqn in jaxpr.eqns:
+        if eqn.primitive.name != "reshape":
+            for var in eqn.outvars:
+                aval = var.aval
+                if hasattr(aval, "shape") and jnp.issubdtype(
+                        aval.dtype, jnp.floating):
+                    sizes.append(int(np.prod(aval.shape)) if aval.shape
+                                 else 1)
+        for val in eqn.params.values():
+            for sub in (val if isinstance(val, (list, tuple)) else [val]):
+                if isinstance(sub, jax.core.ClosedJaxpr):
+                    sizes.extend(float_eqn_sizes(sub.jaxpr))
+                elif isinstance(sub, jax.core.Jaxpr):
+                    sizes.extend(float_eqn_sizes(sub))
+    return sizes
+
+
+def count_big_intermediates(jaxpr, threshold: int) -> int:
+    """Number of float intermediates of size >= ``threshold``."""
+    return len([s for s in float_eqn_sizes(jaxpr) if s >= threshold])
+
+
+def jit_cache_entries(fn) -> int:
+    """Compilation-cache entry count of a ``jax.jit``-wrapped function."""
+    return fn._cache_size()
+
+
+# ----------------------------------------------------- hot-path registry --
+
+@dataclass(frozen=True)
+class HotPath:
+    name: str
+    budget: int              # max big intermediates (or retraces) allowed
+    check: Callable[[], int] # returns the observed count
+    what: str                # what the count measures, for messages
+
+
+def _logprob_fwd() -> int:
+    import jax
+    from repro.kernels import dispatch
+    T, V, bv = 32, 4096, 512
+    logits = jax.random.normal(jax.random.PRNGKey(0), (T, V))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (T,), 0, V)
+    jx = jax.make_jaxpr(
+        lambda l: dispatch.token_logprob(l, toks, block_v=bv))(logits)
+    return count_big_intermediates(jx.jaxpr, T * V)
+
+
+def _logprob_grad() -> int:
+    import jax
+    from repro.kernels import dispatch
+    T, V, bv = 32, 4096, 512
+    logits = jax.random.normal(jax.random.PRNGKey(0), (T, V))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (T,), 0, V)
+    jx = jax.make_jaxpr(jax.grad(
+        lambda l: dispatch.token_logprob(l, toks, block_v=bv).sum()))(logits)
+    return count_big_intermediates(jx.jaxpr, T * V)
+
+
+def _sample_fwd() -> int:
+    import jax
+    from repro.kernels import dispatch
+    T, V, bv = 32, 4096, 512
+    logits = jax.random.normal(jax.random.PRNGKey(0), (T, V))
+    jx = jax.make_jaxpr(
+        lambda l: dispatch.sample(l, jax.random.PRNGKey(0), 1.0,
+                                  block_v=bv))(logits)
+    return count_big_intermediates(jx.jaxpr, T * V)
+
+
+def _trainer_loss_grad() -> int:
+    import jax
+    import jax.numpy as jnp
+    from repro.core import aipo
+    # V must clear REPRO_KERNEL_MIN_VOCAB (4096) so token_logprob takes
+    # the streamed route, as it does at the paper's V=256k
+    B, T, V = 2, 16, 8192
+    logits = jax.random.normal(jax.random.PRNGKey(0), (B, T, V))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (B, T), 0, V)
+    blp = jax.random.normal(jax.random.PRNGKey(2), (B, T)) - 5.0
+    adv = jax.random.normal(jax.random.PRNGKey(3), (B, T))
+    mask = jnp.ones((B, T))
+    jx = jax.make_jaxpr(jax.grad(
+        lambda l: aipo.aipo_loss(l, toks, blp, adv, mask)[0]))(logits)
+    return count_big_intermediates(jx.jaxpr, B * T * V)
+
+
+def _attention_chunked() -> int:
+    import jax
+    from repro.kernels import dispatch
+    # S must clear REPRO_KERNEL_MIN_SEQ (512) so attention takes the
+    # chunked/streamed route, and the q-block must actually tile S
+    # (with block == S "chunked" degenerates to one dense block)
+    B, S, H, KvH, D = 1, 512, 4, 2, 16
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (B, S, H, D))
+    k = jax.random.normal(ks[1], (B, S, KvH, D))
+    v = jax.random.normal(ks[2], (B, S, KvH, D))
+    jx = jax.make_jaxpr(
+        lambda q_: dispatch.attention(q_, k, v, causal=True,
+                                      block_q=128))(q)
+    return count_big_intermediates(jx.jaxpr, B * H * S * S)
+
+
+def _rollout_retrace() -> int:
+    """Ragged generate (max_new % chunk != 0) must add exactly one
+    rollout_chunk jit entry; returns entries added minus the one legal
+    compile, so the budget is 0."""
+    import jax
+    import jax.numpy as jnp
+    from repro.configs.llama_paper import smoke
+    from repro.models import init_params
+    from repro.rl import rollout
+    cfg = smoke().replace(n_layers=1, d_model=32, n_heads=2, n_kv_heads=2,
+                          head_dim=16, d_ff=64, vocab=32)
+    params = init_params(cfg, jax.random.PRNGKey(0), jnp.float32)
+    prompts = jnp.full((2, 5), 5, jnp.int32)
+    before = jit_cache_entries(rollout.rollout_chunk)
+    rollout.generate(params, cfg, prompts, max_new=10,
+                     key=jax.random.PRNGKey(1), temperature=1.0, chunk=4)
+    rollout.generate(params, cfg, prompts, max_new=10,
+                     key=jax.random.PRNGKey(2), temperature=1.0, chunk=4)
+    return jit_cache_entries(rollout.rollout_chunk) - before - 1
+
+
+HOT_PATHS: List[HotPath] = [
+    HotPath("fused_logprob_fwd", 0, _logprob_fwd,
+            "float intermediates >= T*V in the streamed logprob forward"),
+    HotPath("fused_logprob_grad", 3, _logprob_grad,
+            "float intermediates >= T*V in the custom-VJP logprob grad "
+            "(zeros-init + scan output + aliased carry write)"),
+    HotPath("fused_sample_fwd", 0, _sample_fwd,
+            "float intermediates >= T*V in the streamed sampler"),
+    HotPath("trainer_loss_grad", 3, _trainer_loss_grad,
+            "float intermediates >= B*T*V in grad(aipo_loss)"),
+    HotPath("attention_chunked", 0, _attention_chunked,
+            "float intermediates >= B*H*S*S (full score matrix) in "
+            "chunked attention"),
+    HotPath("rollout_chunk_retrace", 0, _rollout_retrace,
+            "extra rollout_chunk jit entries beyond one per ragged "
+            "generate signature"),
+]
+
+
+def run_hot_paths(names: Optional[List[str]] = None) -> List[Finding]:
+    os.environ.setdefault("REPRO_KERNEL_MODE", "ref")
+    findings = []
+    for hp in HOT_PATHS:
+        if names and hp.name not in names:
+            continue
+        try:
+            observed = hp.check()
+        except Exception as e:          # tracing itself broke: that gates too
+            findings.append(Finding(
+                "jaxpr", "hot-path", hp.name, "trace-error",
+                type(e).__name__, f"tracing failed: {e!r}"))
+            continue
+        if observed > hp.budget:
+            findings.append(Finding(
+                "jaxpr", "hot-path", hp.name, "budget",
+                f"over:{hp.budget}",
+                f"{observed} > budget {hp.budget}: {hp.what}"))
+    return findings
+
+
+# ------------------------------------------------------- dispatch bypass --
+
+_BYPASS_FNS = {"softmax", "log_softmax"}
+
+
+def lint_sources(root: Optional[str] = None) -> List[Finding]:
+    """Direct jax.nn.softmax/log_softmax outside kernels/ -- candidates
+    for full-vocab math bypassing the dispatch layer."""
+    findings = []
+    for path in iter_source_files(root) if root else iter_source_files():
+        rel = relpath(path)
+        if f"kernels{os.sep}" in rel:
+            continue
+        with open(path) as f:
+            try:
+                tree = ast.parse(f.read(), filename=path)
+            except SyntaxError:
+                continue
+        counts: dict = {}
+        for node in ast.walk(tree):
+            if isinstance(node, ast.Call) \
+                    and isinstance(node.func, ast.Attribute) \
+                    and node.func.attr in _BYPASS_FNS \
+                    and isinstance(node.func.value, ast.Attribute) \
+                    and node.func.value.attr == "nn":
+                fn = node.func.attr
+                i = counts.get(fn, 0)
+                counts[fn] = i + 1
+                findings.append(Finding(
+                    "hotpath", rel, "module", "dispatch-bypass",
+                    f"{fn}#{i}",
+                    f"direct jax.nn.{fn} (line {node.lineno}) "
+                    "-- hot paths must route via kernels/dispatch.py",
+                    node.lineno))
+    return findings

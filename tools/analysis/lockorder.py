@@ -1,0 +1,251 @@
+"""Lock-order graph builder with potential-deadlock cycle detection.
+
+Per function we summarize which locks are acquired directly (``with
+self._lock:`` / ``with _MODULE_LOCK:``) and which calls happen while a
+lock is held; a fixpoint over the resolved call graph then yields the
+*transitive* acquire set of every function, from which we emit
+held-lock -> acquired-lock edges.  A cycle in that graph (an SCC of
+size > 1, or a self-edge on a non-reentrant ``Lock``) means two code
+paths can take the same locks in opposite order: a potential deadlock.
+
+Lock identity is ``Class.attr`` for ``self.X`` locks (per-instance
+locks of the same class share ordering discipline) and the bare global
+name for module-level locks.
+"""
+from __future__ import annotations
+
+import ast
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Set, Tuple
+
+from .common import (ClassModel, CodeModel, Finding, build_model,
+                     iter_source_files, resolve_call)
+
+
+@dataclass
+class FuncSummary:
+    qual: str                     # "Class.method" or "function"
+    path: str
+    cls: Optional[ClassModel]
+    node: ast.FunctionDef
+    direct: Set[str] = field(default_factory=set)   # locks acquired here
+    # (held lock, resolved callee qual) observed under the lock
+    calls_under: List[Tuple[str, str]] = field(default_factory=list)
+    # held lock -> directly acquired lock while held
+    edges: Set[Tuple[str, str, int]] = field(default_factory=set)
+
+
+def _lock_name(model: CodeModel, cls: Optional[ClassModel],
+               expr: ast.AST) -> Optional[str]:
+    """Identify a with-item as a lock: 'Class.attr' or module-global name."""
+    if isinstance(expr, ast.Attribute) and isinstance(expr.value, ast.Name) \
+            and expr.value.id == "self" and cls is not None:
+        if expr.attr in cls.all_lock_attrs(model):
+            return f"{cls.name}.{expr.attr}"
+    elif isinstance(expr, ast.Name) and expr.id in model.module_locks:
+        return expr.id
+    return None
+
+
+def _lock_kinds(model: CodeModel) -> Dict[str, str]:
+    kinds: Dict[str, str] = {}
+    for cls in model.classes.values():
+        for attr, kind in cls.all_lock_attrs(model).items():
+            kinds[f"{cls.name}.{attr}"] = kind
+    for name, (_, kind) in model.module_locks.items():
+        kinds[name] = kind
+    return kinds
+
+
+class _FuncWalker(ast.NodeVisitor):
+    def __init__(self, model: CodeModel, summary: FuncSummary):
+        self.model = model
+        self.s = summary
+        self.held: List[str] = []
+
+    def visit_With(self, node: ast.With):
+        acquired = []
+        for item in node.items:
+            name = _lock_name(self.model, self.s.cls, item.context_expr)
+            if name is not None:
+                self.s.direct.add(name)
+                for h in self.held:
+                    self.s.edges.add((h, name, node.lineno))
+                self.held.append(name)
+                acquired.append(name)
+        for stmt in node.body:
+            self.visit(stmt)
+        for _ in acquired:
+            self.held.pop()
+
+    def visit_Call(self, node: ast.Call):
+        if self.held:
+            hit = resolve_call(self.model, self.s.cls, node)
+            if hit is not None:
+                for h in self.held:
+                    self.s.calls_under.append((h, hit[0]))
+        self.generic_visit(node)
+
+    # nested defs get their own summaries when they're methods; skip
+    # closures to avoid attributing their acquisitions to the parent
+    def visit_FunctionDef(self, node: ast.FunctionDef):
+        pass
+
+    visit_AsyncFunctionDef = visit_FunctionDef
+
+    def walk(self, func: ast.FunctionDef):
+        # entry point: visit the body, not the def node itself (visiting
+        # the def would hit visit_FunctionDef's closure guard)
+        for stmt in func.body:
+            self.visit(stmt)
+
+
+def summarize(model: CodeModel) -> Dict[str, FuncSummary]:
+    out: Dict[str, FuncSummary] = {}
+    for cls in model.classes.values():
+        for mname, mnode in cls.methods.items():
+            s = FuncSummary(f"{cls.name}.{mname}", cls.module, cls, mnode)
+            _FuncWalker(model, s).walk(mnode)
+            out[s.qual] = s
+    for fname, (path, fnode) in model.functions.items():
+        s = FuncSummary(fname, path, None, fnode)
+        _FuncWalker(model, s).walk(fnode)
+        out[s.qual] = s
+    return out
+
+
+def transitive_acquires(summaries: Dict[str, FuncSummary],
+                        model: CodeModel) -> Dict[str, Set[str]]:
+    """Fixpoint: locks each function may acquire, including via calls."""
+    # resolved callee quals per function (all calls, not just under lock)
+    callees: Dict[str, Set[str]] = {}
+    for qual, s in summaries.items():
+        outs: Set[str] = set()
+        for sub in ast.walk(s.node):
+            if isinstance(sub, ast.Call):
+                hit = resolve_call(model, s.cls, sub)
+                if hit is not None and hit[0] in summaries:
+                    outs.add(hit[0])
+        callees[qual] = outs
+    acq = {q: set(s.direct) for q, s in summaries.items()}
+    changed = True
+    while changed:
+        changed = False
+        for qual in summaries:
+            before = len(acq[qual])
+            for c in callees[qual]:
+                acq[qual] |= acq.get(c, set())
+            if len(acq[qual]) != before:
+                changed = True
+    return acq
+
+
+def build_edges(summaries: Dict[str, FuncSummary],
+                acq: Dict[str, Set[str]]
+                ) -> Dict[Tuple[str, str], List[str]]:
+    """(held, acquired) -> example sites ('Class.method:line')."""
+    edges: Dict[Tuple[str, str], List[str]] = {}
+    for qual, s in summaries.items():
+        for held, want, lineno in s.edges:
+            edges.setdefault((held, want), []).append(f"{qual}:{lineno}")
+        for held, callee in s.calls_under:
+            for want in acq.get(callee, set()):
+                edges.setdefault((held, want), []).append(
+                    f"{qual}->{callee}")
+    return edges
+
+
+def _sccs(nodes: Set[str],
+          edges: Dict[Tuple[str, str], List[str]]) -> List[List[str]]:
+    adj: Dict[str, Set[str]] = {n: set() for n in nodes}
+    for (a, b), _ in edges.items():
+        if a in adj:
+            adj[a].add(b)
+    index: Dict[str, int] = {}
+    low: Dict[str, int] = {}
+    on: Set[str] = set()
+    stack: List[str] = []
+    out: List[List[str]] = []
+    counter = [0]
+
+    def strong(v: str):
+        # iterative Tarjan to dodge recursion limits
+        work = [(v, iter(sorted(adj.get(v, ()))))]
+        index[v] = low[v] = counter[0]
+        counter[0] += 1
+        stack.append(v)
+        on.add(v)
+        while work:
+            node, it = work[-1]
+            advanced = False
+            for w in it:
+                if w not in adj:
+                    continue
+                if w not in index:
+                    index[w] = low[w] = counter[0]
+                    counter[0] += 1
+                    stack.append(w)
+                    on.add(w)
+                    work.append((w, iter(sorted(adj.get(w, ())))))
+                    advanced = True
+                    break
+                elif w in on:
+                    low[node] = min(low[node], index[w])
+            if advanced:
+                continue
+            work.pop()
+            if work:
+                parent = work[-1][0]
+                low[parent] = min(low[parent], low[node])
+            if low[node] == index[node]:
+                comp = []
+                while True:
+                    w = stack.pop()
+                    on.discard(w)
+                    comp.append(w)
+                    if w == node:
+                        break
+                out.append(comp)
+
+    for n in sorted(nodes):
+        if n not in index:
+            strong(n)
+    return out
+
+
+def run(root: Optional[str] = None) -> List[Finding]:
+    paths = iter_source_files(root) if root else iter_source_files()
+    model = build_model(paths)
+    summaries = summarize(model)
+    acq = transitive_acquires(summaries, model)
+    edges = build_edges(summaries, acq)
+    kinds = _lock_kinds(model)
+    findings: List[Finding] = []
+    nodes = {n for e in edges for n in e}
+    for comp in _sccs(nodes, edges):
+        if len(comp) > 1:
+            cyc = "<->".join(sorted(comp))
+            sites = []
+            for (a, b), s in sorted(edges.items()):
+                if a in comp and b in comp:
+                    sites.extend(s[:2])
+            findings.append(Finding(
+                "lockorder", "src/repro", "+".join(sorted(comp)),
+                "cycle", cyc,
+                f"lock-order cycle {cyc}; sites: {', '.join(sites[:6])}"))
+    for (a, b), sites in sorted(edges.items()):
+        if a == b and kinds.get(a) == "lock":
+            findings.append(Finding(
+                "lockorder", "src/repro", a, "self-cycle", a,
+                f"non-reentrant Lock {a} re-acquired while held "
+                f"(sites: {', '.join(sites[:4])})"))
+    return findings
+
+
+def observed_edges(root: Optional[str] = None
+                   ) -> Dict[Tuple[str, str], List[str]]:
+    """Expose the static edge set (used by tests and for debugging)."""
+    paths = iter_source_files(root) if root else iter_source_files()
+    model = build_model(paths)
+    summaries = summarize(model)
+    return build_edges(summaries, transitive_acquires(summaries, model))

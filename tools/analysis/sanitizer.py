@@ -1,0 +1,329 @@
+"""Opt-in runtime lock-order sanitizer (``REPRO_SANITIZE=1``).
+
+``install()`` monkey-patches the ``threading.Lock`` / ``RLock`` /
+``Condition`` factories so locks *allocated from repo code* are wrapped
+in instrumented proxies (stdlib-internal allocations, e.g. the RLock a
+Condition creates for itself, pass through untouched).  While the test
+suite runs we record, per thread, the stack of held sanitized locks and
+insert held->acquired edges into an observed lock-order graph keyed by
+allocation site; inserting an edge that closes a cycle is reported
+immediately with both sites.  ``time.sleep`` with sanitized locks held
+is reported as a held-lock blocking call.
+
+Locks wrapped here are never sent across process boundaries (spawned
+actor children build their own primitives and do not import this
+module), so the proxies don't need to be picklable.
+
+``check_leaks()`` runs at pytest session end: repo-named threads still
+alive after a grace join and shm ring segments still registered are
+leaks.  ``findings()`` returns everything recorded; the conftest hook
+fails the session if it is non-empty.
+"""
+from __future__ import annotations
+
+import itertools
+import os
+import threading
+import time
+from typing import Dict, List, Optional, Set, Tuple
+
+_REAL_LOCK = threading.Lock
+_REAL_RLOCK = threading.RLock
+_REAL_CONDITION = threading.Condition
+_REAL_SLEEP = time.sleep
+
+_installed = False
+_findings: List[str] = []
+_findings_lock = _REAL_LOCK()
+_edges: Dict[str, Set[str]] = {}        # site -> sites acquired while held
+_edge_examples: Dict[Tuple[str, str], str] = {}
+_site_counter = itertools.count()
+
+_REPO_MARKERS = (os.sep + "src" + os.sep + "repro" + os.sep,
+                 os.sep + "tests" + os.sep,
+                 os.sep + "tools" + os.sep)
+
+_tls = threading.local()
+
+
+def _held_stack() -> List["_SanLockBase"]:
+    st = getattr(_tls, "stack", None)
+    if st is None:
+        st = _tls.stack = []
+    return st
+
+
+def _report(msg: str):
+    with _findings_lock:
+        if msg not in _findings:
+            _findings.append(msg)
+
+
+def _alloc_site() -> Optional[str]:
+    """file:line of the direct caller allocating the lock, when it is
+    repo code.  Stdlib-internal allocations (e.g. the RLock a real
+    Condition builds for itself) see a non-repo caller and return None,
+    so they pass through unwrapped."""
+    import sys
+    frame = sys._getframe(2)
+    fn = frame.f_code.co_filename
+    if any(m in fn for m in _REPO_MARKERS):
+        return f"{os.path.basename(fn)}:{frame.f_lineno}"
+    return None
+
+
+def _would_cycle(frm: str, to: str) -> Optional[List[str]]:
+    """Path to -> ... -> frm already present => adding frm->to closes a
+    cycle; returns the path for the report."""
+    if frm == to:
+        return [frm]
+    stack = [(to, [to])]
+    seen = {to}
+    while stack:
+        node, path = stack.pop()
+        for nxt in _edges.get(node, ()):
+            if nxt == frm:
+                return path + [frm]
+            if nxt not in seen:
+                seen.add(nxt)
+                stack.append((nxt, path + [nxt]))
+    return None
+
+
+def _on_acquired(lock: "_SanLockBase"):
+    st = _held_stack()
+    for held in st:
+        if held.site == lock.site:
+            continue
+        with _findings_lock:
+            peers = _edges.setdefault(held.site, set())
+            if lock.site not in peers:
+                cyc = _would_cycle(held.site, lock.site)
+                peers.add(lock.site)
+                _edge_examples[(held.site, lock.site)] = \
+                    threading.current_thread().name
+                if cyc is not None:
+                    path = " -> ".join([held.site] + cyc)
+                    if f"lock-order cycle: {path}" not in _findings:
+                        _findings.append(f"lock-order cycle: {path}")
+    st.append(lock)
+
+
+def _on_released(lock: "_SanLockBase"):
+    st = _held_stack()
+    for i in range(len(st) - 1, -1, -1):
+        if st[i] is lock:
+            del st[i]
+            return
+
+
+class _SanLockBase:
+    reentrant = False
+
+    def __init__(self, real, site: str):
+        self._real = real
+        self.site = site
+        self.index = next(_site_counter)
+        self._depth: Dict[int, int] = {}     # thread ident -> depth
+
+    def acquire(self, blocking=True, timeout=-1):
+        ok = self._real.acquire(blocking, timeout)
+        if ok:
+            ident = threading.get_ident()
+            d = self._depth.get(ident, 0)
+            self._depth[ident] = d + 1
+            if d == 0:
+                _on_acquired(self)
+            elif not self.reentrant:
+                _report(f"non-reentrant Lock {self.site} re-acquired by "
+                        f"{threading.current_thread().name}")
+        return ok
+
+    def release(self):
+        ident = threading.get_ident()
+        d = self._depth.get(ident, 0)
+        if d <= 1:
+            self._depth.pop(ident, None)
+            _on_released(self)
+        else:
+            self._depth[ident] = d - 1
+        self._real.release()
+
+    __enter__ = lambda self: self.acquire() or True
+
+    def __exit__(self, *exc):
+        self.release()
+        return False
+
+    def locked(self):
+        return self._real.locked() if hasattr(self._real, "locked") \
+            else bool(self._depth)
+
+
+class _SanLock(_SanLockBase):
+    reentrant = False
+
+
+class _SanRLock(_SanLockBase):
+    reentrant = True
+
+
+class _SanCondition:
+    """Condition over a real lock, with the holder bookkeeping of the
+    sanitized wrappers.  ``wait`` drops this lock from the held stack for
+    its duration (the real Condition releases it), so time parked in a
+    wait never fabricates ordering edges."""
+
+    def __init__(self, real, site: str):
+        self._real = real
+        self._san = _SanRLock(_NullLock(), site)  # bookkeeping only
+        self.site = site
+
+    def acquire(self, *a, **kw):
+        ok = self._real.acquire(*a, **kw)
+        if ok:
+            self._san.acquire()
+        return ok
+
+    def release(self):
+        self._san.release()
+        self._real.release()
+
+    def __enter__(self):
+        self._real.__enter__()
+        self._san.acquire()
+        return self
+
+    def __exit__(self, *exc):
+        self._san.release()
+        return self._real.__exit__(*exc)
+
+    def wait(self, timeout=None):
+        if timeout is None:
+            others = [l.site for l in _held_stack()
+                      if l.site != self.site]
+            if others:
+                _report(f"untimed Condition.wait on {self.site} while "
+                        f"holding {others}")
+        _on_released(self._san)
+        try:
+            return self._real.wait(timeout)
+        finally:
+            _on_acquired(self._san)
+
+    def wait_for(self, predicate, timeout=None):
+        _on_released(self._san)
+        try:
+            return self._real.wait_for(predicate, timeout)
+        finally:
+            _on_acquired(self._san)
+
+    def notify(self, n=1):
+        return self._real.notify(n)
+
+    def notify_all(self):
+        return self._real.notify_all()
+
+
+class _NullLock:
+    def acquire(self, blocking=True, timeout=-1):
+        return True
+
+    def release(self):
+        pass
+
+
+def _make_lock():
+    site = _alloc_site()
+    real = _REAL_LOCK()
+    return _SanLock(real, site) if site else real
+
+
+def _make_rlock():
+    site = _alloc_site()
+    real = _REAL_RLOCK()
+    return _SanRLock(real, site) if site else real
+
+
+def _make_condition(lock=None):
+    site = _alloc_site()
+    if site is None:
+        return _REAL_CONDITION(lock)
+    if isinstance(lock, _SanLockBase):
+        lock = lock._real
+    return _SanCondition(_REAL_CONDITION(lock), site)
+
+
+def _san_sleep(secs):
+    st = getattr(_tls, "stack", None)
+    if st and secs and secs > 0:
+        _report(f"time.sleep({secs}) while holding "
+                f"{[l.site for l in st]} "
+                f"(thread {threading.current_thread().name})")
+    _REAL_SLEEP(secs)
+
+
+def install():
+    global _installed
+    if _installed:
+        return
+    _installed = True
+    threading.Lock = _make_lock
+    threading.RLock = _make_rlock
+    threading.Condition = _make_condition
+    time.sleep = _san_sleep
+
+
+def uninstall():
+    global _installed
+    if not _installed:
+        return
+    _installed = False
+    threading.Lock = _REAL_LOCK
+    threading.RLock = _REAL_RLOCK
+    threading.Condition = _REAL_CONDITION
+    time.sleep = _REAL_SLEEP
+
+
+def reset():
+    with _findings_lock:
+        _findings.clear()
+        _edges.clear()
+        _edge_examples.clear()
+
+
+def findings() -> List[str]:
+    with _findings_lock:
+        return list(_findings)
+
+
+_THREAD_NAME_MARKERS = ("weight-fabric", "actor-", "consumer", "sockhost",
+                        "generator", "genpool", "repro")
+
+
+def check_leaks(baseline_threads: Optional[Set[str]] = None) -> List[str]:
+    """Repo-named threads alive after a grace join + registered shm rings."""
+    leaks = []
+    deadline = time.monotonic() + 5.0
+    def repro_threads():
+        return [t for t in threading.enumerate()
+                if t.is_alive()
+                and any(m in (t.name or "").lower()
+                        for m in _THREAD_NAME_MARKERS)
+                and (baseline_threads is None
+                     or t.name not in baseline_threads)]
+    alive = repro_threads()
+    while alive and time.monotonic() < deadline:
+        for t in alive:
+            t.join(timeout=0.2)
+        alive = repro_threads()
+    for t in alive:
+        leaks.append(f"leaked thread: {t.name}")
+    try:
+        from repro.core import actors
+        reg = getattr(actors, "_SHM_REGISTRY", None)
+        if reg:
+            leaks.append(f"leaked shm segments: {sorted(reg)[:8]}")
+    except Exception:
+        pass
+    return leaks

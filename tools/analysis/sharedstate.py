@@ -1,0 +1,215 @@
+"""Shared-state pass: attributes touched from both a worker-thread run
+loop and caller-facing methods without a common lock.
+
+Thread entrypoints are methods passed to ``threading.Thread(target=...)``
+plus conventional names (``_run``, ``*worker*``, ``*consumer*``,
+``_serve*``, ``_publish*``); the thread-side footprint is the self-call
+closure of those entries.  For each class we collect attribute
+*mutations* (assignment, aug-assign, subscript store, and mutating
+container method calls) and reads, each tagged with whether any of the
+class's own locks was held at the site.  A finding fires when an
+attribute is mutated lock-free on the thread side and also accessed
+from a non-entry method -- unless every access everywhere is
+lock-protected, or the attribute is only written once in ``__init__``.
+"""
+from __future__ import annotations
+
+import ast
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Set, Tuple
+
+from .common import (ClassModel, CodeModel, Finding, build_model,
+                     iter_source_files)
+from .lockorder import _lock_name
+
+_ENTRY_RE = re.compile(r"(^_run$|worker|consumer|^_serve|^_publish)")
+
+_MUTATORS = {"append", "extend", "add", "update", "pop", "popleft",
+             "clear", "insert", "remove", "appendleft", "setdefault",
+             "discard"}
+
+
+@dataclass
+class Access:
+    attr: str
+    write: bool
+    locked: bool
+    lineno: int
+    method: str
+
+
+class _AccessWalker(ast.NodeVisitor):
+    def __init__(self, model: CodeModel, cls: ClassModel, method: str,
+                 out: List[Access]):
+        self.model = model
+        self.cls = cls
+        self.method = method
+        self.out = out
+        self.depth = 0          # any own lock held
+
+    def _self_attr(self, node: ast.AST) -> Optional[str]:
+        if isinstance(node, ast.Attribute) and \
+                isinstance(node.value, ast.Name) and node.value.id == "self":
+            return node.attr
+        return None
+
+    def visit_With(self, node: ast.With):
+        n = sum(1 for item in node.items
+                if _lock_name(self.model, self.cls, item.context_expr))
+        self.depth += n
+        for stmt in node.body:
+            self.visit(stmt)
+        self.depth -= n
+
+    def _record(self, attr: Optional[str], write: bool, lineno: int):
+        if attr is None or attr in self.cls.all_lock_attrs(self.model):
+            return
+        self.out.append(Access(attr, write, self.depth > 0, lineno,
+                               self.method))
+
+    def visit_Assign(self, node: ast.Assign):
+        for tgt in node.targets:
+            self._record(self._self_attr(tgt), True, node.lineno)
+            if isinstance(tgt, ast.Subscript):
+                self._record(self._self_attr(tgt.value), True, node.lineno)
+            elif isinstance(tgt, ast.Tuple):
+                for el in tgt.elts:
+                    self._record(self._self_attr(el), True, node.lineno)
+        self.generic_visit(node.value)
+
+    def visit_AugAssign(self, node: ast.AugAssign):
+        self._record(self._self_attr(node.target), True, node.lineno)
+        if isinstance(node.target, ast.Subscript):
+            self._record(self._self_attr(node.target.value), True,
+                         node.lineno)
+        self.generic_visit(node.value)
+
+    def visit_Call(self, node: ast.Call):
+        f = node.func
+        if isinstance(f, ast.Attribute) and f.attr in _MUTATORS:
+            self._record(self._self_attr(f.value), True, node.lineno)
+        self.generic_visit(node)
+
+    def visit_Attribute(self, node: ast.Attribute):
+        self._record(self._self_attr(node), False, node.lineno)
+        self.generic_visit(node)
+
+    def visit_FunctionDef(self, node: ast.FunctionDef):
+        # closures run on whatever thread calls them; attribute
+        # accesses inside still belong to this method's footprint
+        for stmt in node.body:
+            self.visit(stmt)
+
+    visit_AsyncFunctionDef = visit_FunctionDef
+
+
+def _thread_entries(cls: ClassModel, tree_methods: Dict[str, ast.FunctionDef]
+                    ) -> Set[str]:
+    entries = {m for m in tree_methods if _ENTRY_RE.search(m)}
+    # methods referenced as Thread(target=self.m) anywhere in the class
+    for mnode in tree_methods.values():
+        for sub in ast.walk(mnode):
+            if isinstance(sub, ast.Call) and \
+                    isinstance(sub.func, ast.Attribute) and \
+                    sub.func.attr == "Thread":
+                for kw in sub.keywords:
+                    if kw.arg == "target":
+                        tgt = kw.value
+                        if isinstance(tgt, ast.Attribute) and \
+                                isinstance(tgt.value, ast.Name) and \
+                                tgt.value.id == "self" and \
+                                tgt.attr in tree_methods:
+                            entries.add(tgt.attr)
+    return entries
+
+
+def _effective_methods(model: CodeModel,
+                       cls: ClassModel) -> Dict[str, ast.FunctionDef]:
+    """Own methods plus inherited ones (subclass override wins)."""
+    out: Dict[str, ast.FunctionDef] = {}
+    seen: Set[str] = set()
+    frontier = [cls]
+    while frontier:
+        c = frontier.pop(0)
+        if c.name in seen:
+            continue
+        seen.add(c.name)
+        for m, node in c.methods.items():
+            out.setdefault(m, node)
+        frontier.extend(b for n in c.bases
+                        if (b := model.classes.get(n)) is not None)
+    return out
+
+
+def _self_call_closure(methods: Dict[str, ast.FunctionDef],
+                       entries: Set[str]) -> Set[str]:
+    out = set(entries)
+    frontier = list(entries)
+    while frontier:
+        m = frontier.pop()
+        node = methods.get(m)
+        if node is None:
+            continue
+        for sub in ast.walk(node):
+            if isinstance(sub, ast.Call) and \
+                    isinstance(sub.func, ast.Attribute) and \
+                    isinstance(sub.func.value, ast.Name) and \
+                    sub.func.value.id == "self":
+                callee = sub.func.attr
+                if callee in methods and callee not in out:
+                    out.add(callee)
+                    frontier.append(callee)
+    return out
+
+
+def run(root: Optional[str] = None) -> List[Finding]:
+    paths = iter_source_files(root) if root else iter_source_files()
+    model = build_model(paths)
+    findings: List[Finding] = []
+    for cls in model.classes.values():
+        methods = _effective_methods(model, cls)
+        if not cls.all_lock_attrs(model) and not any(
+                _ENTRY_RE.search(m) for m in methods):
+            continue
+        entries = _thread_entries(cls, methods)
+        # only analyze the class that defines an entry (subclasses
+        # inheriting one would duplicate its findings)
+        if not entries or not any(e in cls.methods for e in entries):
+            continue
+        thread_side = _self_call_closure(methods, entries)
+        accesses: Dict[str, List[Access]] = {}
+        for mname, mnode in methods.items():
+            acc: List[Access] = []
+            _AccessWalker(model, cls, mname, acc).visit(mnode)
+            for a in acc:
+                accesses.setdefault(a.attr, []).append(a)
+        for attr, accs in sorted(accesses.items()):
+            t_writes = [a for a in accs
+                        if a.method in thread_side and a.write
+                        and a.method != "__init__"]
+            unlocked_t_writes = [a for a in t_writes if not a.locked]
+            if not unlocked_t_writes:
+                continue
+            caller_side = [a for a in accs
+                           if a.method not in thread_side
+                           and a.method != "__init__"]
+            w = unlocked_t_writes[0]
+            if caller_side:
+                c_methods = sorted({a.method for a in caller_side})
+                findings.append(Finding(
+                    "sharedstate", cls.module, cls.name, "unlocked-shared",
+                    attr,
+                    f"self.{attr} mutated without lock in thread-side "
+                    f"{w.method} (line {w.lineno}) and accessed from "
+                    f"{', '.join(c_methods[:4])}", w.lineno))
+            elif not attr.startswith("_"):
+                # public attribute: part of the class's read surface even
+                # if no in-class caller method touches it
+                findings.append(Finding(
+                    "sharedstate", cls.module, cls.name, "unlocked-public",
+                    attr,
+                    f"public self.{attr} mutated without lock in "
+                    f"thread-side {w.method} (line {w.lineno}); external "
+                    "readers race unless join-synchronized", w.lineno))
+    return findings
