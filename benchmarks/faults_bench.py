@@ -1,0 +1,144 @@
+"""Fault injection and recovery -> BENCH_faults.json.
+
+Measures what supervised recovery (ISSUE 7) actually costs on the
+process-backed pool:
+
+  * ``clean``   -- pool-of-2 proc run, no faults (the baseline);
+  * ``faulted`` -- the same run with one scripted SIGKILL
+    (``kill:generator1@batch=3``): time-to-recovery (backoff + respawn +
+    weight replay, from the supervisor's ``respawned`` event), the
+    throughput dip vs the clean run, and trainer idle;
+  * ``degraded_4_to_3`` -- runtime shrink on the inproc pool: detach one
+    of four workers mid-run and compare samples/sec against the intact
+    pool-of-4.
+
+The dip bound is generous: a respawned child pays a fresh interpreter +
+XLA-backend import inside the faulted wall-clock, which dominates these
+micro runs in a way it never would at real batch sizes.
+"""
+import json
+import os
+import threading
+import time
+
+from benchmarks.common import emit
+from repro.configs.llama_paper import smoke
+from repro.core import (CommType, CommunicationChannel, ExecutorController,
+                        FaultPlan, RestartPolicy, RewardExecutor, Supervisor,
+                        TrainerExecutor, build_generator_pool,
+                        close_all_actors)
+from repro.rl.data import ArithmeticTasks
+
+STEPS = 8
+DEGRADE_STEPS = 12
+STALENESS = 1
+N_PROMPTS, N_PER_PROMPT, MAX_NEW, CHUNK = 2, 2, 4, 2
+FAULT = "kill:generator1@batch=3"
+DIP_BOUND = 8.0                    # respawn pays a whole child cold-start
+
+
+def micro_cfg():
+    return smoke().replace(n_layers=1, d_model=32, n_heads=2, n_kv_heads=2,
+                           head_dim=16, d_ff=64, vocab=64)
+
+
+def build(n_gens=2, transport="proc", chaos=None, max_steps=STEPS):
+    cfg = micro_cfg()
+    rew = RewardExecutor(n_per_prompt=N_PER_PROMPT)
+    trn = TrainerExecutor(cfg, lr=5e-3, seed=0)
+    gens, chans = build_generator_pool(
+        cfg, trn,
+        lambda g: ArithmeticTasks(prompt_len=8, max_operand=9, ops="+",
+                                  seed=g),
+        n_generators=n_gens, n_prompts=N_PROMPTS,
+        n_per_prompt=N_PER_PROMPT, max_new=MAX_NEW, temperature=1.0,
+        chunk=CHUNK, transport=transport)
+    chans += [CommunicationChannel("completions", gens[0], rew,
+                                   CommType.GATHER),
+              CommunicationChannel("completions_with_reward", rew, trn,
+                                   CommType.SCATTER)]
+    return ExecutorController(
+        gens + [rew, trn], chans, max_steps=max_steps, mode="async",
+        staleness=STALENESS, timeout=600.0,
+        supervise=Supervisor(RestartPolicy(), chaos=chaos))
+
+
+def summarize(ctl, hist, steps) -> dict:
+    wall = ctl.stats["wall_s"]
+    samples = steps * N_PROMPTS * N_PER_PROMPT
+    return {
+        "wall_s": wall,
+        "train_idle_s": ctl.stats["train_idle_s"],
+        "samples_per_s": samples / max(wall, 1e-9),
+        "completed_all_batches":
+            [h["step"] for h in hist] == list(range(steps)),
+        "max_staleness": max(ctl.staleness_hist) if ctl.staleness_hist
+            else 0,
+    }
+
+
+def main() -> None:
+    clean = build()
+    rc = summarize(clean, clean.run(), STEPS)
+
+    chaos = FaultPlan.parse(FAULT)
+    faulty = build(chaos=chaos)
+    rf = summarize(faulty, faulty.run(), STEPS)
+    respawns = faulty.supervisor.events("respawned")
+    rf["respawns"] = len(respawns)
+    rf["time_to_recovery_s"] = respawns[0]["recovery_s"] if respawns \
+        else None
+
+    # runtime shrink 4 -> 3: the degrade path without a corpse, so the
+    # comparison isolates remapping cost from child cold-start
+    degraded = build(n_gens=4, transport="inproc", max_steps=DEGRADE_STEPS)
+
+    def shrink():
+        deadline = time.monotonic() + 120.0
+        while len(degraded.history) < 4 and time.monotonic() < deadline:
+            time.sleep(0.02)
+        degraded.detach_generator("generator3")
+
+    t = threading.Thread(target=shrink)
+    t.start()
+    rd = summarize(degraded, degraded.run(), DEGRADE_STEPS)
+    t.join(timeout=120.0)
+    rd["pool_resized"] = [e["n_workers"]
+                          for e in degraded.supervisor.events("pool-resized")]
+    intact = build(n_gens=4, transport="inproc", max_steps=DEGRADE_STEPS)
+    ri = summarize(intact, intact.run(), DEGRADE_STEPS)
+
+    report = {
+        "steps": STEPS, "staleness": STALENESS, "fault": FAULT,
+        "batch": {"n_prompts": N_PROMPTS, "n_per_prompt": N_PER_PROMPT,
+                  "max_new": MAX_NEW, "chunk": CHUNK},
+        "clean": rc,
+        "faulted": rf,
+        "throughput_dip_ratio": rf["wall_s"] / max(rc["wall_s"], 1e-9),
+        "degraded_4_to_3": rd,
+        "intact_pool4": ri,
+    }
+    report["recovered"] = bool(respawns) and rf["completed_all_batches"] \
+        and rf["max_staleness"] <= STALENESS
+    report["bounded_dip"] = report["throughput_dip_ratio"] <= DIP_BOUND
+    report["degrade_completed"] = rd["completed_all_batches"] \
+        and rd["pool_resized"] == [3]
+
+    out = os.environ.get("REPRO_FAULTS_JSON", "BENCH_faults.json")
+    with open(out, "w") as f:
+        json.dump(report, f, indent=2)
+    emit("faults_clean", rc["wall_s"] * 1e6 / STEPS,
+         f"samples_per_s={rc['samples_per_s']:.1f}")
+    emit("faults_killed", rf["wall_s"] * 1e6 / STEPS,
+         f"recovery_s={rf['time_to_recovery_s']};"
+         f"dip={report['throughput_dip_ratio']:.2f}")
+    emit("faults_recovered", 0.0, str(report["recovered"]))
+    emit("faults_degrade_4_to_3", rd["wall_s"] * 1e6 / DEGRADE_STEPS,
+         f"samples_per_s={rd['samples_per_s']:.1f};"
+         f"pool4={ri['samples_per_s']:.1f}")
+    emit("faults_json", 0.0, out)
+    close_all_actors()
+
+
+if __name__ == "__main__":
+    main()

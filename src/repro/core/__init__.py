@@ -12,10 +12,14 @@ _EXPORTS = {
     "ShmTransport": "repro.core.actors",
     "SocketTransport": "repro.core.actors",
     "Transport": "repro.core.actors",
+    "SpawnSpec": "repro.core.actors",
     "as_handle": "repro.core.actors",
     "close_all_actors": "repro.core.actors",
     "serve_actor_host": "repro.core.actors",
     "spawn_actor": "repro.core.actors",
+    "FaultPlan": "repro.core.supervise",
+    "RestartPolicy": "repro.core.supervise",
+    "Supervisor": "repro.core.supervise",
     "serialize": "repro.core.wire",
     "deserialize": "repro.core.wire",
     "WeightFabric": "repro.core.fabric",

@@ -630,6 +630,8 @@ class _RpcTransport(Transport):
         self._stash: collections.deque = collections.deque()
         self._closed = False
         self.call_timeout = call_timeout
+        self.on_death = None             # liveness hook: cb(ActorDied)
+        self._death_notified = False
         _LIVE_TRANSPORTS.add(self)
 
     # ------------------------------------------------------------ plumbing --
@@ -649,8 +651,16 @@ class _RpcTransport(Transport):
 
     def _died(self, what) -> ActorDied:
         self._closed = True
-        return ActorDied(
+        err = ActorDied(
             f"actor '{self.name}' {self._exit_desc()} during {what}")
+        cb, self.on_death = self.on_death, None
+        if cb is not None and not self._death_notified:
+            self._death_notified = True
+            try:
+                cb(err)
+            except Exception:                # pragma: no cover - diagnostics
+                _log.exception("on_death callback for '%s'", self.name)
+        return err
 
     def _decode_frame(self, frame, what):
         """One decoded frame: acks are internal, messages come back."""
@@ -1183,6 +1193,35 @@ class ActorHandle:
     def close(self):
         self.transport.close()
 
+    def respawn(self) -> "ActorHandle":
+        """Rebuild this actor from its recorded spawn spec, swapping the
+        fresh transport in place.
+
+        Identity is the handle object (see class docstring), so every
+        structure holding it -- pools, weight channels, controller maps
+        -- follows the respawn automatically.  The old transport is
+        closed first, which reaps the dead process and unlinks any shm
+        segments it owned; the new executor starts blank (``init`` and
+        weight replay are the supervisor's job)."""
+        spec = getattr(self, "spawn_spec", None)
+        if spec is None:
+            raise RuntimeError(
+                f"actor '{self.name}' has no recorded spawn spec "
+                "(not created via spawn_actor?)")
+        try:
+            self.transport.close()
+        except Exception as e:               # pragma: no cover - diagnostics
+            _log.debug("closing dead transport for '%s': %r", self.name, e)
+        t = spec.build()
+        self.transport = t
+        d = t.describe()
+        self.name = d["name"]
+        self.role = d["role"]
+        self.chunk_hooks = d.get("chunk_hooks", False)
+        self.staged_weights = d.get("staged_weights", False)
+        self._pinned_hooks = d.get("pinned_hooks", False)
+        return self
+
     # -- chunk-stepping collaborator surface (RolloutScheduler) -------------
     # The scheduler's executor contract is advance_chunk(job, state) with
     # in-place job mutation.  Over a process boundary the mutation happens
@@ -1244,6 +1283,61 @@ def _next_socket_address() -> Optional[Tuple[str, int]]:
     return (host or "127.0.0.1", int(port))
 
 
+@dataclass(frozen=True)
+class SpawnSpec:
+    """Everything needed to (re)build an actor identically: recorded on
+    every handle by ``spawn_actor`` (``handle.spawn_spec``), so a
+    supervisor can respawn a dead actor -- same factory, same seed and
+    kwargs, same transport, device placement and address -- or a pool
+    can hot-attach a spare built from a spec alone."""
+
+    factory: Any
+    args: Tuple = ()
+    kwargs: Any = None
+    transport: str = "inproc"
+    spawn_timeout: float = 180.0
+    call_timeout: float = 600.0
+    device_spec: Optional[DeviceSpec] = None
+    address: Optional[Tuple[str, int]] = None
+
+    def build(self) -> Transport:
+        """A fresh transport hosting a newly constructed executor."""
+        kwargs = dict(self.kwargs or {})
+        if self.transport == "inproc":
+            if self.device_spec is not None and \
+                    self.device_spec.mesh_shape and "mesh" not in kwargs:
+                kwargs["mesh"] = self.device_spec.build_mesh()
+            return InprocTransport(self.factory(*self.args, **kwargs))
+        if self.transport == "proc":
+            return ProcTransport(
+                self.factory, self.args, kwargs,
+                spawn_timeout=self.spawn_timeout,
+                call_timeout=self.call_timeout,
+                device_spec=self.device_spec)
+        if self.transport == "shm":
+            return ShmTransport(
+                self.factory, self.args, kwargs,
+                spawn_timeout=self.spawn_timeout,
+                call_timeout=self.call_timeout,
+                device_spec=self.device_spec)
+        if self.transport == "socket":
+            return SocketTransport(
+                self.factory, self.args, kwargs, address=self.address,
+                spawn_timeout=self.spawn_timeout,
+                call_timeout=self.call_timeout,
+                device_spec=self.device_spec)
+        raise ValueError(
+            f"unknown transport {self.transport!r}: expected 'inproc', "
+            f"'proc', 'shm' or 'socket'")
+
+    def spawn(self) -> ActorHandle:
+        """Build the transport and wrap it in a handle carrying this
+        spec (the respawnable form of ``spawn_actor``)."""
+        h = ActorHandle(self.build())
+        h.spawn_spec = self
+        return h
+
+
 def spawn_actor(factory, *args, transport: Optional[str] = None,
                 spawn_timeout: float = 180.0, call_timeout: float = 600.0,
                 device_spec: Optional[DeviceSpec] = None,
@@ -1260,28 +1354,26 @@ def spawn_actor(factory, *args, transport: Optional[str] = None,
     ``REPRO_TRANSPORT`` (default ``inproc``).  ``device_spec`` pins the
     child's device count / submesh.  The factory and arguments must be
     picklable for every remote transport.
+
+    The resolved spec is recorded as ``handle.spawn_spec``, which is
+    what lets a ``Supervisor`` respawn the actor after a crash.
     """
     transport = transport or os.environ.get("REPRO_TRANSPORT", "inproc")
+    if transport == "socket" and address is None:
+        address = _next_socket_address()
+    spec = SpawnSpec(factory, tuple(args), dict(kwargs), transport,
+                     spawn_timeout, call_timeout, device_spec, address)
     if transport == "inproc":
+        # keep the identity-caching as_handle path: wiring sites that
+        # name the same raw executor must share one canonical handle
         if device_spec is not None and device_spec.mesh_shape and \
                 "mesh" not in kwargs:
             kwargs["mesh"] = device_spec.build_mesh()
-        return as_handle(factory(*args, **kwargs))
-    if transport == "proc":
-        return ActorHandle(ProcTransport(
-            factory, args, kwargs, spawn_timeout=spawn_timeout,
-            call_timeout=call_timeout, device_spec=device_spec))
-    if transport == "shm":
-        return ActorHandle(ShmTransport(
-            factory, args, kwargs, spawn_timeout=spawn_timeout,
-            call_timeout=call_timeout, device_spec=device_spec))
-    if transport == "socket":
-        return ActorHandle(SocketTransport(
-            factory, args, kwargs,
-            address=address if address is not None
-            else _next_socket_address(),
-            spawn_timeout=spawn_timeout, call_timeout=call_timeout,
-            device_spec=device_spec))
+        h = as_handle(factory(*args, **kwargs))
+        h.spawn_spec = spec
+        return h
+    if transport in ("proc", "shm", "socket"):
+        return spec.spawn()
     raise ValueError(
         f"unknown transport {transport!r}: expected 'inproc', 'proc', "
         f"'shm' or 'socket'")

@@ -35,7 +35,7 @@ from dataclasses import dataclass
 from typing import Optional
 
 from repro.core.actors import ActorHandle, as_handle
-from repro.core.offpolicy import StalenessBuffer
+from repro.core.offpolicy import Closed, StalenessBuffer
 
 
 class StagedWeights:
@@ -150,6 +150,21 @@ class CommunicationChannel:
             raise queue.Empty
         self._hand_over(data, version)
         return version, data
+
+    def drain(self) -> int:
+        """Discard every queued payload WITHOUT delivering it (the
+        inbound actor died: its queue holds versions nobody can apply).
+        Staged markers run their ``on_commit`` so the fabric's slot
+        accounting never waits on a corpse.  Returns the count."""
+        n = 0
+        while True:
+            try:
+                _, (_, data) = self._q.pop_wait(timeout=0)
+            except (TimeoutError, Closed):
+                return n
+            if isinstance(data, StagedWeights) and data.on_commit is not None:
+                data.on_commit()
+            n += 1
 
     def close(self):
         """Wake all threads blocked in send/recv with ``Closed``.

@@ -64,12 +64,14 @@ import threading
 import time
 from typing import Dict, List, Optional
 
-from repro.core.actors import ActorHandle, as_handle
-from repro.core.channels import CommType, CommunicationChannel
+from repro.core.actors import ActorDied, ActorHandle, as_handle
+from repro.core.channels import CommType, CommunicationChannel, \
+    WeightsCommunicationChannel
 from repro.core.fabric import WeightFabric, payload_key
 from repro.core.genpool import AdaptiveStalenessController, FixedStaleness, \
     GeneratorPool, PoolConfig
 from repro.core.offpolicy import Closed, StalenessBuffer
+from repro.core.supervise import RESPAWNED, RestartPolicy, Supervisor
 
 
 def _merge_intervals(ivs):
@@ -125,8 +127,17 @@ class SyncExecutorController:
                  timeout: float = 600.0,
                  pool: Optional[PoolConfig] = None,
                  adaptive: Optional[AdaptiveStalenessController] = None,
-                 overlap_publish: bool = True):
+                 overlap_publish: bool = True,
+                 supervise=None):
         assert mode in ("sync", "async")
+        # supervise: None/False = fail-fast (the pre-supervision default);
+        # True = a Supervisor with default RestartPolicy; a RestartPolicy
+        # or a fully-configured Supervisor are taken as given
+        if supervise is True:
+            supervise = Supervisor()
+        elif isinstance(supervise, RestartPolicy):
+            supervise = Supervisor(supervise)
+        self.supervisor: Optional[Supervisor] = supervise or None
         handles = [as_handle(e) for e in executor_group]
         names = [h.name for h in handles]
         assert len(names) == len(set(names)), \
@@ -155,6 +166,7 @@ class SyncExecutorController:
         self._initialized = False
         self._tick = 0                       # trained steps == weight version
         self._weight_bufs: Dict[int, StalenessBuffer] = {}
+        self._pushed_tick: Dict[int, int] = {}   # retry idempotency guard
 
     # ------------------------------------------------------------ plumbing --
 
@@ -178,11 +190,19 @@ class SyncExecutorController:
         version ``tick`` and deliver what the StalenessBuffer releases --
         exactly version ``tick - staleness`` once tick >= staleness.  (The
         seed's ad-hoc deque delivered the *same-tick* push at staleness=1:
-        zero-step delivery lag.)"""
+        zero-step delivery lag.)
+
+        Idempotent per (channel, tick): a supervised retry of a failed
+        pipeline stage must not push the same version twice.  A delivery
+        lost between our push and the inbound actor's death is replayed
+        by the supervisor from its recorded seed, never from here."""
         for ch in (channels if channels is not None
                    else self._weight_channels()):
+            if self._pushed_tick.get(id(ch), -1) >= tick:
+                continue
             buf = self._weight_buf(ch)
             buf.push(tick, ch.outbound.call("get_output", ch.name))
+            self._pushed_tick[id(ch)] = tick
             released = buf.pop()
             if released is not None:
                 version, params = released
@@ -235,6 +255,7 @@ class SyncExecutorController:
             buf = self._weight_buf(ch)
             buf.push(0, params)
             buf.pop()                       # delay=0 releases it; s>=1 keeps
+            self._pushed_tick[id(ch)] = 0
             ch.deliver(params, version=0)
         self._initialized = True
 
@@ -334,12 +355,49 @@ class AsyncExecutorController(SyncExecutorController):
         self._fabric = WeightFabric(
             self._live_weight_channels, overlap=self.overlap_publish,
             max_staged=2 * max_bound + n_gens + 4, timeout=self.timeout)
+        self._pool: Optional[GeneratorPool] = None
+        if self.supervisor is not None:
+            self.supervisor.attach_fabric(self._fabric, self._bounds)
+            for gen in self.generators:
+                self.supervisor.register(
+                    gen, channels=self._channels_by_gen[gen.name])
+            # the fabric's publish loop is a chaos injection site too
+            self._fabric.chaos = self.supervisor.chaos
 
     # The sequential reference: identical schedule, identical numerics, one
     # thread, no overlap.  Used to verify the threaded path bit-for-bit.
     def run_sequential(self) -> List[Dict]:
         self._claim_entry_point("sequential")
         return SyncExecutorController.run(self)
+
+    def init(self):
+        if self._initialized:
+            return
+        super().init()
+        # init() delivers version 0 directly, so the fabric never sees
+        # it: seed its replay source so a subscriber respawning before
+        # the first publish still gets staleness-legal weights
+        payloads: Dict[tuple, object] = {}
+        for ch in self._live_weight_channels:
+            key = payload_key(ch)
+            if key not in payloads:
+                payloads[key] = ch.outbound.call("get_output", ch.name)
+        self._fabric.seed(0, payloads)
+        if self.supervisor is not None:
+            # non-generator weight consumers (the frozen reference) are
+            # replayed from their recorded version-0 seed, not from the
+            # fabric: only their *first* sync ever sticks
+            by_actor: Dict[str, list] = {}
+            for ch in self._aux_weight_channels:
+                if ch.inbound.role not in ("generator", "trainer"):
+                    by_actor.setdefault(ch.inbound.name, []).append(ch)
+            for chs in by_actor.values():
+                h = chs[0].inbound
+                if self.supervisor.covers(h):
+                    continue
+                seed = chs[0].outbound.call("get_output", chs[0].name)
+                self.supervisor.register(h, channels=chs,
+                                         seed_weights=(0, seed))
 
     def shutdown(self):
         """Close the sample queue, all channels and the weight fabric:
@@ -387,6 +445,7 @@ class AsyncExecutorController(SyncExecutorController):
         others = [h for h in self.executors.values()
                   if h not in self.generators]
         pool_chs = self._pool_data_channels()
+        chaos = self.supervisor.chaos if self.supervisor is not None else None
         pending: Dict[int, tuple] = {}       # out-of-order fan-in reorder
         for n in range(first, last):
             t0 = time.monotonic()
@@ -400,20 +459,34 @@ class AsyncExecutorController(SyncExecutorController):
             wait = time.monotonic() - t0
             version, item = pending.pop(n)
             depth = len(self._sample_queue) + len(pending)
+            if chaos is not None:
+                chaos.fire_any("consume", n)
             t0 = time.perf_counter()
             busy0 = time.monotonic()
-            for h in others:
-                h.call("set_step", n)
-            if n > 0:
-                # non-generator weight consumers get the same delayed
-                # delivery the sequential path gives them
-                self._sync_weights(n, channels=self._aux_weight_channels)
-            for ch in self._data_channels():
-                if ch in pool_chs:
-                    ch.deliver(item["snapshot"][ch.name])
-                else:
-                    ch.communicate()
-                ch.inbound.call("step")
+            # The per-batch pipeline retries around a supervised aux-actor
+            # death (set_step is idempotent, _sync_weights guards its tick,
+            # and scoring stages recompute the same outputs from the same
+            # inputs); the trainer's optimizer update is the *last* hop, so
+            # any failure recoverable here happened strictly before it.
+            while True:
+                try:
+                    for h in others:
+                        h.call("set_step", n)
+                    if n > 0:
+                        # non-generator weight consumers get the same
+                        # delayed delivery the sequential path gives them
+                        self._sync_weights(
+                            n, channels=self._aux_weight_channels)
+                    for ch in self._data_channels():
+                        if ch in pool_chs:
+                            ch.deliver(item["snapshot"][ch.name])
+                        else:
+                            ch.communicate()
+                        ch.inbound.call("step")
+                    break
+                except (ActorDied, TimeoutError) as e:
+                    if not self._recover_consumer_actor(e):
+                        raise
             # weight publication goes to the fabric: snapshot the source
             # port *now* (synchronously -- the next trainer step must
             # not leak into version n+1), then let the publisher thread
@@ -437,6 +510,63 @@ class AsyncExecutorController(SyncExecutorController):
                          gen_idle_s=item["gen_idle_s"], train_idle_s=wait)
             self._maybe_checkpoint(n)
 
+    def _recover_consumer_actor(self, error: BaseException) -> bool:
+        """A consumer-side pipeline hop failed: find the supervised
+        non-generator actor that died and recover it.  False (retry is
+        hopeless) when unsupervised, when nothing covered actually died,
+        or when the restart budget is gone -- the reward/reference
+        stages are essential, so a lost one fails the run."""
+        sup = self.supervisor
+        if sup is None or not isinstance(error, ActorDied):
+            return False
+        for h in self.executors.values():
+            if h.role in ("generator", "trainer"):
+                continue            # pool workers recover their own; the
+            if sup.covers(h) and not h.healthy():  # trainer is fail-fast
+                return sup.recover(h, error) == RESPAWNED
+        return False
+
+    # ------------------------------------------------------ elastic resize --
+
+    def attach_generator(self, spec) -> ActorHandle:
+        """Grow the pool mid-run: spawn a generator from ``spec`` (a
+        ``SpawnSpec``), or adopt an already-spawned ``ActorHandle`` -- a
+        pre-warmed hot spare, e.g. one standing by over
+        ``SocketTransport`` -- then wire a weight channel, replay the
+        latest committed weights, and hand it a worker thread."""
+        handle = spec if isinstance(spec, ActorHandle) else spec.spawn()
+        assert handle.role == "generator", \
+            f"attach_generator got role '{handle.role}'"
+        assert handle.name not in self.executors, \
+            f"actor name '{handle.name}' already registered"
+        template = self._live_weight_channels[0]
+        ch = WeightsCommunicationChannel(template.name, self.trainer, handle,
+                                         comm_type=template.comm_type)
+        ch.resize(template.capacity)
+        self.executors[handle.name] = handle
+        self.generators.append(handle)
+        self._channels_by_gen[handle.name] = [ch]
+        self._live_weight_channels.append(ch)
+        self.channels.append(ch)
+        handle.call("init")
+        if self.supervisor is not None:
+            self.supervisor.register(handle, channels=[ch])
+        # subscribe + replay the latest committed version so the newcomer
+        # is admission-legal before the next publish
+        self._fabric.add_subscriber(ch)
+        self._pool.attach(handle, [ch])
+        return handle
+
+    def detach_generator(self, name: str):
+        """Shrink the pool mid-run: stop publishing to ``name``, drain
+        its queued weight versions, and remap its unstarted batches to
+        the survivors.  The handle stays registered and alive; the
+        caller owns closing it (or keeping it warm)."""
+        for ch in self._channels_by_gen.get(name, []):
+            self._fabric.detach(ch)
+            ch.drain()
+        return self._pool.detach(name)
+
     def run(self) -> List[Dict]:
         """Run ``max_steps`` (more) threaded steps; repeated calls continue
         (counters, channel queues and executor state persist)."""
@@ -451,7 +581,8 @@ class AsyncExecutorController(SyncExecutorController):
             self.generators, self._channels_by_gen,
             self._pool_data_channels(), self._sample_queue, self._bounds,
             config=self.pool_config, timeout=self.timeout,
-            await_fn=self._await)
+            await_fn=self._await, supervisor=self.supervisor)
+        self._pool = pool
 
         def guarded(fn, *args):
             def body():
@@ -465,22 +596,46 @@ class AsyncExecutorController(SyncExecutorController):
                     self.shutdown()          # wake peers blocked in comms
             return body
 
+        # dynamic thread registry: attach_generator() may add workers
+        # mid-run, so the join loop re-snapshots until nothing is alive
+        # *and* nothing new appeared
+        threads: List[threading.Thread] = []
+        threads_lock = threading.Lock()
+
+        def spawn_thread(name, loop):
+            t = threading.Thread(target=guarded(loop), name=name)
+            with threads_lock:
+                threads.append(t)
+            t.start()
+            return t
+
+        pool._spawn_thread = spawn_thread
         wall0 = time.monotonic()
         pub0 = len(self._fabric.intervals)
-        threads = [threading.Thread(target=guarded(loop), name=name)
-                   for name, loop in pool.loops(first, last, stop)]
-        threads.append(threading.Thread(
-            target=guarded(self._consumer_loop, first, last, stop,
-                           train_iv, publish_wait),
-            name="consumer"))
-        for t in threads:
-            t.start()
-        for t in threads:
-            t.join(timeout=self.timeout)
-        if any(t.is_alive() for t in threads):
+        for name, loop in pool.loops(first, last, stop):
+            spawn_thread(name, loop)
+        spawn_thread("consumer",
+                     lambda: self._consumer_loop(first, last, stop,
+                                                 train_iv, publish_wait))
+        deadline = time.monotonic() + self.timeout
+        stragglers: List[threading.Thread] = []
+        while True:
+            with threads_lock:
+                snapshot = list(threads)
+            for t in snapshot:
+                t.join(timeout=0.2)
+            alive = [t for t in snapshot if t.is_alive()]
+            with threads_lock:
+                grown = len(threads) > len(snapshot)
+            if not alive and not grown:
+                break
+            if time.monotonic() > deadline:
+                stragglers = alive
+                break
+        if stragglers:
             stop.set()
             self.shutdown()                  # unblock and join stragglers
-            for t in threads:
+            for t in stragglers:
                 t.join(timeout=5.0)
             if not errors:
                 raise TimeoutError(

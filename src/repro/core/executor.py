@@ -10,6 +10,7 @@ from __future__ import annotations
 
 import os
 import threading
+import time
 from typing import Any, Dict, Optional
 
 import jax
@@ -87,6 +88,12 @@ class Executor:
     def ping(self) -> str:
         """Health endpoint: a live actor answers with its name."""
         return self.name
+
+    def chaos_hang(self, seconds: float):
+        """Fault-injection endpoint (FaultPlan 'hang'): wedge this
+        actor's server loop so the caller's ``call_timeout`` fires and
+        the supervisor's hang-vs-slow triage can be exercised."""
+        time.sleep(float(seconds))
 
     # ------------------------------------------- weight-fabric slot surface --
     # The weight-sync fabric (repro.core.fabric) separates *publication*
@@ -182,7 +189,12 @@ class GeneratorExecutor(Executor):
     def set_weights(self, params, version: Optional[int] = None):
         """Receives DDMA'd trainer weights; applies generator quantization.
         ``version`` tags which trainer update produced these weights, so
-        every batch this executor emits can be staleness-checked."""
+        every batch this executor emits can be staleness-checked.
+        Versions only move forward: a delivery older than the current
+        weights (possible when a supervised replay races regular channel
+        drains around a respawn) is dropped, never applied."""
+        if version is not None and version < self.weight_version:
+            return
         self.params = ddma.quantize_dequant(params) if self.quantize \
             else params
         if version is not None:
@@ -235,6 +247,30 @@ class GeneratorExecutor(Executor):
     def _job_params(self, job):
         return self._pinned[job.params.key] \
             if isinstance(job.params, PinnedParams) else job.params
+
+    def repin_job(self, job):
+        """Re-snapshot an in-flight job's params on the CURRENT weights.
+
+        Supervised re-admission after a respawn: the job's resumable
+        ``RolloutState`` survived caller-side, but its admission params
+        snapshot (or executor-side pin) died with the process, so the
+        job is re-pinned under the replayed -- newest staleness-legal --
+        version.  Versions only move forward here; the caller re-asserts
+        the bounded-staleness contract on the returned job."""
+        assert self.params is not None, \
+            "repin before weight replay: respawn must replay weights first"
+        assert self.weight_version >= job.weight_version, (
+            f"replayed version {self.weight_version} is older than the "
+            f"dead worker's admission version {job.weight_version}")
+        if isinstance(job.params, PinnedParams):
+            self._pinned.pop(job.params.key, None)
+            self._pin_seq += 1
+            self._pinned[self._pin_seq] = self.params
+            job.params = PinnedParams(self._pin_seq)
+        else:
+            job.params = self.params
+        job.weight_version = self.weight_version
+        return job
 
     def advance_chunk(self, job, state):
         """One resumable ``rollout_chunk`` with the job's key discipline."""

@@ -53,8 +53,20 @@ import threading
 import time
 from typing import Any, Dict, List, Optional, Tuple
 
+from repro.core.actors import ActorDied
 from repro.core.channels import StagedWeights
 from repro.core.offpolicy import Closed
+
+#: exception classes that indicate ONE subscriber's transport failed --
+#: isolated per-channel so the shared publish loop keeps serving the
+#: healthy peers -- as opposed to a systemic publisher error
+_SUBSCRIBER_FAILURES = (ActorDied, TimeoutError, BrokenPipeError,
+                        ConnectionError, OSError, EOFError)
+
+
+class Detached(RuntimeError):
+    """Recorded as a subscriber's failure when it was detached on
+    purpose (supervised respawn in progress, or a pool shrink)."""
 
 
 def payload_key(ch) -> Tuple[str, int]:
@@ -79,11 +91,19 @@ class WeightFabric:
         self._cond = threading.Condition()
         self._queue: collections.deque = collections.deque()
         self._staged_out: Dict[int, int] = {}   # id(ch) -> uncommitted slots
+        self._dead: Dict[int, BaseException] = {}  # id(ch) -> why detached
+        self._latest: Optional[Tuple[int, Dict]] = None   # replay source
+        self._busy_version: Optional[int] = None
         self._thread: Optional[threading.Thread] = None
         self._quiescing = False
         self._closed = False
         self._busy = False
         self._error: Optional[BaseException] = None
+        #: hook: cb(ch, exc) fired (outside the fabric lock) when a
+        #: subscriber's transport fails mid-publish and is detached
+        self.on_subscriber_down = None
+        #: optional FaultPlan fired per (subscriber, version) publication
+        self.chaos = None
         #: publisher busy spans (t0, t1) and per-version wall seconds
         self.intervals: List[Tuple[float, float]] = []
         self.published: List[Tuple[int, float]] = []
@@ -151,37 +171,69 @@ class WeightFabric:
 
     def _publish_now(self, version: int, payloads):
         t0 = time.monotonic()
-        transferred: Dict[tuple, Any] = {}
-        for ch in self.channels:
-            pkey = payload_key(ch)
-            # one reshard per distinct (payload, comm type, target mesh),
-            # fanned out to every same-target channel
-            tkey = (pkey, ch.comm_type, id(ch.inbound.mesh))
-            if tkey not in transferred:
-                transferred[tkey] = ch._transfer(payloads[pkey])
-            prepared = transferred[tkey]
-            if ch.inbound.staged_weights and ch.inbound.transport.remote:
-                # data plane: ship the bytes now (shm scatter / socket
-                # write, overlapped with generation); the channel later
-                # delivers only the commit marker
-                self._wait_slot(ch)
-                ch.inbound.cast("stage_weights", prepared, version)
-                with self._cond:
-                    self._staged_out[id(ch)] = \
-                        self._staged_out.get(id(ch), 0) + 1
-                ch.send_transferred(
-                    StagedWeights(version,
-                                  on_commit=lambda c=ch: self._released(c)),
-                    version=version, timeout=self.timeout)
-            else:
-                ch.send_transferred(prepared, version=version,
-                                    timeout=self.timeout)
-        t1 = time.monotonic()
-        # the controller reads these while the publisher thread is live
-        # (overlap accounting), so the appends take the fabric lock
         with self._cond:
-            self.intervals.append((t0, t1))
-            self.published.append((version, t1 - t0))
+            self._busy_version = version
+        transferred: Dict[tuple, Any] = {}
+        down: List[tuple] = []
+        try:
+            for ch in self.channels:
+                with self._cond:
+                    if id(ch) in self._dead:
+                        continue             # detached: supervisor replays
+                try:
+                    self._publish_one(ch, version, payloads, transferred)
+                except Closed:               # controller shutdown, systemic
+                    raise
+                except _SUBSCRIBER_FAILURES as e:
+                    # ONE subscriber's transport failed: record it, free
+                    # its slots, keep publishing to the healthy peers
+                    self._mark_dead(ch, e)
+                    down.append((ch, e))
+        finally:
+            t1 = time.monotonic()
+            # the controller reads these while the publisher thread is
+            # live (overlap accounting), so the appends take the lock
+            with self._cond:
+                self._busy_version = None
+                self.intervals.append((t0, t1))
+                self.published.append((version, t1 - t0))
+                if self._latest is None or version >= self._latest[0]:
+                    self._latest = (version, payloads)
+                self._cond.notify_all()
+        cb = self.on_subscriber_down
+        if cb is not None:
+            for ch, e in down:               # outside the fabric lock
+                try:
+                    cb(ch, e)
+                except Exception:            # pragma: no cover - diagnostics
+                    pass
+
+    def _publish_one(self, ch, version, payloads, transferred):
+        if self.chaos is not None:
+            self.chaos.fire("publish", ch.inbound.name, version)
+        pkey = payload_key(ch)
+        # one reshard per distinct (payload, comm type, target mesh),
+        # fanned out to every same-target channel
+        tkey = (pkey, ch.comm_type, id(ch.inbound.mesh))
+        if tkey not in transferred:
+            transferred[tkey] = ch._transfer(payloads[pkey])
+        prepared = transferred[tkey]
+        if ch.inbound.staged_weights and ch.inbound.transport.remote:
+            # data plane: ship the bytes now (shm scatter / socket
+            # write, overlapped with generation); the channel later
+            # delivers only the commit marker
+            self._wait_slot(ch)
+            ch.inbound.cast("stage_weights", prepared, version)
+            with self._cond:
+                self._staged_out[id(ch)] = \
+                    self._staged_out.get(id(ch), 0) + 1
+            ch.send_transferred(
+                StagedWeights(version,
+                              on_commit=lambda c=ch: self._released(c)),
+                version=version, timeout=self.timeout)
+        else:
+            ch.send_transferred(prepared, version=version,
+                                timeout=self.timeout)
 
     # ---------------------------------------------------------------- slots --
 
@@ -192,12 +244,22 @@ class WeightFabric:
             while self._staged_out.get(id(ch), 0) >= self.max_staged:
                 if self._closed:
                     raise Closed("WeightFabric closed")
-                if not self._cond.wait(0.2) and \
-                        time.monotonic() > deadline:
-                    raise TimeoutError(
-                        f"subscriber '{ch.inbound.name}' held "
-                        f"{self.max_staged} staged weight slots for "
-                        f"{self.timeout}s without committing")
+                if id(ch) in self._dead:
+                    raise ActorDied(
+                        f"subscriber '{ch.inbound.name}' detached while "
+                        f"the publisher waited for a slot")
+                if not self._cond.wait(0.2):
+                    if not ch.inbound.healthy():
+                        # a corpse never commits: don't park the shared
+                        # publisher on its held slots
+                        raise ActorDied(
+                            f"subscriber '{ch.inbound.name}' died holding "
+                            f"{self.max_staged} staged weight slots")
+                    if time.monotonic() > deadline:
+                        raise TimeoutError(
+                            f"subscriber '{ch.inbound.name}' held "
+                            f"{self.max_staged} staged weight slots for "
+                            f"{self.timeout}s without committing")
 
     def _released(self, ch):
         with self._cond:
@@ -208,6 +270,100 @@ class WeightFabric:
     def staged_out(self, ch) -> int:
         with self._cond:
             return self._staged_out.get(id(ch), 0)
+
+    # ---------------------------------------------------- subscriber set --
+
+    def _mark_dead(self, ch, exc):
+        with self._cond:
+            self._dead.setdefault(id(ch), exc)
+            self._staged_out.pop(id(ch), None)   # a corpse's slots are free
+            self._cond.notify_all()
+
+    def owns(self, ch) -> bool:
+        return any(c is ch for c in self.channels)
+
+    def detach(self, ch, error: Optional[BaseException] = None):
+        """Stop publishing to ``ch`` (worker lost, pool shrink, or a
+        respawn in progress); its held slots stop gating the publisher.
+        Idempotent."""
+        self._mark_dead(ch, error if error is not None
+                        else Detached(f"'{ch.inbound.name}' detached"))
+
+    def subscriber_error(self, ch) -> Optional[BaseException]:
+        """Why ``ch`` is detached (None while it is being published to)."""
+        with self._cond:
+            return self._dead.get(id(ch))
+
+    def dead_subscribers(self) -> List:
+        with self._cond:
+            return [ch for ch in self.channels if id(ch) in self._dead]
+
+    def latest(self) -> Optional[Tuple[int, Dict]]:
+        """The newest fully published (version, payloads) -- the replay
+        source for re-admitted subscribers."""
+        with self._cond:
+            return self._latest
+
+    def seed(self, version: int, payloads: Dict):
+        """Record a baseline replay source (the controller's version-0
+        init delivery happens outside the fabric)."""
+        with self._cond:
+            if self._latest is None or version >= self._latest[0]:
+                self._latest = (version, payloads)
+
+    def add_subscriber(self, ch):
+        """Adopt a new channel mid-run (pool grow / hot spare): it joins
+        detached, gets the latest version replayed, then enters the
+        publish loop via ``reattach``."""
+        with self._cond:
+            if not self.owns(ch):
+                self.channels.append(ch)
+            self._dead.setdefault(id(ch), Detached("awaiting replay"))
+        return self.reattach(ch)
+
+    def reattach(self, ch, *, replay: bool = True) -> Optional[int]:
+        """Re-admit a (respawned) subscriber.
+
+        Replays the latest published version straight into the actor's
+        staged/committed slots -- not through the channel queue, so the
+        newcomer's ``weight_version`` is current before its worker
+        re-checks admission -- then clears the detach record between
+        publisher iterations, closing the race where a version published
+        during the replay would be skipped.  Returns the replayed
+        version (None when nothing was ever published/seeded)."""
+        deadline = time.monotonic() + self.timeout
+        delivered: Optional[int] = None
+        while True:
+            with self._cond:
+                while self._busy_version is not None:
+                    # wait out an in-flight publish so attach can't race
+                    # the skip-dead check inside _publish_now
+                    if not self._cond.wait(0.1) and \
+                            time.monotonic() > deadline:
+                        raise TimeoutError(
+                            f"publisher busy; cannot reattach "
+                            f"'{ch.inbound.name}'")
+                latest = self._latest
+                if not replay or latest is None or \
+                        (delivered is not None and latest[0] <= delivered):
+                    self._dead.pop(id(ch), None)
+                    self._staged_out.pop(id(ch), None)
+                    self._cond.notify_all()
+                    return delivered
+            version, payloads = latest
+            self._replay_into(ch, version, payloads)
+            delivered = version
+
+    def _replay_into(self, ch, version, payloads):
+        prepared = ch._transfer(payloads[payload_key(ch)])
+        if ch.inbound.staged_weights and ch.inbound.transport.remote:
+            # land it in the newcomer's slots the same way a live
+            # publish would, but commit immediately: there is no
+            # schedule to respect -- this version is already legal
+            ch.inbound.cast("stage_weights", prepared, version)
+            ch.inbound.cast("commit_weights", version)
+        else:
+            ch.inbound.cast("set_weights", prepared, version=version)
 
     # ------------------------------------------------------------ lifecycle --
 

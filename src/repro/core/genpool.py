@@ -47,8 +47,9 @@ import time
 from dataclasses import dataclass
 from typing import Callable, Dict, List, Optional
 
-from repro.core.actors import spawn_actor
+from repro.core.actors import ActorDied, spawn_actor
 from repro.core.offpolicy import PartialRolloutCache, StalenessBuffer
+from repro.core.supervise import LOST, RESPAWNED
 from repro.rl.scheduler import RolloutScheduler
 
 
@@ -56,6 +57,7 @@ def build_generator_pool(cfg, trainer, make_tasks, *, n_generators=1,
                          generator_cls=None, name="generator", seed=0,
                          weight_port="policy_model", transport=None,
                          device_spec=None, addresses=None,
+                         call_timeout=600.0,
                          **gen_kwargs):
     """The pool wiring convention, in one place: N generator actors
     (worker ``g`` named ``{name}{g}`` and seeded ``seed + g``; a pool of
@@ -83,7 +85,7 @@ def build_generator_pool(cfg, trainer, make_tasks, *, n_generators=1,
             generator_cls, cfg, make_tasks(g), seed=seed + g,
             name=name if n_generators == 1 else f"{name}{g}",
             transport=transport, device_spec=spec, address=addr,
-            **gen_kwargs)
+            call_timeout=call_timeout, **gen_kwargs)
         gens.append(gen)
         chans.append(WeightsCommunicationChannel(weight_port, trainer, gen))
     return gens, chans
@@ -107,6 +109,9 @@ class FixedStaleness:
 
     def observe(self, **kwargs):
         pass
+
+    def on_pool_resize(self, n_workers: int):
+        """Membership changed; a fixed bound stays fixed."""
 
 
 class AdaptiveStalenessController:
@@ -174,6 +179,13 @@ class AdaptiveStalenessController:
                     self._starved.clear()
             self.bound_history.append(self._bound)
 
+    def on_pool_resize(self, n_workers: int):
+        """Pool membership changed (supervised degrade, runtime attach/
+        detach): the starvation window describes a pool that no longer
+        exists, so drop it and re-tune from fresh observations."""
+        with self._lock:
+            self._starved.clear()
+
 
 class _SnapshotEmitter:
     """Scheduler collaborator over an ``ActorHandle`` that fuses harvest
@@ -182,16 +194,176 @@ class _SnapshotEmitter:
     process-backed generator ships each completed batch over the pipe
     once instead of emit-return + ``get_output`` refetch."""
 
-    def __init__(self, gen, names):
+    def __init__(self, gen, names, chaos=None):
         self._gen = gen
         self._names = list(names)
+        self._chaos = chaos
 
     def advance_chunk(self, job, state):
+        if self._chaos is not None:
+            # mid-decode injection point: "batch=N,chunk=C" faults fire
+            # here, right before chunk C of batch N advances
+            self._chaos.fire("batch", self._gen.name, job.batch_index,
+                             job.chunks_done)
         return self._gen.advance_chunk(job, state)
 
     def emit_batch(self, job, state):
         return self._gen.call("emit_batch_snapshot", job, state,
                               self._names)
+
+
+# ----------------------------------------------------------- work mapping --
+
+class WorkAssignment:
+    """Thread-safe batch-index ownership for the pool.
+
+    Initialized round-robin -- worker ``i`` owns ``first+i, first+i+N,
+    ...`` -- which is exactly the schedule the static loops produced, so
+    a no-fault run admits in the same order (pool-of-1 equivalence is
+    untouched).  The point of reifying it is what happens when
+    membership changes:
+
+      * ``fail_over(name)`` -- a worker was declared lost: its queued
+        *and* in-flight (started, unfinished) indices are redistributed
+        over the survivors, each survivor's queue re-sorted ascending.
+        Sorted order is the liveness argument: a queue head is its
+        worker's globally-smallest unadmitted index, every smaller index
+        is owned elsewhere, so the bounded-staleness admission gate
+        always eventually opens for it (the same induction the static
+        round-robin schedule relied on).
+      * ``add_worker`` / ``drain_worker`` + ``rebalance`` -- runtime
+        grow/shrink: unstarted indices re-dealt round-robin over the
+        current members; a draining worker finishes its in-flight jobs
+        but receives nothing new.
+
+    Workers exit only when ``all_done()`` (or they are retired): a
+    worker that merely emptied its own queue parks briefly instead,
+    because a peer's death may remap indices onto it at any time.
+    """
+
+    def __init__(self, names: List[str], first: int, last: int):
+        self._lock = threading.Lock()
+        n = len(names)
+        self._todo: Dict[str, collections.deque] = {
+            name: collections.deque(range(first + i, last, n))
+            for i, name in enumerate(names)}
+        self._active: Dict[str, set] = {name: set() for name in names}
+        self._retired: set = set()
+
+    # ------------------------------------------------------- worker surface --
+
+    def next_for(self, name: str) -> Optional[int]:
+        """Peek this worker's next index (None = personal queue empty)."""
+        with self._lock:
+            q = self._todo.get(name)
+            return q[0] if q else None
+
+    def start(self, name: str, n: int) -> bool:
+        """Atomically claim ``n`` for production.  False means a
+        concurrent fail_over / rebalance / drain re-dealt it to another
+        worker between this worker's peek and now -- the caller must
+        drop it and re-peek, or two workers would produce it."""
+        with self._lock:
+            try:
+                self._todo[name].remove(n)
+            except ValueError:
+                return False
+            self._active[name].add(n)
+            return True
+
+    def requeue(self, name: str, n: int):
+        """Un-claim ``n`` (its production died before completing but the
+        worker respawned): back into this worker's queue for a retry."""
+        with self._lock:
+            self._active[name].discard(n)
+            q = self._todo[name]
+            q.append(n)
+            self._todo[name] = collections.deque(sorted(q))
+
+    def finish(self, name: str, n: int):
+        with self._lock:
+            self._active[name].discard(n)
+
+    def all_done(self) -> bool:
+        with self._lock:
+            return not any(self._todo.values()) \
+                and not any(self._active.values())
+
+    def is_retired(self, name: str) -> bool:
+        with self._lock:
+            return name in self._retired
+
+    def idle(self, name: str) -> bool:
+        """Retired-and-drained: this worker's thread may exit early."""
+        with self._lock:
+            return name in self._retired and not self._todo.get(name) \
+                and not self._active.get(name)
+
+    # ---------------------------------------------------------- membership --
+
+    def survivors(self) -> List[str]:
+        with self._lock:
+            return self._survivors_locked()
+
+    def _survivors_locked(self) -> List[str]:
+        return [k for k in self._todo if k not in self._retired]
+
+    def _deal_locked(self, indices, names):
+        todo = self._todo                    # caller holds self._lock
+        for j, n in enumerate(sorted(indices)):
+            todo[names[j % len(names)]].append(n)
+        for k in names:
+            todo[k] = collections.deque(sorted(todo[k]))
+
+    def fail_over(self, name: str) -> List[int]:
+        """Redistribute a lost worker's unfinished indices over the
+        survivors; raises ``RuntimeError`` when none remain (the caller
+        falls back to fail-fast)."""
+        with self._lock:
+            moved = sorted(set(self._todo.get(name, ())) |
+                           self._active.get(name, set()))
+            survivors = [k for k in self._survivors_locked() if k != name]
+            if not survivors:
+                raise RuntimeError(
+                    f"no surviving workers to take over for '{name}'")
+            self._todo[name] = collections.deque()
+            self._active[name] = set()
+            self._retired.add(name)
+            self._deal_locked(moved, survivors)
+            return moved
+
+    def add_worker(self, name: str):
+        with self._lock:
+            self._todo.setdefault(name, collections.deque())
+            self._active.setdefault(name, set())
+            self._retired.discard(name)
+
+    def drain_worker(self, name: str) -> List[int]:
+        """Runtime shrink: stop feeding ``name`` (it finishes what it
+        already admitted), moving its queued indices to the others."""
+        with self._lock:
+            moved = list(self._todo.get(name, ()))
+            self._todo[name] = collections.deque()
+            self._retired.add(name)
+            survivors = self._survivors_locked()
+            if moved and not survivors:
+                raise RuntimeError(
+                    f"cannot drain '{name}': no other workers")
+            self._deal_locked(moved, survivors)
+            return moved
+
+    def rebalance(self):
+        """Re-deal every *unstarted* index round-robin (ascending) over
+        the current members (after a grow)."""
+        with self._lock:
+            names = self._survivors_locked()
+            pending = sorted(n for q in self._todo.values() for n in q)
+            for k in self._todo:
+                self._todo[k] = collections.deque()
+            self._deal_locked(pending, names)
+
+
+_RETIRED = object()        # _drain_one: detached mid-wait, give up cleanly
 
 
 # ---------------------------------------------------------------- the pool --
@@ -241,7 +413,7 @@ class GeneratorPool:
     def __init__(self, generators, channels_by_gen: Dict[str, list],
                  data_channels, sample_queue: StalenessBuffer, bounds, *,
                  config: Optional[PoolConfig] = None, timeout: float = 600.0,
-                 await_fn=None):
+                 await_fn=None, supervisor=None):
         assert generators, "a generator pool needs at least one generator"
         self.generators = list(generators)
         self.channels_by_gen = channels_by_gen
@@ -251,25 +423,76 @@ class GeneratorPool:
         self.config = config or PoolConfig()
         self.timeout = timeout
         self._await = await_fn
+        self.supervisor = supervisor
+        self.chaos = supervisor.chaos if supervisor is not None else None
+        self.assignment: Optional[WorkAssignment] = None
+        self._spawn_thread = None          # installed by the controller run
+        self._stop: Optional[threading.Event] = None
         self.intervals: list = []          # (t0, t1) busy spans, all workers
 
     def loops(self, first: int, last: int, stop: threading.Event):
         """One (name, callable) per worker; worker ``i`` covers batches
-        ``first+i, first+i+N, ...`` below ``last``."""
-        return [(gen.name,
-                 (lambda i=i, gen=gen: self._worker(i, gen, first, last,
-                                                    stop)))
-                for i, gen in enumerate(self.generators)]
+        ``first+i, first+i+N, ...`` below ``last`` (the ``WorkAssignment``
+        re-maps ownership on worker loss or runtime attach/detach)."""
+        self.assignment = WorkAssignment(
+            [g.name for g in self.generators], first, last)
+        self._stop = stop
+        return [(gen.name, (lambda gen=gen: self._worker(gen, stop)))
+                for gen in self.generators]
+
+    # ---------------------------------------------------------- elasticity --
+
+    def attach(self, gen, channels):
+        """Runtime grow: adopt a (spawned, weight-replayed) generator
+        handle mid-run and start its worker thread.  The controller owns
+        the surrounding wiring (channel creation, fabric add, supervisor
+        registration); see ``AsyncExecutorController.attach_generator``."""
+        assert self.assignment is not None and \
+            self._spawn_thread is not None, "attach requires a live run"
+        self.generators.append(gen)
+        self.channels_by_gen[gen.name] = list(channels)
+        self.assignment.add_worker(gen.name)
+        self.assignment.rebalance()
+        self._on_resize()
+        self._spawn_thread(
+            gen.name, lambda gen=gen: self._worker(gen, self._stop))
+
+    def detach(self, name_or_gen):
+        """Runtime shrink: stop assigning new batches to this worker; it
+        finishes its in-flight jobs, then its thread exits."""
+        name = name_or_gen if isinstance(name_or_gen, str) \
+            else name_or_gen.name
+        assert self.assignment is not None, "detach requires a live run"
+        moved = self.assignment.drain_worker(name)
+        self._on_resize()
+        return moved
+
+    def _on_resize(self):
+        n = len(self.assignment.survivors())
+        if self.supervisor is not None:
+            self.supervisor.on_pool_resize(n)
+            return
+        cb = getattr(self.bounds, "on_pool_resize", None)
+        if cb is not None:
+            cb(n)
 
     # ------------------------------------------------------- weight drains --
 
-    def _drain_one(self, gen, stop, what: str) -> Optional[bool]:
+    def _drain_one(self, gen, stop, what: str):
         """Blocking: receive one (version, params) pair from each of this
-        worker's weight channels.  None means stopped by a peer."""
+        worker's weight channels.  None means stopped by a peer;
+        ``_RETIRED`` means the worker was detached mid-wait -- the fabric
+        no longer publishes to its channels, so nothing will ever arrive
+        and it must re-check its (now empty) assignment instead."""
+        asn = self.assignment
         for ch in self.channels_by_gen[gen.name]:
-            if self._await(lambda t, c=ch: c.recv(timeout=t),
-                           stop, what) is None:
-                return None
+            def recv_or_retire(t, c=ch):
+                if asn.is_retired(gen.name):
+                    return _RETIRED
+                return c.recv(timeout=t)
+            got = self._await(recv_or_retire, stop, what)
+            if got is None or got is _RETIRED:
+                return got
         return True
 
     def _poll_one(self, gen) -> bool:
@@ -295,94 +518,180 @@ class GeneratorPool:
     def _snapshot_names(self):
         return [ch.name for ch in self.data_channels]
 
-    def _worker(self, idx: int, gen, first: int, last: int,
-                stop: threading.Event):
-        if self.config.chunk_scheduling and gen.chunk_hooks:
-            self._worker_chunked(idx, gen, first, last, stop)
-        else:
-            self._worker_monolithic(idx, gen, first, last, stop)
+    def _fire_chaos(self, point, gen, index, chunk=None):
+        if self.chaos is not None:
+            self.chaos.fire(point, gen.name, index, chunk)
 
-    def _worker_monolithic(self, idx, gen, first, last, stop):
+    def _recover(self, gen, sched, error) -> bool:
+        """A gen RPC raised: hand the corpse to the supervisor.
+
+        True -> respawned (in-flight jobs re-pinned; retry the schedule).
+        False -> lost; this worker's batches were failed over to the
+        survivors and its thread should exit.  Re-raises when the pool
+        is unsupervised, the supervisor declines (responsive-timeout),
+        or there is nobody left to degrade to (fail-fast)."""
+        sup = self.supervisor
+        if sup is None or not sup.covers(gen):
+            raise error
+        outcome = sup.recover(gen, error)    # may re-raise `error`
+        if outcome == RESPAWNED:
+            for job in (sched.inflight() if sched is not None else ()):
+                # params snapshots died with the process: take a fresh
+                # pin under the replayed version, and *assert* -- not
+                # assume -- the bounded-staleness contract still holds
+                job2 = gen.call("repin_job", job)
+                if job2 is not job:
+                    job.__dict__.update(job2.__dict__)
+                lag = job.batch_index - job.weight_version
+                if not 0 <= lag <= job.bound:
+                    raise RuntimeError(
+                        f"re-admission of batch {job.batch_index} breaks "
+                        f"the staleness bound: replayed version "
+                        f"{job.weight_version}, bound {job.bound}")
+            return True
+        assert outcome == LOST
+        if sched is not None:
+            sched.clear()                    # states die; survivors redo
+        self.assignment.fail_over(gen.name)  # raises when nobody is left
+        self._on_resize()
+        return False
+
+    def _park(self, gen, stop) -> bool:
+        """This worker's queue is empty but the pool is not done: wait
+        briefly (a peer's death may remap indices here).  False -> exit."""
+        if self.assignment.all_done() or self.assignment.idle(gen.name):
+            return False
+        stop.wait(0.05)
+        return True
+
+    def _worker(self, gen, stop: threading.Event):
+        if self.config.chunk_scheduling and gen.chunk_hooks:
+            self._worker_chunked(gen, stop)
+        else:
+            self._worker_monolithic(gen, stop)
+
+    def _worker_monolithic(self, gen, stop):
         """Complete-batch baseline: one blocking ``gen.step()`` per batch,
         pushed only when the whole batch finishes (the pre-pool loop)."""
-        for n in range(first + idx, last, len(self.generators)):
-            idle = 0.0
-            bound = self.bounds.bound()
-            while gen.call("weight_version") < max(0, n - bound) and \
-                    not stop.is_set():
-                t0 = time.monotonic()
-                if self._drain_one(gen, stop,
-                                   f"weights for batch {n}") is None:
-                    return
-                idle += time.monotonic() - t0
+        asn = self.assignment
+        claimed = None           # index started but not finished (requeue
+        while not stop.is_set():  # it if the generator dies and respawns)
+            try:
+                n = asn.next_for(gen.name)
+                if n is None:
+                    if not self._park(gen, stop):
+                        return
+                    continue
+                idle = 0.0
                 bound = self.bounds.bound()
-            if stop.is_set():
-                return
-            t0 = time.monotonic()
-            gen.call("set_step", n)
-            # step + port snapshot in one endpoint: one round-trip, one
-            # batch payload for a process-backed generator
-            snapshot = gen.call("step_snapshot", self._snapshot_names)
-            t1 = time.monotonic()
-            self.intervals.append((t0, t1))
-            item = {"batch_index": n, "snapshot": snapshot,
-                    "generator": gen.name, "bound": bound,
-                    "gen_busy_s": t1 - t0, "gen_idle_s": idle,
-                    "_version": gen.call("weight_version")}
-            if self._push(gen, stop, item) is None:
-                return
+                retired = False
+                while gen.call("weight_version") < max(0, n - bound) and \
+                        not stop.is_set():
+                    t0 = time.monotonic()
+                    got = self._drain_one(gen, stop,
+                                          f"weights for batch {n}")
+                    if got is None:
+                        return
+                    if got is _RETIRED:
+                        retired = True
+                        break
+                    idle += time.monotonic() - t0
+                    bound = self.bounds.bound()
+                if stop.is_set():
+                    return
+                if retired or not asn.start(gen.name, n):
+                    continue     # re-dealt away (or detached) mid-wait
+                claimed = n
+                self._fire_chaos("batch", gen, n)
+                t0 = time.monotonic()
+                gen.call("set_step", n)
+                # step + port snapshot in one endpoint: one round-trip,
+                # one batch payload for a process-backed generator
+                snapshot = gen.call("step_snapshot", self._snapshot_names)
+                t1 = time.monotonic()
+                self.intervals.append((t0, t1))
+                item = {"batch_index": n, "snapshot": snapshot,
+                        "generator": gen.name, "bound": bound,
+                        "gen_busy_s": t1 - t0, "gen_idle_s": idle,
+                        "_version": gen.call("weight_version")}
+                if self._push(gen, stop, item) is None:
+                    return
+                asn.finish(gen.name, n)
+                claimed = None
+            except (ActorDied, TimeoutError) as e:
+                if not self._recover(gen, None, e):
+                    return
+                if claimed is not None:
+                    asn.requeue(gen.name, claimed)   # respawned: retry it
+                    claimed = None
 
-    def _worker_chunked(self, idx, gen, first, last, stop):
+    def _worker_chunked(self, gen, stop):
         """Chunk-scheduled worker: admit batches the moment their pinned
         weight version lands, pipeline up to ``max_inflight`` of them
         through the scheduler heap, push each the moment it completes."""
         cfg = self.config
-        stride = len(self.generators)
+        asn = self.assignment
         sched = RolloutScheduler(
-            _SnapshotEmitter(gen, self._snapshot_names),
+            _SnapshotEmitter(gen, self._snapshot_names, self.chaos),
             PartialRolloutCache(), early_exit=cfg.early_exit,
             chunk_delay=cfg.chunk_delay)
-        todo = list(range(first + idx, last, stride))
-        next_i = 0                          # next index into todo to admit
-        pushed = 0
         pending_idle = 0.0                  # weight-wait time -> next admit
-        while pushed < len(todo) and not stop.is_set():
-            if next_i < len(todo) and sched.pending() < cfg.max_inflight:
-                n = todo[next_i]
-                bound = self.bounds.bound()
-                if gen.call("weight_version") >= max(0, n - bound):
-                    t0 = time.monotonic()
-                    gen.call("set_step", n)
-                    job, state = gen.begin_batch(n)
-                    job.bound = bound
-                    job.meta["idle_s"] = pending_idle
-                    pending_idle = 0.0
-                    sched.admit(job, state)
-                    self.intervals.append((t0, time.monotonic()))
-                    next_i += 1
-                    continue
-                if sched.pending() == 0:
-                    # nothing in flight: block until the version lands
-                    t0 = time.monotonic()
-                    if self._drain_one(gen, stop,
-                                       f"weights for batch {n}") is None:
+        claimed = None                      # started but not yet in sched
+        while not stop.is_set():
+            try:
+                n = asn.next_for(gen.name)
+                if n is None and sched.pending() == 0:
+                    if not self._park(gen, stop):
                         return
-                    pending_idle += time.monotonic() - t0
                     continue
-                # in-flight work available: poll weights, don't block
-                self._poll_one(gen)
-            t0 = time.monotonic()
-            done = sched.step()
-            self.intervals.append((t0, time.monotonic()))
-            if done is None:
-                continue
-            job, snapshot = done             # the emitter's port snapshot
-            item = {"batch_index": job.batch_index,
-                    "snapshot": snapshot,
-                    "generator": gen.name, "bound": job.bound,
-                    "gen_busy_s": job.busy_s,
-                    "gen_idle_s": job.meta.get("idle_s", 0.0),
-                    "_version": job.weight_version}
-            if self._push(gen, stop, item) is None:
-                return
-            pushed += 1
+                if n is not None and sched.pending() < cfg.max_inflight:
+                    bound = self.bounds.bound()
+                    if gen.call("weight_version") >= max(0, n - bound):
+                        if not asn.start(gen.name, n):
+                            continue      # re-dealt away since the peek
+                        claimed = n
+                        self._fire_chaos("batch", gen, n)
+                        t0 = time.monotonic()
+                        gen.call("set_step", n)
+                        job, state = gen.begin_batch(n)
+                        job.bound = bound
+                        job.meta["idle_s"] = pending_idle
+                        pending_idle = 0.0
+                        sched.admit(job, state)
+                        claimed = None    # now visible via sched.inflight
+                        self.intervals.append((t0, time.monotonic()))
+                        continue
+                    if sched.pending() == 0:
+                        # nothing in flight: block until the version lands
+                        t0 = time.monotonic()
+                        if self._drain_one(gen, stop,
+                                           f"weights for batch {n}") \
+                                is None:
+                            return
+                        pending_idle += time.monotonic() - t0
+                        continue
+                    # in-flight work available: poll weights, don't block
+                    self._poll_one(gen)
+                if sched.pending() == 0:
+                    continue
+                t0 = time.monotonic()
+                done = sched.step()
+                self.intervals.append((t0, time.monotonic()))
+                if done is None:
+                    continue
+                job, snapshot = done         # the emitter's port snapshot
+                item = {"batch_index": job.batch_index,
+                        "snapshot": snapshot,
+                        "generator": gen.name, "bound": job.bound,
+                        "gen_busy_s": job.busy_s,
+                        "gen_idle_s": job.meta.get("idle_s", 0.0),
+                        "_version": job.weight_version}
+                if self._push(gen, stop, item) is None:
+                    return
+                asn.finish(gen.name, job.batch_index)
+            except (ActorDied, TimeoutError) as e:
+                if not self._recover(gen, sched, e):
+                    return
+                if claimed is not None:
+                    asn.requeue(gen.name, claimed)   # died before admit
+                    claimed = None

@@ -113,12 +113,19 @@ def build_controller(cfg, args):
         adaptive = AdaptiveStalenessController(
             bound=args.staleness, min_bound=1,
             max_bound=args.adaptive_staleness)
+    supervise = None
+    if args.supervise or args.chaos:
+        from repro.core import FaultPlan, RestartPolicy, Supervisor
+        chaos = FaultPlan.parse(args.chaos) if args.chaos \
+            else FaultPlan.from_env()
+        supervise = Supervisor(
+            RestartPolicy(max_restarts=args.max_restarts), chaos=chaos)
     return ExecutorController(
         executors, channels,
         max_steps=args.steps, mode=args.mode, staleness=args.staleness,
         checkpoint_every=args.checkpoint_every,
         checkpoint_path=args.checkpoint_path, adaptive=adaptive,
-        overlap_publish=not args.no_overlap_publish)
+        overlap_publish=not args.no_overlap_publish, supervise=supervise)
 
 
 def main():
@@ -187,6 +194,20 @@ def main():
                     help="if > 0, the max bound for the adaptive "
                     "staleness controller (starts at --staleness, moves "
                     "in [1, max]; the async loop floors the bound at 1)")
+    ap.add_argument("--supervise", action="store_true",
+                    help="supervised (elastic) run: a dead generator or "
+                    "reference actor is respawned from its spawn spec "
+                    "with the latest committed weights replayed, within "
+                    "a capped-backoff restart budget; when the budget "
+                    "runs out the pool degrades to the survivors "
+                    "(default: fail fast on the first ActorDied)")
+    ap.add_argument("--max-restarts", type=int, default=3,
+                    help="per-actor restart budget for --supervise")
+    ap.add_argument("--chaos", default="",
+                    help="deterministic fault injection spec (implies "
+                    "supervision), e.g. 'kill:generator1@batch=2;"
+                    "hang:generator0@batch=4:30'; also read from "
+                    "$REPRO_CHAOS when --supervise is set")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--checkpoint-every", type=int, default=0)
     ap.add_argument("--checkpoint-path", default="checkpoints")

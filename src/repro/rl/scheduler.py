@@ -86,15 +86,31 @@ class RolloutScheduler:
     def pending(self) -> int:
         return len(self._heap)
 
+    def inflight(self):
+        """The parked in-flight jobs, heap order (the supervised
+        re-admission surface: after a respawn every one of these gets a
+        fresh params pin via ``repin_job``)."""
+        return [job for _, _, job in self._heap]
+
+    def _repark(self, prio, seq, job, state):
+        """Put a job/state pair back exactly where it was popped from
+        (original priority and FIFO tie-break)."""
+        job.rid = self.cache.put(state)
+        heapq.heappush(self._heap, (prio, seq, job))
+
     def step(self) -> Optional[Tuple[RolloutJob, Any]]:
         """Advance the highest-priority job one chunk.
 
         Returns ``(job, batch)`` the moment a batch's worth of sequences
         completes, else None (the job requeued with KV cache + cursor).
+        If the executor hop fails (a process-backed actor died
+        mid-chunk), the job and its resumable state are re-parked before
+        the error re-raises -- nothing is lost, so a supervisor can
+        re-admit the exact in-flight set on the respawned actor.
         """
         if not self._heap:
             return None
-        _, _, job = heapq.heappop(self._heap)
+        prio, seq, job = heapq.heappop(self._heap)
         state = self.cache.get(job.rid)
         job.rid = None
         if self.chunk_delay is not None:
@@ -102,14 +118,26 @@ class RolloutScheduler:
             if dt and dt > 0:
                 time.sleep(dt)     # injected straggler latency (counts busy)
         t0 = time.monotonic()
-        state = self.executor.advance_chunk(job, state)
         finished = job.chunks_done >= job.n_chunks
-        if not finished and self.early_exit:
-            finished = bool(state.done.all())   # forces one device sync
+        if not finished:
+            try:
+                state = self.executor.advance_chunk(job, state)
+            except BaseException:
+                job.busy_s += time.monotonic() - t0
+                self._repark(prio, seq, job, state)
+                raise
+            finished = job.chunks_done >= job.n_chunks
+            if not finished and self.early_exit:
+                finished = bool(state.done.all())  # forces one device sync
         job.busy_s += time.monotonic() - t0
         if finished:
             t0 = time.monotonic()
-            batch = self.executor.emit_batch(job, state)
+            try:
+                batch = self.executor.emit_batch(job, state)
+            except BaseException:
+                job.busy_s += time.monotonic() - t0
+                self._repark(prio, seq, job, state)
+                raise
             job.busy_s += time.monotonic() - t0
             return job, batch
         job.rid = self.cache.put(state)
@@ -117,6 +145,19 @@ class RolloutScheduler:
                        (self.priority(job, state), self._seq, job))
         self._seq += 1
         return None
+
+    def clear(self):
+        """Drop every in-flight job, evicting its parked state; returns
+        the dropped jobs (degraded mode: a lost worker's batches are
+        re-generated from scratch by the survivors)."""
+        jobs = []
+        while self._heap:
+            _, _, job = heapq.heappop(self._heap)
+            if job.rid is not None:
+                self.cache.get(job.rid)        # evict the parked state
+                job.rid = None
+            jobs.append(job)
+        return jobs
 
     def drain(self):
         """Step until the heap is empty, yielding batches as they finish."""

@@ -266,3 +266,38 @@ def test_fabric_transport_pool_of_one_matches_sequential(transport):
     assert [h["weight_version"] for h in ht] == \
         [h["weight_version"] for h in hs] == [0, 0, 1]
     assert threaded.stats["publish_s"] > 0.0
+
+
+# --------------------------------------- subscriber failure isolation --
+
+def test_dead_subscriber_isolated_from_healthy_peer():
+    """ISSUE 7 satellite: one of two subscribers dies mid-run; the
+    publisher records the failure against that channel, frees its slots,
+    and keeps committing to the healthy peer -- a dead worker must not
+    poison the weight plane."""
+    victim = spawn_actor(WeightSink, "victim", transport="proc")
+    survivor_sink = WeightSink("survivor")
+    survivor = remoteish(survivor_sink)
+    src = as_handle(Source())
+    ch_v = WeightsCommunicationChannel("policy_model", src, victim)
+    ch_s = WeightsCommunicationChannel("policy_model", src, survivor)
+    fab = WeightFabric([ch_v, ch_s], overlap=True, max_staged=2)
+    try:
+        victim.transport._proc.kill()        # SIGKILL before v1 lands
+        victim.transport._proc.join(10.0)
+        for v in (1, 2, 3):
+            fab.publish(v, {payload_key(ch_v):
+                            {"w": np.full(2, float(v))}})
+        # max_staged=2 forces the publisher through _wait_slot on the
+        # corpse: it must detach the victim, not park forever
+        seen = [ch_s.recv(timeout=15.0)[0] for _ in range(3)]
+        fab.flush(15.0)
+        assert seen == [1, 2, 3]
+        assert survivor_sink.applied == [1, 2, 3]
+        assert survivor_sink.weights_sum() == 6.0
+        assert fab.dead_subscribers() == [ch_v]
+        assert isinstance(fab.subscriber_error(ch_v), Exception)
+        fab.raise_if_failed()                # isolated, never systemic
+    finally:
+        fab.close()
+        victim.close()

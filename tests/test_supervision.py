@@ -1,0 +1,402 @@
+"""Supervised elastic generator pool (ISSUE 7): deterministic chaos --
+kill / hang / drop faults at scripted schedule points -- exercising
+respawn-from-spec, weight replay, in-flight re-admission, degraded-mode
+fail-over, and runtime attach/detach.  Every recovery keeps the
+bounded-staleness contract; the no-fault supervised pool-of-1 stays
+bit-for-bit the sequential reference."""
+import threading
+import time
+
+import multiprocessing.shared_memory as sm
+import numpy as np
+import pytest
+
+from repro.core import (ActorDied, CommType, CommunicationChannel,
+                        ExecutorController, FaultPlan, GeneratorExecutor,
+                        RefPolicyExecutor, RestartPolicy, RewardExecutor,
+                        Supervisor, TrainerExecutor, WeightFabric,
+                        WeightsCommunicationChannel, as_handle,
+                        build_generator_pool, spawn_actor)
+from repro.core.fabric import payload_key
+from repro.core.genpool import WorkAssignment
+from repro.core.supervise import RESPAWNED
+from repro.rl.data import ArithmeticTasks
+
+from test_actors import METRIC_KEYS, assert_tree_equal, EchoExecutor
+from test_fabric import Source, WeightSink
+from test_genpool import micro_cfg
+
+
+def build_supervised(n_gens=2, staleness=1, max_steps=6, transport="proc",
+                     chaos=None, policy=None, supervise=True,
+                     timeout=300.0, trainer_cls=TrainerExecutor):
+    """The test_genpool micro pipeline with a supervisor wired in;
+    ``transport=None`` resolves $REPRO_TRANSPORT so the CI proc/shm
+    reruns drive the same tests over real process boundaries."""
+    cfg = micro_cfg()
+    rew = RewardExecutor(n_per_prompt=2)
+    trn = trainer_cls(cfg, lr=5e-2, seed=0)
+    gens, chans = build_generator_pool(
+        cfg, trn,
+        lambda g: ArithmeticTasks(prompt_len=8, max_operand=4, ops="+",
+                                  seed=100 + g),
+        n_generators=n_gens, seed=100, n_prompts=4, n_per_prompt=2,
+        max_new=4, temperature=1.0, chunk=2, transport=transport)
+    chans += [CommunicationChannel("completions", gens[0], rew,
+                                   CommType.GATHER),
+              CommunicationChannel("completions_with_reward", rew, trn,
+                                   CommType.SCATTER)]
+    sup = Supervisor(policy or RestartPolicy(), chaos=chaos) \
+        if supervise else None
+    return ExecutorController(gens + [rew, trn], chans, max_steps=max_steps,
+                              mode="async", staleness=staleness,
+                              timeout=timeout, supervise=sup)
+
+
+# ----------------------------------------------------------- fault plans --
+
+def test_fault_plan_parse_grammar():
+    plan = FaultPlan.parse(
+        "kill:generator1@batch=2; kill:g0@batch=3,chunk=1;"
+        "hang:generator0@batch=2:7.5; drop:g@publish=3; kill:ref@consume=4")
+    got = [(f.action, f.actor, f.point, f.index, f.chunk)
+           for f in plan.faults]
+    assert got == [("kill", "generator1", "batch", 2, None),
+                   ("kill", "g0", "batch", 3, 1),
+                   ("hang", "generator0", "batch", 2, None),
+                   ("drop", "g", "publish", 3, None),
+                   ("kill", "ref", "consume", 4, None)]
+    assert plan.faults[2].arg == 7.5
+    assert len(plan.unfired()) == 5
+
+
+def test_fault_plan_fires_once_at_exact_coordinates():
+    class FakeHandle:
+        name = "g"
+
+        def __init__(self):
+            self.casts = []
+            self.transport = self
+
+        def cast(self, method, *args):
+            self.casts.append((method, args))
+
+    plan = FaultPlan.parse("hang:g@batch=2,chunk=1:5")
+    h = FakeHandle()
+    plan.bind(h)
+    assert not plan.fire("batch", "g", 2, None)       # chunk mismatch
+    assert not plan.fire("batch", "other", 2, 1)      # actor mismatch
+    assert not plan.fire("publish", "g", 2, 1)        # point mismatch
+    assert plan.fire("batch", "g", 2, 1)
+    assert h.casts == [("chaos_hang", (5.0,))]
+    assert not plan.fire("batch", "g", 2, 1)          # each fires once
+    assert plan.unfired() == []
+
+
+# -------------------------------------------------------- work assignment --
+
+def test_work_assignment_round_robin_and_failover_resort():
+    wa = WorkAssignment(["a", "b"], 0, 8)
+    assert wa.next_for("a") == 0 and wa.next_for("b") == 1
+    wa.start("a", 0)
+    wa.start("b", 1)
+    wa.finish("a", 0)
+    # b dies holding batch 1 in flight with 3, 5, 7 still queued
+    assert wa.fail_over("b") == [1, 3, 5, 7]
+    assert wa.survivors() == ["a"] and wa.is_retired("b")
+    order = []
+    while (n := wa.next_for("a")) is not None:
+        wa.start("a", n)
+        wa.finish("a", n)
+        order.append(n)
+    # remapped indices sorted in: the head is always globally smallest,
+    # so the consumer's in-order admission gate never starves
+    assert order == [1, 2, 3, 4, 5, 6, 7]
+    assert wa.all_done()
+
+
+def test_work_assignment_failover_without_survivors_raises():
+    wa = WorkAssignment(["a"], 0, 4)
+    with pytest.raises(RuntimeError, match="surviv"):
+        wa.fail_over("a")
+
+
+def test_work_assignment_grow_and_drain():
+    wa = WorkAssignment(["a", "b"], 0, 9)
+    wa.start("a", 0)                         # in flight: stays a's
+    wa.add_worker("c")
+    wa.rebalance()
+    # every *unstarted* index re-dealt ascending over a, b, c
+    assert wa.next_for("a") == 1 and wa.next_for("b") == 2
+    assert wa.next_for("c") == 3
+    moved = wa.drain_worker("b")
+    assert moved == [2, 5, 8] and wa.is_retired("b")
+    assert wa.next_for("b") is None
+    remaining = set()
+    for name in ("a", "c"):
+        while (n := wa.next_for(name)) is not None:
+            wa.start(name, n)
+            wa.finish(name, n)
+            remaining.add(n)
+    wa.finish("a", 0)
+    assert remaining == set(range(1, 9))
+    assert wa.all_done()
+
+
+# ------------------------------------------- no-fault numeric equivalence --
+
+def test_supervised_pool_of_one_no_fault_matches_sequential():
+    """Supervision machinery in the loop (fabric seeding, chaos hooks at
+    None, work assignment, retry wrappers) must be numerically invisible:
+    a supervised no-fault pool-of-1 trains bit-for-bit the sequential
+    reference."""
+    supervised = build_supervised(n_gens=1, staleness=1, max_steps=3,
+                                  transport=None)
+    reference = build_supervised(n_gens=1, staleness=1, max_steps=3,
+                                 transport="inproc", supervise=False)
+    hs = supervised.run()
+    hr = reference.run_sequential()
+    assert [[h[k] for k in METRIC_KEYS] for h in hs] == \
+        [[h[k] for k in METRIC_KEYS] for h in hr]
+    assert [h["weight_version"] for h in hs] == [0, 0, 1]
+    assert supervised.supervisor.events("respawned") == []
+
+
+# ------------------------------------------------------------ kill chaos --
+
+@pytest.mark.parametrize("where", ["batch=3", "batch=3,chunk=1"])
+def test_kill_generator_respawns_and_completes(where):
+    """ISSUE 7 acceptance: SIGKILL one pool worker at a batch boundary
+    and mid-decode; the run completes every batch in order, the victim
+    is respawned (weights replayed, jobs re-admitted), and the staleness
+    bound holds throughout."""
+    chaos = FaultPlan.parse(f"kill:generator1@{where}")
+    ctl = build_supervised(n_gens=2, staleness=1, max_steps=6,
+                           transport="proc", chaos=chaos)
+    hist = ctl.run()
+    sup = ctl.supervisor
+    assert [h["step"] for h in hist] == list(range(6))
+    assert chaos.unfired() == []
+    respawns = sup.events("respawned")
+    assert [e["actor"] for e in respawns] == ["generator1"]
+    assert respawns[0]["recovery_s"] > 0.0
+    # ownership survives the respawn: the victim still produces its own
+    # batches (including the one it was killed on)
+    assert [h["generator"] for h in hist] == \
+        [f"generator{n % 2}" for n in range(6)]
+    assert max(ctl.staleness_hist) <= 1
+    assert all(h["weight_version"] >= h["step"] - 1 for h in hist)
+
+
+def test_restart_budget_exhausted_degrades_to_survivors():
+    """max_restarts=0: the victim is declared lost, its batches fail
+    over to the survivor, the fabric stops publishing to the corpse,
+    and the run still completes every batch."""
+    chaos = FaultPlan.parse("kill:generator1@batch=3")
+    ctl = build_supervised(n_gens=2, staleness=1, max_steps=6,
+                           transport="proc", chaos=chaos,
+                           policy=RestartPolicy(max_restarts=0))
+    hist = ctl.run()
+    sup = ctl.supervisor
+    assert [h["step"] for h in hist] == list(range(6))
+    assert sup.is_lost("generator1")
+    assert [e["actor"] for e in sup.events("lost")] == ["generator1"]
+    assert sup.events("respawned") == []
+    # batches 3 and 5 (the victim's) were remapped to the survivor
+    assert [h["generator"] for h in hist] == \
+        ["generator0", "generator1"] + ["generator0"] * 4
+    assert ctl._fabric.dead_subscribers() != []
+    assert [e["n_workers"] for e in sup.events("pool-resized")] == [1]
+    assert max(ctl.staleness_hist) <= 1
+
+
+# ------------------------------------------------------------ hang triage --
+
+def test_hang_triage_and_responsive_backpressure():
+    """A TimeoutError is triaged with a ping: a responsive actor means
+    backpressure (re-raised, no restart burned); an unresponsive-but-
+    alive child is force-killed and respawned."""
+    h = spawn_actor(EchoExecutor, "hangy", transport="proc")
+    sup = Supervisor(RestartPolicy(max_restarts=1, hang_ping_s=0.5))
+    sup.register(h)
+    try:
+        with pytest.raises(TimeoutError, match="backpressure"):
+            sup.recover(h, TimeoutError("backpressure: queue full"))
+        assert sup.restarts("hangy") == 0
+        assert sup.events("hang-detected") == []
+        h.cast("chaos_hang", 30.0)           # wedge the child's RPC loop
+        with pytest.raises(TimeoutError):
+            h.call("ping", timeout=1.0)
+        assert sup.recover(h, TimeoutError("deadline")) == RESPAWNED
+        assert [e["actor"] for e in sup.events("hang-detected")] == ["hangy"]
+        assert sup.restarts("hangy") == 1
+        assert h.call("ping") == "hangy"     # fresh child, instantly live
+    finally:
+        h.close()
+
+
+# -------------------------------------------------------- reference kill --
+
+def _ref_pipeline(chaos=None, max_steps=5):
+    """The train.py --kl-coef wiring: frozen reference scored between
+    generator and reward, hosted in its own process."""
+    cfg = micro_cfg()
+    rew = RewardExecutor(n_per_prompt=2)
+    trn = TrainerExecutor(cfg, lr=5e-2, seed=0, kl_coef=0.1)
+    gens, chans = build_generator_pool(
+        cfg, trn,
+        lambda g: ArithmeticTasks(prompt_len=8, max_operand=4, ops="+",
+                                  seed=100 + g),
+        n_generators=1, seed=100, n_prompts=4, n_per_prompt=2,
+        max_new=4, temperature=1.0, chunk=2, transport="inproc")
+    ref = spawn_actor(RefPolicyExecutor, cfg, transport="proc")
+    chans += [
+        WeightsCommunicationChannel("policy_model", trn, ref),
+        CommunicationChannel("completions", gens[0], ref,
+                             CommType.BROADCAST),
+        CommunicationChannel("completions_with_ref", ref, rew,
+                             CommType.GATHER),
+        CommunicationChannel("completions_with_reward", rew, trn,
+                             CommType.SCATTER),
+    ]
+    return ExecutorController(gens + [ref, rew, trn], chans,
+                              max_steps=max_steps, mode="async",
+                              staleness=1, timeout=300.0,
+                              supervise=Supervisor(chaos=chaos))
+
+
+def test_reference_kill_recovers_bit_for_bit():
+    """Kill the frozen reference at a consumer boundary: the respawn
+    replays its recorded version-0 seed params (the fabric's latest
+    would be *wrong* -- pi_base never moves), the batch retries, and the
+    whole run trains bit-for-bit the no-fault reference."""
+    chaos = FaultPlan.parse("kill:ref@consume=3")
+    faulty = _ref_pipeline(chaos=chaos)
+    hf = faulty.run()
+    clean = _ref_pipeline()
+    hc = clean.run()
+    assert chaos.unfired() == []
+    assert [e["actor"] for e in faulty.supervisor.events("respawned")] == \
+        ["ref"]
+    assert [h["step"] for h in hf] == list(range(5))
+    assert [[h[k] for k in METRIC_KEYS] for h in hf] == \
+        [[h[k] for k in METRIC_KEYS] for h in hc]
+
+
+# -------------------------------------------------------- respawn hygiene --
+
+def test_shm_respawn_reaps_process_and_segments():
+    """SIGKILL + respawn of a ShmTransport actor leaves zero /dev/shm
+    orphans and a reaped predecessor: the new child gets fresh rings,
+    the old segments are unlinked, nothing waits on the corpse."""
+    h = spawn_actor(EchoExecutor, "shm-victim", transport="shm")
+    sup = Supervisor()
+    sup.register(h)
+    payload = {"w": np.arange(1 << 17, dtype=np.float32)}
+    try:
+        assert_tree_equal(h.call("echo", payload), payload)
+        old_proc = h.transport._proc
+        old_segs = list(h.transport.segment_names())
+        assert old_segs
+        old_proc.kill()
+        with pytest.raises(ActorDied):
+            h.call("ping", timeout=30.0)
+        assert sup.recover(h, ActorDied("killed")) == RESPAWNED
+        assert not old_proc.is_alive()
+        for name in old_segs:
+            with pytest.raises(FileNotFoundError):
+                sm.SharedMemory(name=name)
+        # payload-sized echo proves the replacement rings actually work
+        assert_tree_equal(h.call("echo", payload), payload)
+        new_segs = list(h.transport.segment_names())
+        assert new_segs and not set(new_segs) & set(old_segs)
+    finally:
+        h.close()
+    for name in new_segs:
+        with pytest.raises(FileNotFoundError):
+            sm.SharedMemory(name=name)
+
+
+def test_fabric_reattach_replays_latest_committed_version():
+    """Respawn replay, at the fabric level: the newcomer receives the
+    latest *committed* version straight into its slots (never version
+    0), then rejoins the ordinary publish loop."""
+    sink = spawn_actor(WeightSink, "rsink", transport="proc")
+    src = as_handle(Source())
+    ch = WeightsCommunicationChannel("policy_model", src, sink)
+    fab = WeightFabric([ch], overlap=True, max_staged=4)
+    sup = Supervisor()
+    sup.attach_fabric(fab)
+    sup.register(sink, channels=[ch])
+    try:
+        fab.publish(1, {payload_key(ch): {"w": np.ones(2)}})
+        assert ch.recv(timeout=15.0)[0] == 1
+        fab.flush(15.0)
+        sink.transport._proc.kill()
+        with pytest.raises(ActorDied):
+            sink.call("ping", timeout=30.0)
+        assert sup.recover(sink, ActorDied("killed")) == RESPAWNED
+        assert sup.events("respawned")[0]["version"] == 1
+        assert sink.call("weights_sum") == 2.0      # v1 replayed
+        assert fab.dead_subscribers() == []         # back in the loop
+        fab.publish(2, {payload_key(ch): {"w": np.full(2, 2.0)}})
+        assert ch.recv(timeout=15.0)[0] == 2
+        fab.flush(15.0)
+        assert sink.call("weights_sum") == 4.0
+    finally:
+        fab.close()
+        sink.close()
+
+
+# ------------------------------------------------------ runtime elasticity --
+
+class SlowTrainer(TrainerExecutor):
+    """Stretches the run so mid-run membership changes land inside it."""
+
+    def step(self):
+        time.sleep(0.4)
+        return super().step()
+
+
+def test_attach_and_detach_generators_midrun():
+    """Runtime grow/shrink on the same supervision machinery: a
+    pre-warmed socket hot spare attaches mid-run (weights replayed from
+    the fabric, rebalanced into the round-robin), then a founding member
+    detaches; the run completes every batch on schedule."""
+    ctl = build_supervised(n_gens=2, staleness=2, max_steps=12,
+                           transport="inproc", trainer_cls=SlowTrainer)
+    cfg = micro_cfg()
+    spare = spawn_actor(
+        GeneratorExecutor, cfg,
+        ArithmeticTasks(prompt_len=8, max_operand=4, ops="+", seed=107),
+        seed=107, name="generator2", transport="socket",
+        n_prompts=4, n_per_prompt=2, max_new=4, temperature=1.0, chunk=2)
+    assert spare.call("ping") == "generator2"        # pre-warmed: child up
+    failures = []
+
+    def elastic():
+        try:
+            deadline = time.monotonic() + 120.0
+            while len(ctl.history) < 1 and time.monotonic() < deadline:
+                time.sleep(0.02)
+            ctl.attach_generator(spare)
+            while len(ctl.history) < 7 and time.monotonic() < deadline:
+                time.sleep(0.02)
+            ctl.detach_generator("generator1")
+        except BaseException as e:                   # surfaced after join
+            failures.append(e)
+
+    helper = threading.Thread(target=elastic, name="elasticity-driver")
+    helper.start()
+    try:
+        hist = ctl.run()
+    finally:
+        helper.join(timeout=120.0)
+        spare.close()
+    assert failures == []
+    assert [h["step"] for h in hist] == list(range(12))
+    producers = [h["generator"] for h in hist]
+    assert "generator2" in producers                 # the spare pulled work
+    assert [e["n_workers"] for e in
+            ctl.supervisor.events("pool-resized")] == [3, 2]
+    assert max(ctl.staleness_hist) <= 2

@@ -298,11 +298,15 @@ def findings() -> List[str]:
 
 
 _THREAD_NAME_MARKERS = ("weight-fabric", "actor-", "consumer", "sockhost",
-                        "generator", "genpool", "repro")
+                        "generator", "genpool", "repro", "supervis")
+
+_CHILD_NAME_MARKERS = ("actor-", "sockhost")
 
 
 def check_leaks(baseline_threads: Optional[Set[str]] = None) -> List[str]:
-    """Repo-named threads alive after a grace join + registered shm rings."""
+    """Repo-named threads alive after a grace join, actor child
+    processes still running (a respawn that failed to reap its
+    predecessor), and registered shm rings."""
     leaks = []
     deadline = time.monotonic() + 5.0
     def repro_threads():
@@ -319,6 +323,19 @@ def check_leaks(baseline_threads: Optional[Set[str]] = None) -> List[str]:
         alive = repro_threads()
     for t in alive:
         leaks.append(f"leaked thread: {t.name}")
+    try:
+        import multiprocessing as mp
+        kids = [p for p in mp.active_children()
+                if any(m in (p.name or "").lower()
+                       for m in _CHILD_NAME_MARKERS)]
+        for p in kids:
+            p.join(timeout=2.0)
+        for p in kids:
+            if p.is_alive():
+                leaks.append(f"leaked actor process: {p.name} "
+                             f"(pid {p.pid})")
+    except Exception:
+        pass
     try:
         from repro.core import actors
         reg = getattr(actors, "_SHM_REGISTRY", None)
