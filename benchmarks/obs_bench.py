@@ -1,0 +1,100 @@
+"""Tracing overhead benchmark -> BENCH_obs.json (ISSUE 8).
+
+Two measurements, matching the tracer's two cost claims:
+
+  * ``noop`` -- per-call cost of the module-level ``span()`` /
+    ``instant()`` helpers with tracing disabled (the zero-cost-when-off
+    claim: one global load and a shared no-op object, no allocation)
+    and enabled (ring-buffer append), in nanoseconds.
+  * ``pipeline`` -- the same small async RL pipeline run untraced and
+    traced (all the real seams instrumented: controller phases, pool
+    workers, scheduler chunks, fabric publishes), wall-clock from
+    ``controller.stats``.  The acceptance bar: traced wall within 5%
+    of untraced (``overhead_frac < 0.05``).
+
+A jit-warmup run precedes both timed runs so neither pays first-compile
+cost; runs alternate from the same process and configuration.
+"""
+import json
+import time
+
+from benchmarks.common import build_pipeline, emit, tiny_cfg
+from repro.core import close_all_actors
+from repro.obs import trace as obs_trace
+
+STEPS = 10
+MICRO_N = 200_000
+
+
+def bench_noop() -> dict:
+    obs_trace.disable()
+    span = obs_trace.span
+    instant = obs_trace.instant
+    t0 = time.perf_counter()
+    for _ in range(MICRO_N):
+        with span("x", "bench"):
+            pass
+    disabled_span_ns = (time.perf_counter() - t0) / MICRO_N * 1e9
+    t0 = time.perf_counter()
+    for _ in range(MICRO_N):
+        instant("x", "bench")
+    disabled_instant_ns = (time.perf_counter() - t0) / MICRO_N * 1e9
+    obs_trace.enable("bench", capacity=1 << 14)
+    t0 = time.perf_counter()
+    for _ in range(MICRO_N):
+        with span("x", "bench"):
+            pass
+    enabled_span_ns = (time.perf_counter() - t0) / MICRO_N * 1e9
+    obs_trace.disable()
+    return {"disabled_span_ns": disabled_span_ns,
+            "disabled_instant_ns": disabled_instant_ns,
+            "enabled_span_ns": enabled_span_ns}
+
+
+def _run_pipeline() -> dict:
+    ctl = build_pipeline(tiny_cfg(), mode="async", staleness=1,
+                         max_steps=STEPS)
+    try:
+        ctl.run()
+        return dict(ctl.stats)
+    finally:
+        close_all_actors()
+
+
+def bench_pipeline() -> dict:
+    obs_trace.disable()
+    _run_pipeline()                      # jit warmup (discarded)
+    untraced = traced = None
+    n_events = 0
+    for _ in range(2):                   # alternate: min damps scheduler
+        w = _run_pipeline()["wall_s"]    # noise and residual-compile skew
+        untraced = w if untraced is None else min(untraced, w)
+        t = obs_trace.enable("controller")
+        t.clear()
+        try:
+            w = _run_pipeline()["wall_s"]
+            n_events = max(n_events, len(t.events()))
+        finally:
+            obs_trace.disable()
+        traced = w if traced is None else min(traced, w)
+    overhead = traced / untraced - 1.0
+    return {"steps": STEPS, "untraced_wall_s": untraced,
+            "traced_wall_s": traced,
+            "overhead_frac": overhead, "trace_events": n_events}
+
+
+def main():
+    results = {"noop": bench_noop(), "pipeline": bench_pipeline()}
+    emit("obs/noop_span_disabled", results["noop"]["disabled_span_ns"] / 1e3,
+         f"ns={results['noop']['disabled_span_ns']:.0f}")
+    emit("obs/noop_span_enabled", results["noop"]["enabled_span_ns"] / 1e3,
+         f"ns={results['noop']['enabled_span_ns']:.0f}")
+    p = results["pipeline"]
+    emit("obs/pipeline_traced", p["traced_wall_s"] * 1e6,
+         f"overhead={p['overhead_frac']:+.1%},events={p['trace_events']}")
+    with open("BENCH_obs.json", "w") as f:
+        json.dump(results, f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

@@ -10,7 +10,12 @@ just off 1.0 (that's the 1-step off-policyness AIPO corrects).
 Executors are built as *actors* behind handles: ``REPRO_TRANSPORT=proc``
 reruns the identical script with the generator and trainer each in their
 own spawned process (own XLA client, no shared GIL) -- placement is a
-deployment knob, not a code path."""
+deployment knob, not a code path.
+
+The run is traced (``repro.obs``): the summary tail printed at the end
+comes from the same span stream ``--trace`` exports to Perfetto."""
+import os
+
 import jax.numpy as jnp
 
 from repro.configs.llama_paper import smoke
@@ -18,10 +23,16 @@ from repro.core import (CommType, CommunicationChannel, ExecutorController,
                         GeneratorExecutor, RewardExecutor, TrainerExecutor,
                         WeightsCommunicationChannel, close_all_actors,
                         spawn_actor)
+from repro.obs import trace as obs_trace
+from repro.obs.__main__ import summary_lines
 from repro.rl.data import ArithmeticTasks
 
 
 def main():
+    # trace the run: spawned actors inherit the flag and ship their
+    # spans back over the RPC stream onto one aligned timeline
+    os.environ.setdefault(obs_trace.ENV_FLAG, "1")
+    obs_trace.enable("controller")
     cfg = smoke().replace(n_layers=2, d_model=128, n_heads=4, n_kv_heads=2,
                           head_dim=32, d_ff=256, vocab=64)
     tasks = ArithmeticTasks(prompt_len=10, max_operand=9, ops="+")
@@ -63,9 +74,10 @@ def main():
     print(f"wall={s['wall_s']:.1f}s  gen/train overlap={s['overlap_s']:.1f}s "
           f"(the controller really does run the generator and trainer "
           f"actors concurrently)")
-    print(f"weight publication: {s['publish_s']:.2f}s total, "
-          f"{s['publish_overlap_s']:.2f}s hidden behind generation, "
-          f"consumer waited {s['publish_wait_s']*1e3:.0f}ms")
+    # per-phase / per-process breakdown straight from the trace stream
+    # (the same events `--trace out.json` exports for Perfetto)
+    for line in summary_lines(obs_trace.tracer().events()):
+        print(line)
     print("last-5 train reward:",
           round(sum(m["mean_reward"] for m in tail) / max(len(tail), 1), 3))
 

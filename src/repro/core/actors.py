@@ -90,8 +90,13 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.core import ddma
 from repro.core import wire
+from repro.obs import trace as obs_trace
 
 _log = logging.getLogger(__name__)
+
+#: max events per piggybacked ``("__trace__", events)`` frame, so a
+#: long-buffering child never turns one reply into a giant frame
+_TRACE_FLUSH_BATCH = 512
 
 
 class ActorDied(RuntimeError):
@@ -226,6 +231,11 @@ class Transport:
 
     def prepare(self, data, comm_type):
         return data
+
+    def drain_trace(self) -> int:
+        """Pull buffered remote trace events (0 for in-process actors,
+        whose events land in the shared tracer directly)."""
+        return 0
 
     def healthy(self) -> bool:
         return True
@@ -539,6 +549,10 @@ def _actor_server(conn, factory, args, kwargs, boot=None):
         # fresh interpreter: the XLA backend has not initialized yet, so
         # the flag still takes effect at first device use
         spec.apply_env()
+    if boot.get("trace"):
+        # programmatic enable (no REPRO_TRACE in this interpreter's env,
+        # e.g. a --listen host): join the parent's tracing session
+        obs_trace.enable()
     codec = _make_child_codec(boot)
     pending: collections.deque = collections.deque()
 
@@ -570,6 +584,18 @@ def _actor_server(conn, factory, args, kwargs, boot=None):
             pump_once(block=True)
         return pending.popleft()
 
+    def flush_trace():
+        """Ship buffered child events to the parent as ``__trace__``
+        frames (piggybacked just before a reply, so the parent's
+        ``_recv`` absorbs them while draining for that reply)."""
+        t = obs_trace.tracer()
+        if t is None:
+            return
+        evs = t.drain()
+        while evs:
+            send_obj(("__trace__", evs[:_TRACE_FLUSH_BATCH]))
+            evs = evs[_TRACE_FLUSH_BATCH:]
+
     try:
         try:
             if spec is not None and spec.mesh_shape and \
@@ -577,9 +603,12 @@ def _actor_server(conn, factory, args, kwargs, boot=None):
                 kwargs = dict(kwargs or {})
                 kwargs["mesh"] = spec.build_mesh()
             ex = factory(*args, **(kwargs or {}))
-            send_obj(("hello",
-                      _describe_executor(
-                          ex, getattr(factory, "__name__", "?"))))
+            desc = _describe_executor(ex, getattr(factory, "__name__", "?"))
+            if obs_trace.enabled():
+                # the tracer's process label is the actor name: one pid
+                # row per actor in the exported timeline
+                obs_trace.enable(desc["name"])
+            send_obj(("hello", desc))
         except BaseException as e:
             send_obj(("hello_err", _pack_exc(e)))
             return
@@ -588,17 +617,39 @@ def _actor_server(conn, factory, args, kwargs, boot=None):
                 msg = next_msg()
             except (EOFError, OSError):
                 return                       # parent went away
-            seq, kind, method, cargs, ckw = msg
+            # tracing parents append a flow-context element; untraced
+            # ones send the original 5-tuple
+            seq, kind, method, cargs, ckw, *rest = msg
+            if kind == "trace_sync":
+                # clock-offset handshake: answer with our trace clock
+                # immediately (no flush -- the round trip must stay
+                # minimal, its RTT bounds the offset error)
+                send_obj((seq, "ok", obs_trace.now()))
+                continue
+            if kind == "drain_trace":
+                t = obs_trace.tracer()
+                send_obj((seq, "ok", t.drain() if t is not None else []))
+                continue
             if kind == "shutdown":
+                flush_trace()                # final drain rides the ack
                 send_obj((seq, "ok", None))
                 return
             try:
-                result = _invoke(ex, method, cargs, ckw)
+                t = obs_trace.tracer()
+                if t is None:
+                    result = _invoke(ex, method, cargs, ckw)
+                else:
+                    with t.span(f"serve:{method}", "rpc"):
+                        if rest and rest[0]:
+                            t.flow_end(rest[0])
+                        result = _invoke(ex, method, cargs, ckw)
                 if kind == "call":
+                    flush_trace()
                     send_obj((seq, "ok", result))
             except BaseException as e:
                 # call errors answer the caller; cast errors surface on
                 # the next call through this handle (FIFO, status-first)
+                flush_trace()
                 send_obj((seq, "err", _pack_exc(e)))
     except (EOFError, OSError, BrokenPipeError):
         return                               # peer vanished mid-reply
@@ -632,6 +683,7 @@ class _RpcTransport(Transport):
         self.call_timeout = call_timeout
         self.on_death = None             # liveness hook: cb(ActorDied)
         self._death_notified = False
+        self._trace_offset = 0.0         # child clock -> our trace epoch
         _LIVE_TRANSPORTS.add(self)
 
     # ------------------------------------------------------------ plumbing --
@@ -664,13 +716,29 @@ class _RpcTransport(Transport):
 
     def _decode_frame(self, frame, what):
         """One decoded frame: acks are internal, messages come back."""
-        kind, obj, ack = self._codec.decode(frame)
+        t = obs_trace.tracer()
+        if t is None:
+            kind, obj, ack = self._codec.decode(frame)
+        else:
+            with t.span("deserialize", "wire", actor=self.name,
+                        bytes=len(frame)):
+                kind, obj, ack = self._codec.decode(frame)
         if ack is not None:
             try:
                 self._conn.send_bytes(ack)
             except (BrokenPipeError, OSError):
                 raise self._died(what)
         return kind, obj
+
+    def _absorb_if_trace(self, obj) -> bool:
+        """Intercept a piggybacked ``("__trace__", events)`` frame:
+        absorb the child's events (clock-offset corrected) instead of
+        handing it to a caller expecting a reply."""
+        if isinstance(obj, tuple) and len(obj) == 2 and \
+                obj[0] == "__trace__":
+            obs_trace.absorb(obj[1], self._trace_offset)
+            return True
+        return False
 
     def _recv(self, timeout, what):
         """One message, polling peer liveness while waiting."""
@@ -683,7 +751,7 @@ class _RpcTransport(Transport):
                 if self._conn.poll(self._POLL_S):
                     kind, obj = self._decode_frame(
                         self._conn.recv_bytes(), what)
-                    if kind == "msg":
+                    if kind == "msg" and not self._absorb_if_trace(obj):
                         return obj
                     continue
             except (EOFError, OSError):
@@ -695,7 +763,7 @@ class _RpcTransport(Transport):
                     while self._conn.poll(0):
                         kind, obj = self._decode_frame(
                             self._conn.recv_bytes(), what)
-                        if kind == "msg":
+                        if kind == "msg" and not self._absorb_if_trace(obj):
                             return obj
                 except (EOFError, OSError) as e:
                     # expected when the peer died mid-write; log so a
@@ -709,22 +777,38 @@ class _RpcTransport(Transport):
                     f"{timeout if timeout is not None else self.call_timeout}"
                     f"s (peer still alive)")
 
-    def _send(self, msg, what):
-        deadline = time.monotonic() + self.call_timeout
+    def _encode(self, msg, deadline, what):
+        """(frame, payload bytes); retries slot acquisition on a full
+        shm ring without redoing the serialize work."""
         prep = self._codec.prepare(msg)
+        nbytes = prep.size if isinstance(prep, wire.Planned) else len(prep)
         while True:
             try:
-                frame = self._codec.encode_prepared(prep)
-                break
+                return self._codec.encode_prepared(prep), nbytes
             except _RingFull:
                 # every slot is in flight: pump the connection until the
                 # receiver acks one (replies read here are stashed for
                 # the pending _recv)
                 self._pump_frame(deadline, f"shm ack for {what}")
-        try:
-            self._conn.send_bytes(frame)
-        except (BrokenPipeError, OSError):
-            raise self._died(what)
+
+    def _send(self, msg, what):
+        deadline = time.monotonic() + self.call_timeout
+        t = obs_trace.tracer()
+        if t is None:
+            frame, _ = self._encode(msg, deadline, what)
+            try:
+                self._conn.send_bytes(frame)
+            except (BrokenPipeError, OSError):
+                raise self._died(what)
+            return
+        with t.span("serialize", "wire", actor=self.name) as sp:
+            frame, nbytes = self._encode(msg, deadline, what)
+            sp.set(bytes=nbytes)
+        with t.span("transfer", "wire", actor=self.name, bytes=nbytes):
+            try:
+                self._conn.send_bytes(frame)
+            except (BrokenPipeError, OSError):
+                raise self._died(what)
 
     def _pump_frame(self, deadline, what):
         """Process exactly one incoming frame: acks release tx slots
@@ -735,7 +819,7 @@ class _RpcTransport(Transport):
                 if self._conn.poll(self._POLL_S):
                     kind, obj = self._decode_frame(
                         self._conn.recv_bytes(), what)
-                    if kind == "msg":
+                    if kind == "msg" and not self._absorb_if_trace(obj):
                         self._stash.append(obj)
                     return
             except (EOFError, OSError):
@@ -752,19 +836,29 @@ class _RpcTransport(Transport):
     def call(self, method, args=(), kwargs=None, timeout=None):
         if self._closed:
             raise ActorDied(f"actor '{self.name}' is closed")
-        with self._lock:
-            seq = self._seq
-            self._seq += 1
-            self._send((seq, "call", method, tuple(args), kwargs or {}),
-                       what=f"call '{method}'")
-            try:
-                rseq, status, payload = self._reply_for(
-                    seq, timeout, what=f"call '{method}'")
-            except TimeoutError:
-                # the child may still answer later: remember to discard
-                # that late reply so it is never handed to the next call
-                self._abandoned.add(seq)
-                raise
+        t = obs_trace.tracer()
+        sp = obs_trace.NOOP_SPAN if t is None \
+            else t.span(f"rpc:{method}", "rpc", actor=self.name)
+        with sp:
+            # when tracing, the flow id rides the frame as a 6th element
+            # (the child's serve span binds it: the caller->callee arrow);
+            # untraced messages keep the original 5-tuple byte-for-byte
+            fid = t.flow_start() if t is not None else None
+            with self._lock:
+                seq = self._seq
+                self._seq += 1
+                msg = (seq, "call", method, tuple(args), kwargs or {})
+                self._send(msg if fid is None else msg + (fid,),
+                           what=f"call '{method}'")
+                try:
+                    rseq, status, payload = self._reply_for(
+                        seq, timeout, what=f"call '{method}'")
+                except TimeoutError:
+                    # the child may still answer later: remember to
+                    # discard that late reply so it is never handed to
+                    # the next call
+                    self._abandoned.add(seq)
+                    raise
         if status == "err":
             raise _unpack_exc(payload, self.name)
         return payload
@@ -799,11 +893,67 @@ class _RpcTransport(Transport):
     def cast(self, method, args=(), kwargs=None):
         if self._closed:
             raise ActorDied(f"actor '{self.name}' is closed")
+        t = obs_trace.tracer()
+        sp = obs_trace.NOOP_SPAN if t is None \
+            else t.span(f"cast:{method}", "rpc", actor=self.name)
+        with sp:
+            fid = t.flow_start() if t is not None else None
+            with self._lock:
+                seq = self._seq
+                self._seq += 1
+                msg = (seq, "cast", method, tuple(args), kwargs or {})
+                self._send(msg if fid is None else msg + (fid,),
+                           what=f"cast '{method}'")
+
+    # --------------------------------------------------------------- trace --
+
+    def _clock_sync(self, rounds: int = 3):
+        """Clock-offset handshake at spawn: best-of-N ``trace_sync``
+        round trips, keeping the offset from the lowest-RTT round
+        (midpoint estimate: child clock + offset == our trace epoch).
+        Absorbed child events are shifted by it, putting every process
+        on one exported timeline.  No-op unless tracing is enabled."""
+        t = obs_trace.tracer()
+        if t is None:
+            return
+        best_rtt = None
+        for _ in range(max(1, rounds)):
+            with self._lock:
+                seq = self._seq
+                self._seq += 1
+                t0 = obs_trace.now()
+                self._send((seq, "trace_sync", "", (), {}),
+                           what="trace_sync")
+                _, status, child_t = self._reply_for(
+                    seq, 10.0, what="trace_sync")
+            t1 = obs_trace.now()
+            if status != "ok":               # pragma: no cover - old peer
+                return
+            rtt = t1 - t0
+            if best_rtt is None or rtt < best_rtt:
+                best_rtt = rtt
+                self._trace_offset = (t0 + t1) / 2.0 - child_t
+        t.instant(f"clock-sync:{self.name}", "rpc",
+                  offset_s=self._trace_offset, rtt_s=best_rtt)
+
+    def drain_trace(self) -> int:
+        """Pull the child's buffered trace events now (the piggyback
+        path drains on every call reply; this is the explicit flush for
+        quiet children).  Returns the number of events absorbed."""
+        t = obs_trace.tracer()
+        if t is None or self._closed:
+            return 0
         with self._lock:
             seq = self._seq
             self._seq += 1
-            self._send((seq, "cast", method, tuple(args), kwargs or {}),
-                       what=f"cast '{method}'")
+            self._send((seq, "drain_trace", "", (), {}),
+                       what="drain_trace")
+            _, status, payload = self._reply_for(
+                seq, None, what="drain_trace")
+        if status != "ok":                   # pragma: no cover - old peer
+            return 0
+        obs_trace.absorb(payload, self._trace_offset)
+        return len(payload)
 
     def healthy(self) -> bool:
         return not self._closed and self._peer_alive()
@@ -862,9 +1012,11 @@ class ProcTransport(_RpcTransport):
             raise _unpack_exc(payload, getattr(factory, "__name__", "?"))
         assert status == "hello", f"bad handshake: {status!r}"
         self._desc = payload
+        self._clock_sync()
 
     def _make_boot(self, device_spec) -> Dict[str, Any]:
-        return {"device_spec": device_spec, "apply_device_env": True}
+        return {"device_spec": device_spec, "apply_device_env": True,
+                "trace": obs_trace.enabled()}
 
     def _make_codec(self):
         return _PlainCodec()
@@ -1012,12 +1164,15 @@ def _serve_socket_actor(conn: _SockConn, *, apply_device_env: bool = False):
     except (EOFError, OSError):
         conn.close()
         return
-    tag, factory, args, kwargs, spec = req
+    # tracing controllers append a boot-extras dict (a --listen host has
+    # no inherited REPRO_TRACE env, so the flag must ride the request)
+    tag, factory, args, kwargs, spec, *rest = req
     assert tag == "spawn", f"bad socket hello {tag!r}"
+    boot = {"device_spec": spec, "apply_device_env": apply_device_env}
+    if rest:
+        boot.update(rest[0])
     try:
-        _actor_server(conn, factory, args, kwargs,
-                      {"device_spec": spec,
-                       "apply_device_env": apply_device_env})
+        _actor_server(conn, factory, args, kwargs, boot)
     finally:
         conn.close()
 
@@ -1096,14 +1251,17 @@ class SocketTransport(_RpcTransport):
         sock = socketlib.create_connection(self.address,
                                            timeout=spawn_timeout)
         self._init_rpc(_SockConn(sock), _PlainCodec(), call_timeout)
-        self._conn.send_bytes(wire.serialize(
-            ("spawn", factory, tuple(args), kwargs or {}, device_spec)))
+        req = ("spawn", factory, tuple(args), kwargs or {}, device_spec)
+        if obs_trace.enabled():
+            req = req + ({"trace": True},)
+        self._conn.send_bytes(wire.serialize(req))
         status, payload = self._recv(spawn_timeout, what="actor handshake")
         if status == "hello_err":
             self._teardown()
             raise _unpack_exc(payload, getattr(factory, "__name__", "?"))
         assert status == "hello", f"bad handshake: {status!r}"
         self._desc = payload
+        self._clock_sync()
 
     def _peer_alive(self) -> bool:
         # the socket itself is the liveness signal: a dead peer turns
@@ -1186,6 +1344,11 @@ class ActorHandle:
 
     def healthy(self) -> bool:
         return self.transport.healthy()
+
+    def drain_trace(self) -> int:
+        """Explicitly pull this actor's buffered trace events (remote
+        transports only; the piggyback path usually makes this moot)."""
+        return self.transport.drain_trace()
 
     def join(self, timeout: Optional[float] = None):
         self.transport.join(timeout)

@@ -72,6 +72,9 @@ from repro.core.genpool import AdaptiveStalenessController, FixedStaleness, \
     GeneratorPool, PoolConfig
 from repro.core.offpolicy import Closed, StalenessBuffer
 from repro.core.supervise import RESPAWNED, RestartPolicy, Supervisor
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
+from repro.obs.metrics import IntervalUnion, interval_overlap
 
 
 def _merge_intervals(ivs):
@@ -100,6 +103,119 @@ def _interval_overlap(a, b) -> float:
         else:
             j += 1
     return tot
+
+
+class _RunStats:
+    """Live, incrementally-aggregated source behind ``controller.stats``
+    for a threaded run.
+
+    The property used to re-merge the full interval history on every
+    access -- an eval loop polling stats once per step went quadratic in
+    run length.  Here the interval feeds (pool worker busy spans,
+    consumer busy spans, fabric publish spans) stream into maintained
+    ``IntervalUnion``s, scalar sums are carried incrementally, overlap
+    results are cached against the unions' version counters, and the
+    computed dict is cached against the feed lengths -- a poll with no
+    new history rows is a dict copy.  The dict keeps the exact
+    pre-migration key set (``wall_s`` ... ``publish_wait_s``)."""
+
+    def __init__(self, controller, pool, train_iv, publish_wait,
+                 first: int, wall0: float, pub0: int):
+        self._ctl = controller
+        self._pool = pool
+        self._train_iv = train_iv
+        self._publish_wait = publish_wait
+        self._first = first
+        self._wall0 = wall0
+        self._wall: Optional[float] = None   # set by finish()
+        self._lock = threading.Lock()
+        self._gen = IntervalUnion()
+        self._train = IntervalUnion()
+        self._pub = IntervalUnion()
+        self._n_gen = 0
+        self._n_train = 0
+        self._n_pub = pub0                   # fabric intervals span runs
+        self._n_wait = 0
+        self._n_rows = first
+        self._gen_worker_s = 0.0
+        self._gen_idle_s = 0.0
+        self._train_idle_s = 0.0
+        self._publish_wait_s = 0.0
+        self._overlaps: Dict[str, tuple] = {}
+        self._key = None
+        self._cached: Dict[str, float] = {}
+
+    def finish(self, wall: float):
+        with self._lock:
+            self._wall = wall
+            self._key = None                 # wall_s is now final
+
+    def _overlap(self, name: str, a: IntervalUnion,
+                 b: IntervalUnion) -> float:
+        cached = self._overlaps.get(name)
+        key = (a.version, b.version)
+        if cached is not None and cached[0] == key:
+            return cached[1]
+        v = interval_overlap(a, b)
+        self._overlaps[name] = (key, v)
+        return v
+
+    def compute(self) -> Dict[str, float]:
+        ctl = self._ctl
+        with self._lock:
+            pool_iv = self._pool.intervals
+            fab_iv = ctl._fabric.intervals
+            history = ctl.history
+            key = (len(pool_iv), len(self._train_iv), len(fab_iv),
+                   len(self._publish_wait), len(history),
+                   self._wall is not None)
+            if key != self._key:
+                # feed the new tail of every source (lists are append-
+                # only; len() snapshots are safe against live writers)
+                for s, e in pool_iv[self._n_gen:key[0]]:
+                    self._gen.add(s, e)
+                    self._gen_worker_s += e - s
+                self._n_gen = key[0]
+                for s, e in self._train_iv[self._n_train:key[1]]:
+                    self._train.add(s, e)
+                self._n_train = key[1]
+                for s, e in fab_iv[self._n_pub:key[2]]:
+                    self._pub.add(s, e)
+                self._n_pub = key[2]
+                for w in self._publish_wait[self._n_wait:key[3]]:
+                    self._publish_wait_s += w
+                self._n_wait = key[3]
+                for row in history[self._n_rows:key[4]]:
+                    self._gen_idle_s += row["gen_idle_s"]
+                    self._train_idle_s += row["train_idle_s"]
+                self._n_rows = key[4]
+                self._cached = {
+                    "wall_s": self._wall if self._wall is not None
+                    else time.monotonic() - self._wall0,
+                    # wall-clock with >= 1 worker busy (never exceeds
+                    # wall_s) vs aggregate worker-seconds across the pool
+                    "gen_busy_s": self._gen.total,
+                    "gen_worker_s": self._gen_worker_s,
+                    "train_busy_s": self._train.total,
+                    "overlap_s": self._overlap("gt", self._gen,
+                                               self._train),
+                    "gen_idle_s": self._gen_idle_s,
+                    "train_idle_s": self._train_idle_s,
+                    # weight publication wall-clock, how much was hidden
+                    # behind generation, and how long the consumer's hot
+                    # path actually waited in publish() (the fabric's
+                    # whole point: publish_wait_s ~ 0 while publish_s
+                    # happens elsewhere)
+                    "publish_s": self._pub.total,
+                    "publish_overlap_s": self._overlap("gp", self._gen,
+                                                       self._pub),
+                    "publish_wait_s": self._publish_wait_s,
+                }
+                self._key = key
+            out = dict(self._cached)
+            if self._wall is None:           # live poll: wall is now
+                out["wall_s"] = time.monotonic() - self._wall0
+            return out
 
 
 def ExecutorController(executor_group, communication_channels, max_steps,
@@ -156,7 +272,7 @@ class SyncExecutorController:
         self.adaptive = adaptive
         self.overlap_publish = overlap_publish
         self.history: List[Dict] = []
-        self.stats: Dict[str, float] = {}
+        self.stats = {}
         self.staleness_hist: collections.Counter = collections.Counter()
         self.generators = [h for h in self.executors.values()
                            if h.role == "generator"]
@@ -169,6 +285,23 @@ class SyncExecutorController:
         self._pushed_tick: Dict[int, int] = {}   # retry idempotency guard
 
     # ------------------------------------------------------------ plumbing --
+
+    @property
+    def stats(self) -> Dict[str, float]:
+        """Run aggregates (busy/idle/overlap wall-clock).  A threaded
+        run serves them from a live ``_RunStats`` source -- incremental
+        and cached, safe to poll every step; the sequential path (and
+        anything assigning a plain dict) stays a plain dict.  The key
+        set is unchanged from the pre-trace implementation."""
+        src = self._stats_src
+        if src is not None:
+            return src.compute()
+        return self._stats
+
+    @stats.setter
+    def stats(self, value: Dict[str, float]):
+        self._stats = dict(value)
+        self._stats_src = None
 
     def _data_channels(self):
         return [c for c in self.channels
@@ -212,8 +345,9 @@ class SyncExecutorController:
         """Walk data channels in declared order; each inbound actor steps
         right after its channel delivers (gen -> reward -> trainer ...)."""
         for ch in self._data_channels():
-            ch.communicate()
-            ch.inbound.call("step")
+            with obs_trace.span(ch.inbound.role, "controller"):
+                ch.communicate()
+                ch.inbound.call("step")
 
     def _record(self, step: int, step_time: float, *, weight_version: int,
                 queue_depth: int = 0, gen_idle_s: float = 0.0,
@@ -235,7 +369,12 @@ class SyncExecutorController:
                        sample_staleness=sample_staleness,
                        staleness_bound=bound, generator=generator,
                        queue_depth=queue_depth, gen_idle_s=gen_idle_s,
-                       train_idle_s=train_idle_s)
+                       train_idle_s=train_idle_s,
+                       # same clock base as trace events and supervisor
+                       # events: one timeline across all three streams
+                       t=obs_trace.now())
+        obs_metrics.registry().histogram(
+            "controller.batch_s").observe(step_time)
         self.history.append(metrics)
 
     def _maybe_checkpoint(self, step: int):
@@ -277,7 +416,8 @@ class SyncExecutorController:
             if step > 0:
                 self._sync_weights(step)
             if gen is not None:
-                gen.call("step")
+                with obs_trace.span("generate", "controller", batch=step):
+                    gen.call("step")
             self._pipeline()
             self._tick += 1
             wv = gen.call("weight_version") if gen is not None else step
@@ -449,13 +589,15 @@ class AsyncExecutorController(SyncExecutorController):
         pending: Dict[int, tuple] = {}       # out-of-order fan-in reorder
         for n in range(first, last):
             t0 = time.monotonic()
-            while n not in pending:
-                got = self._await(lambda t: self._sample_queue.pop_wait(t),
-                                  stop, f"batch {n} from generator pool")
-                if got is None:
-                    return
-                version, item = got
-                pending[item["batch_index"]] = (version, item)
+            with obs_trace.span("harvest-wait", "controller", batch=n):
+                while n not in pending:
+                    got = self._await(
+                        lambda t: self._sample_queue.pop_wait(t),
+                        stop, f"batch {n} from generator pool")
+                    if got is None:
+                        return
+                    version, item = got
+                    pending[item["batch_index"]] = (version, item)
             wait = time.monotonic() - t0
             version, item = pending.pop(n)
             depth = len(self._sample_queue) + len(pending)
@@ -478,11 +620,15 @@ class AsyncExecutorController(SyncExecutorController):
                         self._sync_weights(
                             n, channels=self._aux_weight_channels)
                     for ch in self._data_channels():
-                        if ch in pool_chs:
-                            ch.deliver(item["snapshot"][ch.name])
-                        else:
-                            ch.communicate()
-                        ch.inbound.call("step")
+                        # one span per pipeline hop, named by the stage
+                        # it feeds (reward / reference / trainer)
+                        with obs_trace.span(ch.inbound.role, "controller",
+                                            batch=n):
+                            if ch in pool_chs:
+                                ch.deliver(item["snapshot"][ch.name])
+                            else:
+                                ch.communicate()
+                            ch.inbound.call("step")
                     break
                 except (ActorDied, TimeoutError) as e:
                     if not self._recover_consumer_actor(e):
@@ -498,12 +644,20 @@ class AsyncExecutorController(SyncExecutorController):
                 if key not in payloads:
                     payloads[key] = ch.outbound.call("get_output", ch.name)
             tp0 = time.perf_counter()
-            self._fabric.publish(n + 1, payloads)
+            with obs_trace.span("publish-wait", "controller", batch=n):
+                self._fabric.publish(n + 1, payloads)
             publish_wait.append(time.perf_counter() - tp0)
             self._tick = n + 1
             self._bounds.observe(queue_depth=depth, train_idle_s=wait,
                                  sample_staleness=n - version)
-            intervals.append((busy0, time.monotonic()))
+            busy1 = time.monotonic()
+            intervals.append((busy0, busy1))
+            # the consumer's whole busy region for this batch, on the
+            # trace epoch (source of the summary's p50/p99 latency)
+            obs_trace.complete("batch", "controller",
+                               busy0 - obs_trace.epoch(),
+                               busy1 - obs_trace.epoch(), batch=n,
+                               weight_version=version, queue_depth=depth)
             self._record(n, time.perf_counter() - t0, weight_version=version,
                          queue_depth=depth, bound=item.get("bound"),
                          generator=item.get("generator"),
@@ -612,6 +766,10 @@ class AsyncExecutorController(SyncExecutorController):
         pool._spawn_thread = spawn_thread
         wall0 = time.monotonic()
         pub0 = len(self._fabric.intervals)
+        # stats go live now: polls during the run see the partial
+        # aggregates, incrementally maintained (no full re-merge)
+        self._stats_src = _RunStats(self, pool, train_iv, publish_wait,
+                                    first, wall0, pub0)
         for name, loop in pool.loops(first, last, stop):
             spawn_thread(name, loop)
         spawn_thread("consumer",
@@ -655,25 +813,5 @@ class AsyncExecutorController(SyncExecutorController):
         finally:
             self._fabric.quiesce()
         wall = time.monotonic() - wall0
-        rows = self.history[first:last]
-        gen_iv = _merge_intervals(pool.intervals)
-        pub_iv = _merge_intervals(self._fabric.intervals[pub0:])
-        self.stats = {
-            "wall_s": wall,
-            # wall-clock with >= 1 worker busy (pre-pool semantics; never
-            # exceeds wall_s) vs aggregate worker-seconds across the pool
-            "gen_busy_s": sum(e - s for s, e in gen_iv),
-            "gen_worker_s": sum(e - s for s, e in pool.intervals),
-            "train_busy_s": sum(e - s for s, e in train_iv),
-            "overlap_s": _interval_overlap(gen_iv, train_iv),
-            "gen_idle_s": sum(r["gen_idle_s"] for r in rows),
-            "train_idle_s": sum(r["train_idle_s"] for r in rows),
-            # weight publication wall-clock, how much of it was hidden
-            # behind generation, and how long the consumer's hot path
-            # actually waited in publish() (the fabric's whole point:
-            # publish_wait_s ~ 0 while publish_s happens elsewhere)
-            "publish_s": sum(e - s for s, e in pub_iv),
-            "publish_overlap_s": _interval_overlap(gen_iv, pub_iv),
-            "publish_wait_s": sum(publish_wait),
-        }
+        self._stats_src.finish(wall)
         return self.history

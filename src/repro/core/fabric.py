@@ -56,6 +56,7 @@ from typing import Any, Dict, List, Optional, Tuple
 from repro.core.actors import ActorDied
 from repro.core.channels import StagedWeights
 from repro.core.offpolicy import Closed
+from repro.obs import trace as obs_trace
 
 #: exception classes that indicate ONE subscriber's transport failed --
 #: isolated per-channel so the shared publish loop keeps serving the
@@ -107,6 +108,8 @@ class WeightFabric:
         #: publisher busy spans (t0, t1) and per-version wall seconds
         self.intervals: List[Tuple[float, float]] = []
         self.published: List[Tuple[int, float]] = []
+        #: per-subscriber publish breakdown (see ``subscriber_stats``)
+        self.sub_stats: Dict[str, Dict[str, float]] = {}
 
     # -------------------------------------------------------------- publish --
 
@@ -200,6 +203,10 @@ class WeightFabric:
                 if self._latest is None or version >= self._latest[0]:
                     self._latest = (version, payloads)
                 self._cond.notify_all()
+            # the same busy interval, rebased onto the trace epoch
+            obs_trace.complete("publish", "fabric",
+                               t0 - obs_trace.epoch(),
+                               t1 - obs_trace.epoch(), version=version)
         cb = self.on_subscriber_down
         if cb is not None:
             for ch, e in down:               # outside the fabric lock
@@ -211,35 +218,52 @@ class WeightFabric:
     def _publish_one(self, ch, version, payloads, transferred):
         if self.chaos is not None:
             self.chaos.fire("publish", ch.inbound.name, version)
+        name = ch.inbound.name
         pkey = payload_key(ch)
         # one reshard per distinct (payload, comm type, target mesh),
         # fanned out to every same-target channel
         tkey = (pkey, ch.comm_type, id(ch.inbound.mesh))
-        if tkey not in transferred:
-            transferred[tkey] = ch._transfer(payloads[pkey])
-        prepared = transferred[tkey]
-        if ch.inbound.staged_weights and ch.inbound.transport.remote:
-            # data plane: ship the bytes now (shm scatter / socket
-            # write, overlapped with generation); the channel later
-            # delivers only the commit marker
-            self._wait_slot(ch)
-            ch.inbound.cast("stage_weights", prepared, version)
-            with self._cond:
-                self._staged_out[id(ch)] = \
-                    self._staged_out.get(id(ch), 0) + 1
-            ch.send_transferred(
-                StagedWeights(version,
-                              on_commit=lambda c=ch: self._released(c)),
-                version=version, timeout=self.timeout)
-        else:
-            ch.send_transferred(prepared, version=version,
-                                timeout=self.timeout)
+        sp = obs_trace.span(f"publish:{name}", "fabric", version=version)
+        with sp:
+            t0 = time.monotonic()
+            if tkey not in transferred:
+                transferred[tkey] = ch._transfer(payloads[pkey])
+            prepared = transferred[tkey]
+            wait_s = 0.0
+            if ch.inbound.staged_weights and ch.inbound.transport.remote:
+                # data plane: ship the bytes now (shm scatter / socket
+                # write, overlapped with generation); the channel later
+                # delivers only the commit marker
+                wait_s = self._wait_slot(ch)
+                ch.inbound.cast("stage_weights", prepared, version)
+                staged_at = obs_trace.now()
+                with self._cond:
+                    self._staged_out[id(ch)] = \
+                        self._staged_out.get(id(ch), 0) + 1
+                ch.send_transferred(
+                    StagedWeights(version,
+                                  on_commit=lambda c=ch, ts=staged_at:
+                                  self._released(c, ts)),
+                    version=version, timeout=self.timeout)
+            else:
+                ch.send_transferred(prepared, version=version,
+                                    timeout=self.timeout)
+            stage_s = time.monotonic() - t0 - wait_s
+            sp.set(stage_s=stage_s, wait_s=wait_s)
+        with self._cond:
+            rec = self._sub_stat(name)
+            rec["published"] += 1
+            rec["stage_s"] += stage_s
+            rec["wait_s"] += wait_s
 
     # ---------------------------------------------------------------- slots --
 
-    def _wait_slot(self, ch):
-        """Block the *publisher* until the subscriber has a free slot."""
-        deadline = time.monotonic() + self.timeout
+    def _wait_slot(self, ch) -> float:
+        """Block the *publisher* until the subscriber has a free slot;
+        returns the seconds spent waiting (per-subscriber backpressure,
+        the quantity the pooled publish aggregates used to hide)."""
+        t0 = time.monotonic()
+        deadline = t0 + self.timeout
         with self._cond:
             while self._staged_out.get(id(ch), 0) >= self.max_staged:
                 if self._closed:
@@ -260,12 +284,41 @@ class WeightFabric:
                             f"subscriber '{ch.inbound.name}' held "
                             f"{self.max_staged} staged weight slots for "
                             f"{self.timeout}s without committing")
+        return time.monotonic() - t0
 
-    def _released(self, ch):
+    def _released(self, ch, staged_at: Optional[float] = None):
+        now = obs_trace.now()
         with self._cond:
             self._staged_out[id(ch)] = \
                 max(0, self._staged_out.get(id(ch), 0) - 1)
+            if staged_at is not None:
+                self._sub_stat(ch.inbound.name)["commit_s"] += \
+                    now - staged_at
             self._cond.notify_all()
+        if staged_at is not None:
+            # stage->commit as a span: the slot-flip latency is visible
+            # per subscriber in the exported timeline
+            obs_trace.complete(f"commit:{ch.inbound.name}", "fabric",
+                               staged_at, now)
+
+    def _sub_stat(self, name: str) -> Dict[str, float]:
+        """Per-subscriber accumulator; callers hold ``self._cond``."""
+        rec = self.sub_stats.get(name)
+        if rec is None:
+            rec = self.sub_stats[name] = {
+                "published": 0, "stage_s": 0.0, "commit_s": 0.0,
+                "wait_s": 0.0}
+        return rec
+
+    def subscriber_stats(self) -> Dict[str, Dict[str, float]]:
+        """Per-subscriber publish breakdown: versions ``published`` and
+        cumulative ``stage_s`` (reshard + transport write), ``commit_s``
+        (stage-to-commit slot-flip latency) and ``wait_s`` (publisher
+        blocked on the subscriber's full slots) -- the per-channel view
+        the pooled ``publish_s``/``publish_wait_s`` aggregates hide."""
+        with self._cond:
+            return {name: dict(rec)
+                    for name, rec in self.sub_stats.items()}
 
     def staged_out(self, ch) -> int:
         with self._cond:

@@ -50,6 +50,7 @@ from typing import Callable, Dict, List, Optional
 from repro.core.actors import ActorDied, spawn_actor
 from repro.core.offpolicy import PartialRolloutCache, StalenessBuffer
 from repro.core.supervise import LOST, RESPAWNED
+from repro.obs import trace as obs_trace
 from repro.rl.scheduler import RolloutScheduler
 
 
@@ -588,8 +589,10 @@ class GeneratorPool:
                 while gen.call("weight_version") < max(0, n - bound) and \
                         not stop.is_set():
                     t0 = time.monotonic()
-                    got = self._drain_one(gen, stop,
-                                          f"weights for batch {n}")
+                    with obs_trace.span("weight-wait", "genpool",
+                                        worker=gen.name, batch=n):
+                        got = self._drain_one(gen, stop,
+                                              f"weights for batch {n}")
                     if got is None:
                         return
                     if got is _RETIRED:
@@ -604,10 +607,14 @@ class GeneratorPool:
                 claimed = n
                 self._fire_chaos("batch", gen, n)
                 t0 = time.monotonic()
-                gen.call("set_step", n)
-                # step + port snapshot in one endpoint: one round-trip,
-                # one batch payload for a process-backed generator
-                snapshot = gen.call("step_snapshot", self._snapshot_names)
+                with obs_trace.span("generate", "genpool",
+                                    worker=gen.name, batch=n):
+                    gen.call("set_step", n)
+                    # step + port snapshot in one endpoint: one
+                    # round-trip, one batch payload for a process-backed
+                    # generator
+                    snapshot = gen.call("step_snapshot",
+                                        self._snapshot_names)
                 t1 = time.monotonic()
                 self.intervals.append((t0, t1))
                 item = {"batch_index": n, "snapshot": snapshot,
@@ -652,21 +659,25 @@ class GeneratorPool:
                         claimed = n
                         self._fire_chaos("batch", gen, n)
                         t0 = time.monotonic()
-                        gen.call("set_step", n)
-                        job, state = gen.begin_batch(n)
-                        job.bound = bound
-                        job.meta["idle_s"] = pending_idle
-                        pending_idle = 0.0
-                        sched.admit(job, state)
+                        with obs_trace.span("admit", "genpool",
+                                            worker=gen.name, batch=n):
+                            gen.call("set_step", n)
+                            job, state = gen.begin_batch(n)
+                            job.bound = bound
+                            job.meta["idle_s"] = pending_idle
+                            pending_idle = 0.0
+                            sched.admit(job, state)
                         claimed = None    # now visible via sched.inflight
                         self.intervals.append((t0, time.monotonic()))
                         continue
                     if sched.pending() == 0:
                         # nothing in flight: block until the version lands
                         t0 = time.monotonic()
-                        if self._drain_one(gen, stop,
-                                           f"weights for batch {n}") \
-                                is None:
+                        with obs_trace.span("weight-wait", "genpool",
+                                            worker=gen.name, batch=n):
+                            got = self._drain_one(gen, stop,
+                                                  f"weights for batch {n}")
+                        if got is None:
                             return
                         pending_idle += time.monotonic() - t0
                         continue

@@ -59,6 +59,7 @@ from dataclasses import dataclass, field
 from typing import Any, Dict, List, Optional, Tuple
 
 from repro.core.actors import ActorDied, ActorHandle
+from repro.obs import trace as obs_trace
 
 _log = logging.getLogger(__name__)
 
@@ -246,7 +247,6 @@ class Supervisor:
         self._members: Dict[str, _Member] = {}
         self._fabric = None
         self._bounds = None
-        self._t0 = time.monotonic()
         self._events: List[dict] = []
         self._stop = threading.Event()
         self._monitor: Optional[threading.Thread] = None
@@ -303,10 +303,17 @@ class Supervisor:
     # ------------------------------------------------------------- events --
 
     def _note(self, kind: str, name: str, **extra):
+        # timestamps share the process trace epoch (repro.obs.trace),
+        # the same clock base controller history rows and trace events
+        # use -- "the kill at t=1.82s" means one instant everywhere
         with self._lock:
             self._events.append(dict(
-                t=time.monotonic() - self._t0, event=kind, actor=name,
-                **extra))
+                t=obs_trace.now(), event=kind, actor=name, **extra))
+        # lifecycle events fold into the trace stream as instants, so a
+        # chaos kill shows up in the exported timeline, not just here
+        obs_trace.instant(kind, "supervisor", actor=name,
+                          **{k: v for k, v in extra.items()
+                             if isinstance(v, (int, float, str, bool))})
 
     def events(self, kind: Optional[str] = None) -> List[dict]:
         with self._lock:
@@ -352,7 +359,7 @@ class Supervisor:
         for ch in fab_chs + aux_chs:
             ch.drain()
         time.sleep(policy.backoff(attempt))  # capped exponential backoff
-        t0 = time.monotonic()
+        t0 = obs_trace.now()
         handle.respawn()
         with self._lock:
             member.restarts = attempt + 1
@@ -371,8 +378,14 @@ class Supervisor:
             version, params = member.seed_weights
             for ch in aux_chs:
                 ch.deliver(params, version=version)
+        recovery_s = obs_trace.now() - t0
         self._note("respawned", handle.name, attempt=attempt + 1,
-                   version=replayed, recovery_s=time.monotonic() - t0)
+                   version=replayed, recovery_s=recovery_s)
+        # the respawn+replay window as a trace span: the gap a chaos
+        # kill tears in the timeline closes with this "recover" slice
+        obs_trace.complete("recover", "supervisor", t0, t0 + recovery_s,
+                           actor=handle.name, attempt=attempt + 1,
+                           recovery_s=recovery_s)
         return RESPAWNED
 
     def _split_channels(self, member: _Member):

@@ -30,6 +30,7 @@ from __future__ import annotations
 
 import argparse
 import json
+import os
 
 import jax
 import jax.numpy as jnp
@@ -40,6 +41,7 @@ from repro.core import (AdaptiveStalenessController, CommType,
                         ExecutorController, RewardExecutor, TrainerExecutor,
                         WeightsCommunicationChannel, build_generator_pool,
                         close_all_actors, spawn_actor)
+from repro.obs import trace as obs_trace
 from repro.rl.data import ArithmeticTasks, VOCAB_SIZE
 
 
@@ -211,11 +213,23 @@ def main():
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--checkpoint-every", type=int, default=0)
     ap.add_argument("--checkpoint-path", default="checkpoints")
+    ap.add_argument("--trace", default="",
+                    help="export a Chrome-trace/Perfetto JSON of the run "
+                    "to this path: spans from the controller, pool "
+                    "workers, fabric and every spawned actor process on "
+                    "one aligned timeline (open in ui.perfetto.dev; "
+                    "summarize with 'python -m repro.obs PATH')")
     ap.add_argument("--sequential", action="store_true",
                     help="run the async schedule on one thread (debug "
                     "reference; numerically identical, no overlap)")
     ap.add_argument("--out", default="")
     args = ap.parse_args()
+
+    if args.trace:
+        # before any actor spawns: spawned children read the boot flag,
+        # and the env covers anything forked outside the boot path
+        os.environ.setdefault(obs_trace.ENV_FLAG, "1")
+        obs_trace.enable("controller")
 
     if args.listen:
         # actor-host mode: this process owns its own device world and
@@ -251,6 +265,17 @@ def main():
                for k, v in h.items()})
     print("stats:", {k: round(v, 3) for k, v in ctl.stats.items()})
     print("staleness_hist:", dict(sorted(ctl.staleness_hist.items())))
+    if args.trace:
+        from repro.obs.__main__ import summary_lines
+        events = obs_trace.tracer().events()
+        obs_trace.export(args.trace, events=events, metadata={
+            "mode": args.mode, "steps": args.steps,
+            "transport": args.transport or
+            os.environ.get("REPRO_TRANSPORT", "inproc"),
+            "n_generators": args.n_generators})
+        print(f"trace: wrote {args.trace}")
+        for line in summary_lines(events):
+            print(line)
     if args.out:
         with open(args.out, "w") as f:
             json.dump({"history": history, "stats": ctl.stats,

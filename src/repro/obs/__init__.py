@@ -1,0 +1,22 @@
+"""Observability: span tracer + metrics registry (ISSUE 8).
+
+``repro.obs.trace`` is the span-based tracer with cross-process
+propagation and Chrome-trace/Perfetto export; ``repro.obs.metrics`` is
+the counters/gauges/histograms registry and the incremental
+``IntervalUnion`` that ``controller.stats`` aggregates on.  Run
+``python -m repro.obs trace.json`` for a per-phase summary of an
+exported trace.
+
+Everything here is host-side Python: nothing from this package may be
+imported by jitted code (``tools/analysis`` lints kernels/ and models/
+for it), so enabling tracing can never change what gets staged.
+"""
+from repro.obs import trace  # noqa: F401
+from repro.obs.metrics import (  # noqa: F401
+    Counter, Gauge, Histogram, IntervalUnion, MetricsRegistry,
+    interval_overlap, registry,
+)
+from repro.obs.trace import (  # noqa: F401
+    Tracer, disable, enable, enabled, epoch, export, instant, now, span,
+    to_chrome, tracer, validate_chrome,
+)

@@ -1,0 +1,178 @@
+"""Trace summary CLI: ``python -m repro.obs trace.json``.
+
+Prints per-phase totals, per-process busy/idle fractions, per-batch
+latency quantiles, and the per-subscriber fabric publish breakdown from
+an exported Chrome-trace file.  ``--validate`` checks the file against
+the Chrome trace-event schema instead (exit 1 on problems) -- the CI
+trace-smoke step runs both.
+
+``summary_lines(events)`` is the library entry point: ``launch/train.py
+--trace`` and ``examples/quickstart.py`` print its tail in place of the
+old hand-rolled stats lines.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from typing import Dict, List, Tuple
+
+from repro.obs.metrics import IntervalUnion
+from repro.obs.trace import Event, validate_chrome
+
+
+def events_from_chrome(doc) -> List[Event]:
+    """Invert ``to_chrome``: back to internal event tuples (seconds)."""
+    procs: Dict[int, str] = {}
+    threads: Dict[Tuple[int, int], str] = {}
+    out: List[Event] = []
+    evs = doc.get("traceEvents", [])
+    for ev in evs:
+        if ev.get("ph") == "M":
+            if ev["name"] == "process_name":
+                procs[ev["pid"]] = ev["args"]["name"]
+            elif ev["name"] == "thread_name":
+                threads[(ev["pid"], ev["tid"])] = ev["args"]["name"]
+    for ev in evs:
+        ph = ev.get("ph")
+        if ph == "M":
+            continue
+        proc = procs.get(ev["pid"], str(ev["pid"]))
+        tid = threads.get((ev["pid"], ev["tid"]), str(ev["tid"]))
+        args = dict(ev.get("args") or {})
+        if "id" in ev:
+            args.setdefault("id", ev["id"])
+        out.append((proc, tid, ph, ev["name"], ev.get("cat", ""),
+                    ev["ts"] / 1e6, ev.get("dur", 0.0) / 1e6, args or None))
+    return out
+
+
+def _quantile(sorted_vals: List[float], q: float) -> float:
+    if not sorted_vals:
+        return 0.0
+    idx = min(len(sorted_vals) - 1, int(q * len(sorted_vals)))
+    return sorted_vals[idx]
+
+
+def summarize(events: List[Event]) -> dict:
+    """Aggregate raw event tuples into the summary dict the CLI (and
+    the train.py tail) renders."""
+    phases: Dict[Tuple[str, str], Dict[str, float]] = {}
+    proc_busy: Dict[str, IntervalUnion] = {}
+    bounds: Dict[str, Tuple[float, float]] = {}
+    batch_durs: List[float] = []
+    publish: Dict[str, Dict[str, float]] = {}
+    recoveries: List[dict] = []
+    instants = 0
+    for proc, tid, ph, name, cat, ts, dur, args in events:
+        lo, hi = bounds.get(proc, (ts, ts))
+        bounds[proc] = (min(lo, ts), max(hi, ts + dur))
+        if ph == "i":
+            instants += 1
+            continue
+        if ph != "X":
+            continue
+        key = (cat, name.split(":", 1)[0])
+        agg = phases.get(key)
+        if agg is None:
+            agg = phases[key] = {"count": 0, "total_s": 0.0, "max_s": 0.0}
+        agg["count"] += 1
+        agg["total_s"] += dur
+        agg["max_s"] = max(agg["max_s"], dur)
+        proc_busy.setdefault(proc, IntervalUnion()).add(ts, ts + dur)
+        if cat == "controller" and name == "batch":
+            batch_durs.append(dur)
+        if cat == "fabric" and name.startswith(("publish:", "commit:")):
+            kind, sub = name.split(":", 1)
+            rec = publish.setdefault(
+                sub, {"count": 0, "stage_s": 0.0, "commit_s": 0.0,
+                      "wait_s": 0.0})
+            if kind == "publish":
+                rec["count"] += 1
+                for k in ("stage_s", "wait_s"):
+                    rec[k] += (args or {}).get(k, 0.0)
+            else:                            # stage->commit latency span
+                rec["commit_s"] += dur
+        if cat == "supervisor" and name == "recover":
+            recoveries.append({"proc": proc, "ts": ts, "dur": dur,
+                               **(args or {})})
+    procs = {}
+    for proc, (lo, hi) in sorted(bounds.items()):
+        busy = proc_busy.get(proc)
+        busy_s = busy.total if busy is not None else 0.0
+        wall = hi - lo
+        procs[proc] = {"wall_s": wall, "busy_s": busy_s,
+                       "idle_frac": 1.0 - busy_s / wall if wall > 0 else 0.0}
+    batch_durs.sort()
+    return {
+        "events": len(events),
+        "instants": instants,
+        "processes": procs,
+        "phases": {f"{cat}/{name}" if cat else name: agg
+                   for (cat, name), agg in sorted(phases.items())},
+        "batch_latency": {"count": len(batch_durs),
+                          "p50_s": _quantile(batch_durs, 0.5),
+                          "p99_s": _quantile(batch_durs, 0.99)},
+        "publish_by_subscriber": publish,
+        "recoveries": recoveries,
+    }
+
+
+def summary_lines(events: List[Event]) -> List[str]:
+    """Human-readable summary (one string per line)."""
+    s = summarize(events)
+    lines = [f"trace: {s['events']} events "
+             f"({s['instants']} instant) from "
+             f"{len(s['processes'])} process(es)"]
+    for proc, p in s["processes"].items():
+        lines.append(f"  proc {proc:<18} wall={p['wall_s']:.3f}s "
+                     f"busy={p['busy_s']:.3f}s idle={p['idle_frac']:.1%}")
+    for name, agg in s["phases"].items():
+        lines.append(f"  phase {name:<24} n={agg['count']:<5d} "
+                     f"total={agg['total_s']:.3f}s max={agg['max_s']:.3f}s")
+    bl = s["batch_latency"]
+    if bl["count"]:
+        lines.append(f"  batch latency: n={bl['count']} "
+                     f"p50={bl['p50_s']:.3f}s p99={bl['p99_s']:.3f}s")
+    for sub, rec in s["publish_by_subscriber"].items():
+        lines.append(f"  publish -> {sub:<15} n={rec['count']:<4d} "
+                     f"stage={rec['stage_s']:.3f}s "
+                     f"commit={rec['commit_s']:.3f}s "
+                     f"wait={rec['wait_s']:.3f}s")
+    for r in s["recoveries"]:
+        lines.append(f"  recovery: {r.get('actor', '?')} at t={r['ts']:.3f}s "
+                     f"took {r['dur']:.3f}s")
+    return lines
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.obs",
+        description="Summarize or validate an exported Chrome-trace file.")
+    ap.add_argument("trace", help="path to a --trace out.json export")
+    ap.add_argument("--validate", action="store_true",
+                    help="schema-check only; exit 1 on problems")
+    ap.add_argument("--json", action="store_true",
+                    help="print the summary as JSON instead of text")
+    args = ap.parse_args(argv)
+    with open(args.trace) as f:
+        doc = json.load(f)
+    if args.validate:
+        problems = validate_chrome(doc)
+        for p in problems:
+            print(f"INVALID: {p}", file=sys.stderr)
+        print(f"{args.trace}: "
+              f"{'INVALID' if problems else 'valid Chrome trace'} "
+              f"({len(doc.get('traceEvents', []))} events)")
+        return 1 if problems else 0
+    events = events_from_chrome(doc)
+    if args.json:
+        print(json.dumps(summarize(events), indent=2))
+    else:
+        for line in summary_lines(events):
+            print(line)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -33,6 +33,7 @@ from dataclasses import dataclass
 from typing import Any, Callable, Dict, Optional, Tuple
 
 from repro.core.offpolicy import PartialRolloutCache
+from repro.obs import trace as obs_trace
 from repro.rl.rollout import RolloutState
 
 
@@ -78,6 +79,9 @@ class RolloutScheduler:
 
     def admit(self, job: RolloutJob, state: RolloutState):
         """Park the freshly-prefilled state and enqueue the job."""
+        obs_trace.instant("admit", "scheduler", batch=job.batch_index,
+                          version=job.weight_version, bound=job.bound,
+                          n_chunks=job.n_chunks)
         job.rid = self.cache.put(state)
         heapq.heappush(self._heap,
                        (self.priority(job, state), self._seq, job))
@@ -121,7 +125,10 @@ class RolloutScheduler:
         finished = job.chunks_done >= job.n_chunks
         if not finished:
             try:
-                state = self.executor.advance_chunk(job, state)
+                with obs_trace.span("chunk", "scheduler",
+                                    batch=job.batch_index,
+                                    chunk=job.chunks_done):
+                    state = self.executor.advance_chunk(job, state)
             except BaseException:
                 job.busy_s += time.monotonic() - t0
                 self._repark(prio, seq, job, state)
@@ -133,7 +140,10 @@ class RolloutScheduler:
         if finished:
             t0 = time.monotonic()
             try:
-                batch = self.executor.emit_batch(job, state)
+                with obs_trace.span("emit", "scheduler",
+                                    batch=job.batch_index,
+                                    chunks=job.chunks_done):
+                    batch = self.executor.emit_batch(job, state)
             except BaseException:
                 job.busy_s += time.monotonic() - t0
                 self._repark(prio, seq, job, state)

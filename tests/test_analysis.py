@@ -125,6 +125,33 @@ def test_cli_fails_on_unbaselined_finding(tmp_path):
     assert r.returncode == 1, r.stdout + r.stderr
 
 
+# -------------------------------------------------------- trace staging --
+
+def test_trace_staging_detects_obs_import_in_jit_module(tmp_path):
+    """A repro.obs import planted inside a jit-staged module (kernels/)
+    must fire; the same import in host-side code must not."""
+    from tools.analysis.jaxpr_budget import lint_trace_staging
+    staged = tmp_path / "repro" / "kernels"
+    staged.mkdir(parents=True)
+    (staged / "bad.py").write_text(
+        "from repro.obs import trace as obs_trace\n")
+    host = tmp_path / "repro" / "core"
+    host.mkdir(parents=True)
+    (host / "controller.py").write_text(
+        "from repro.obs import trace as obs_trace\n")
+    findings = lint_trace_staging(str(tmp_path))
+    assert len(findings) == 1, findings
+    assert findings[0].kind == "trace-in-jit"
+    assert "kernels" in findings[0].path
+
+
+def test_trace_staging_clean_on_src():
+    """The committed tree keeps repro.obs out of every jit-staged
+    module -- this is the CI gate, with no baseline escape hatch."""
+    from tools.analysis.jaxpr_budget import lint_trace_staging
+    assert lint_trace_staging() == []
+
+
 # ------------------------------------------------------- jaxpr helpers ---
 
 def test_float_eqn_sizes_counts_and_recurses():

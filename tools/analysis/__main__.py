@@ -25,6 +25,7 @@ def collect(skip_trace: bool = False):
     findings += blocking.run()
     findings += sharedstate.run()
     findings += jaxpr_budget.lint_sources()
+    findings += jaxpr_budget.lint_trace_staging()
     if not skip_trace:
         src = os.path.join(REPO_ROOT, "src")
         if src not in sys.path:

@@ -16,6 +16,13 @@ retrace).
 reported so full-vocab math can't silently bypass
 ``kernels/dispatch.py`` (legitimate per-block attention softmaxes are
 baseline entries).
+
+``lint_trace_staging`` guards the observability boundary (ISSUE 8):
+``repro.obs`` is host-side Python -- a span or metric call staged into
+a jitted hot path would either break tracing (python side effects
+vanish under jit) or silently re-trace, so any ``repro.obs`` import in
+the jit-staged modules (``kernels/``, ``models/``, ``rl/rollout.py``,
+``core/aipo.py``) is a finding.
 """
 from __future__ import annotations
 
@@ -236,4 +243,54 @@ def lint_sources(root: Optional[str] = None) -> List[Finding]:
                     f"direct jax.nn.{fn} (line {node.lineno}) "
                     "-- hot paths must route via kernels/dispatch.py",
                     node.lineno))
+    return findings
+
+
+# -------------------------------------------------------- trace staging --
+
+#: modules whose code is (at least partly) staged under jit -- tracing
+#: calls there would be dead under trace-time execution or force retraces
+_JIT_STAGED = ("kernels" + os.sep, "models" + os.sep,
+               os.path.join("rl", "rollout.py"),
+               os.path.join("core", "aipo.py"))
+
+
+def _imports_obs(tree: ast.AST):
+    """Yield (lineno, what) for every ``repro.obs`` import in ``tree``."""
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Import):
+            for alias in node.names:
+                if alias.name == "repro.obs" or \
+                        alias.name.startswith("repro.obs."):
+                    yield node.lineno, alias.name
+        elif isinstance(node, ast.ImportFrom) and node.module:
+            if node.module == "repro.obs" or \
+                    node.module.startswith("repro.obs."):
+                yield node.lineno, node.module
+            elif node.module == "repro":
+                for alias in node.names:
+                    if alias.name == "obs":
+                        yield node.lineno, "repro.obs"
+
+
+def lint_trace_staging(root: Optional[str] = None) -> List[Finding]:
+    """No ``repro.obs`` reference inside jit-staged modules: tracing is
+    host-side only, and nothing may stage a span into a jitted path."""
+    findings = []
+    for path in iter_source_files(root) if root else iter_source_files():
+        rel = relpath(path)
+        tail = rel.split(f"repro{os.sep}", 1)[-1]
+        if not tail.startswith(_JIT_STAGED) and tail not in _JIT_STAGED:
+            continue
+        with open(path) as f:
+            try:
+                tree = ast.parse(f.read(), filename=path)
+            except SyntaxError:
+                continue
+        for lineno, what in _imports_obs(tree):
+            findings.append(Finding(
+                "hotpath", rel, "module", "trace-in-jit", what,
+                f"imports {what} (line {lineno}) -- repro.obs is "
+                "host-side only and must not reach jit-staged code",
+                lineno))
     return findings
