@@ -180,6 +180,7 @@ def _describe_executor(ex, fallback_name: str) -> Dict[str, Any]:
             "role": getattr(ex, "role", "generic"),
             "chunk_hooks": hasattr(ex, "begin_batch"),
             "pinned_hooks": hasattr(ex, "begin_batch_pinned"),
+            "engine_hooks": hasattr(ex, "engine_round"),
             "staged_weights": hasattr(ex, "stage_weights")
             and hasattr(ex, "set_weights")}
 
@@ -1322,6 +1323,7 @@ class ActorHandle:
         self.name: str = d["name"]
         self.role: str = d["role"]
         self.chunk_hooks: bool = d.get("chunk_hooks", False)
+        self.engine_hooks: bool = d.get("engine_hooks", False)
         self.staged_weights: bool = d.get("staged_weights", False)
         self._pinned_hooks: bool = d.get("pinned_hooks", False)
 
@@ -1381,6 +1383,7 @@ class ActorHandle:
         self.name = d["name"]
         self.role = d["role"]
         self.chunk_hooks = d.get("chunk_hooks", False)
+        self.engine_hooks = d.get("engine_hooks", False)
         self.staged_weights = d.get("staged_weights", False)
         self._pinned_hooks = d.get("pinned_hooks", False)
         return self

@@ -185,6 +185,7 @@ class GeneratorExecutor(Executor):
         self.weight_version = -1        # version of self.params (-1 = unset)
         self._pinned: Dict[int, Any] = {}    # admission snapshots by pin key
         self._pin_seq = 0
+        self._engine = None             # lazy RolloutEngine (engine mode)
 
     def set_weights(self, params, version: Optional[int] = None):
         """Receives DDMA'd trainer weights; applies generator quantization.
@@ -236,8 +237,9 @@ class GeneratorExecutor(Executor):
         and replaced by a ``PinnedParams`` reference on the job, so a
         remote scheduler round-trips kilobytes of job metadata per chunk
         instead of the weight pytree.  ``emit_batch`` releases the pin;
-        a job abandoned before emit leaks its pin until the executor is
-        torn down (bounded by the pool's ``max_inflight``)."""
+        a job abandoned before emit must be handed to ``release_job``
+        (the scheduler's ``clear``/``drain`` teardown does this) or its
+        pin leaks until the executor is torn down."""
         job, state = self.begin_batch(batch_index)
         self._pin_seq += 1
         self._pinned[self._pin_seq] = job.params
@@ -271,6 +273,18 @@ class GeneratorExecutor(Executor):
             job.params = self.params
         job.weight_version = self.weight_version
         return job
+
+    def release_job(self, job):
+        """Release the executor-side resources of a job dropped without
+        emitting -- currently just its ``PinnedParams`` snapshot.  Safe
+        to call for unpinned jobs (no-op)."""
+        params = getattr(job, "params", None)
+        if isinstance(params, PinnedParams):
+            self._pinned.pop(params.key, None)
+
+    def pinned_count(self) -> int:
+        """Live ``PinnedParams`` snapshots (leak-regression probe)."""
+        return len(self._pinned)
 
     def advance_chunk(self, job, state):
         """One resumable ``rollout_chunk`` with the job's key discipline."""
@@ -317,6 +331,61 @@ class GeneratorExecutor(Executor):
         out = self.emit_batch(job, state)
         self.curr_step += 1
         return out
+
+    # ------------------------------------- continuous-batching engine hooks --
+    #
+    # The engine (``repro.rl.engine``) lives actor-side: per-round RPCs
+    # carry batch indices and finished batches, never KV caches.  The
+    # pool worker drives ``engine_enqueue``/``engine_round`` instead of
+    # the begin/advance/emit chunk hooks.
+
+    def engine_configure(self, *, max_running_rows: int = 0,
+                         row_budgets=None, round_delay_s: float = 0.0,
+                         scorer: str = "numeric",
+                         leave_one_out: bool = False):
+        """(Re)build the in-flight engine.  Called once at worker start
+        and again after a respawn (the old engine died with the
+        process); any live engine's in-flight work is aborted first."""
+        from repro.rl.engine import RolloutEngine
+        if self._engine is not None:
+            self._engine.abort()
+        self._engine = RolloutEngine(
+            self, max_running_rows=max_running_rows,
+            row_budgets=row_budgets, round_delay_s=round_delay_s,
+            scorer=scorer, leave_one_out=leave_one_out)
+
+    def engine_enqueue(self, batch_index: int, bound: int = 0) -> int:
+        return self._engine.enqueue(batch_index, bound)
+
+    def engine_round(self, names):
+        """One engine tick; returns ``(items, idle_rounds)`` where each
+        item is the caller-shaped sample-queue entry (batch snapshot
+        included -- one round-trip per emitted batch, like
+        ``emit_batch_snapshot``)."""
+        emissions = self._engine.round()
+        items = []
+        for e in emissions:
+            self.set_output("completions", e["out"])
+            items.append({
+                "batch_index": e["batch_index"],
+                "snapshot": {n: self.get_output(n) for n in names},
+                "generator": self.name,
+                "bound": e["bound"],
+                "gen_busy_s": e["busy_s"],
+                "gen_idle_s": 0.0,
+                "_version": e["weight_version"],
+            })
+        return items
+
+    def engine_inflight(self):
+        return self._engine.inflight_batches()
+
+    def engine_abort(self) -> int:
+        return self._engine.abort() if self._engine is not None else 0
+
+    def engine_stats(self):
+        return self._engine.snapshot_stats() if self._engine is not None \
+            else {}
 
 
 class RewardExecutor(Executor):

@@ -385,6 +385,16 @@ class PoolConfig:
     early_exit: bool = True
     max_inflight: int = 2
     chunk_delay: Optional[Callable[[int, int], float]] = None
+    # continuous-batching engine mode (repro.rl.engine): row-granular
+    # admission into an in-flight slot pool instead of batch-granular
+    # chunk scheduling.  ``max_running_rows=0`` lets the engine size the
+    # pool (2x one batch); ``engine_row_budgets`` injects per-row decode
+    # budgets (straggler modeling -- must be picklable, it crosses the
+    # actor boundary); ``engine_round_delay_s`` sleeps per decode round.
+    engine: bool = False
+    max_running_rows: int = 0
+    engine_row_budgets: Optional[List[int]] = None
+    engine_round_delay_s: float = 0.0
 
     def __post_init__(self):
         # the delay hook lives in RolloutScheduler.step: a monolithic
@@ -393,6 +403,8 @@ class PoolConfig:
         # benchmarks/genpool_bench.StragglerGenerator)
         assert self.chunk_delay is None or self.chunk_scheduling, \
             "chunk_delay requires chunk_scheduling=True"
+        assert not (self.engine and self.chunk_delay), \
+            "engine mode paces rounds via engine_round_delay_s"
 
 
 class GeneratorPool:
@@ -566,7 +578,9 @@ class GeneratorPool:
         return True
 
     def _worker(self, gen, stop: threading.Event):
-        if self.config.chunk_scheduling and gen.chunk_hooks:
+        if self.config.engine and gen.engine_hooks:
+            self._worker_engine(gen, stop)
+        elif self.config.chunk_scheduling and gen.chunk_hooks:
             self._worker_chunked(gen, stop)
         else:
             self._worker_monolithic(gen, stop)
@@ -706,3 +720,111 @@ class GeneratorPool:
                 if claimed is not None:
                     asn.requeue(gen.name, claimed)   # died before admit
                     claimed = None
+
+    # --------------------------------------------------------- engine mode --
+
+    def _engine_configure(self, gen):
+        cfg = self.config
+        gen.call("engine_configure",
+                 max_running_rows=cfg.max_running_rows,
+                 row_budgets=cfg.engine_row_budgets,
+                 round_delay_s=cfg.engine_round_delay_s)
+
+    def _worker_engine(self, gen, stop):
+        """Continuous-batching worker: the engine lives actor-side
+        (``repro.rl.engine`` via the ``engine_*`` executor endpoints), so
+        this loop only moves batch indices in and finished batches out.
+        Enqueue batches the moment their staleness gate opens, then drive
+        ``engine_round`` -- each round admits waiting rows into freed
+        slots, decodes every live row one chunk and harvests finished
+        rows; batches emerge the moment their last group completes, in
+        any order (the consumer reorders by index).
+
+        Recovery: the engine -- slots, ledger, parked pool state -- dies
+        with a killed process.  The supervisor's respawn path replays
+        weights and then invokes the re-admission hook registered here,
+        which rebuilds the engine and re-enqueues every enqueued-but-
+        unemitted batch (fresh rows; their in-flight tokens are
+        unrecoverable, and the re-admitted rows pin the replayed -- newest
+        staleness-legal -- version, so the per-row contract still holds).
+        """
+        cfg = self.config
+        asn = self.assignment
+        self._engine_configure(gen)
+        inflight: Dict[int, int] = {}     # batch index -> bound at enqueue
+        if self.supervisor is not None and self.supervisor.covers(gen):
+            def readmit(gen=gen, inflight=inflight):
+                self._engine_configure(gen)
+                for b in sorted(inflight):
+                    gen.call("engine_enqueue", b, inflight[b])
+                return sorted(inflight)
+            self.supervisor.set_readmit(gen.name, readmit)
+        pending_idle = 0.0
+        claimed = None
+        try:
+            while not stop.is_set():
+                try:
+                    n = asn.next_for(gen.name)
+                    if n is None and not inflight:
+                        if not self._park(gen, stop):
+                            return
+                        continue
+                    if n is not None and len(inflight) < cfg.max_inflight:
+                        bound = self.bounds.bound()
+                        if gen.call("weight_version") >= max(0, n - bound):
+                            if not asn.start(gen.name, n):
+                                continue  # re-dealt away since the peek
+                            claimed = n
+                            self._fire_chaos("batch", gen, n)
+                            t0 = time.monotonic()
+                            with obs_trace.span("enqueue", "genpool",
+                                                worker=gen.name, batch=n):
+                                gen.call("set_step", n)
+                                gen.call("engine_enqueue", n, bound)
+                            inflight[n] = bound
+                            claimed = None
+                            self.intervals.append((t0, time.monotonic()))
+                            continue
+                        if not inflight:
+                            # nothing decoding: block until the version lands
+                            t0 = time.monotonic()
+                            with obs_trace.span("weight-wait", "genpool",
+                                                worker=gen.name, batch=n):
+                                got = self._drain_one(
+                                    gen, stop, f"weights for batch {n}")
+                            if got is None:
+                                return
+                            pending_idle += time.monotonic() - t0
+                            continue
+                        # rows in flight: poll weights, don't block
+                        self._poll_one(gen)
+                    if not inflight:
+                        continue
+                    t0 = time.monotonic()
+                    with obs_trace.span("engine-round", "genpool",
+                                        worker=gen.name,
+                                        inflight=len(inflight)):
+                        items = gen.call("engine_round",
+                                         self._snapshot_names)
+                    self.intervals.append((t0, time.monotonic()))
+                    for item in items:
+                        item["gen_idle_s"] = pending_idle
+                        pending_idle = 0.0
+                        b = item["batch_index"]
+                        if self._push(gen, stop, item) is None:
+                            return
+                        asn.finish(gen.name, b)
+                        inflight.pop(b, None)
+                except (ActorDied, TimeoutError) as e:
+                    if not self._recover(gen, None, e):
+                        return
+                    # respawned: the supervisor's readmit hook already
+                    # rebuilt the engine and re-enqueued `inflight`
+                    if claimed is not None:
+                        asn.requeue(gen.name, claimed)  # died pre-enqueue
+                        claimed = None
+        finally:
+            try:    # drop parked pool state + live rows on the way out
+                gen.call("engine_abort")
+            except Exception:
+                pass

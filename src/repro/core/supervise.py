@@ -248,6 +248,7 @@ class Supervisor:
         self._fabric = None
         self._bounds = None
         self._events: List[dict] = []
+        self._readmit: Dict[str, Any] = {}   # name -> post-replay hook
         self._stop = threading.Event()
         self._monitor: Optional[threading.Thread] = None
 
@@ -273,6 +274,15 @@ class Supervisor:
         if getattr(t, "remote", False):
             t.on_death = lambda err, name=handle.name: \
                 self._note("death-detected", name, error=str(err))
+
+    def set_readmit(self, name: str, fn):
+        """Register a post-replay re-admission hook for ``name``: called
+        on the recovering thread after a respawn's weight replay, it
+        rebuilds whatever actor-side state died with the process (the
+        continuous-batching engine re-enqueues its in-flight batches
+        here).  Returns the re-admitted batch indices (logged)."""
+        with self._lock:
+            self._readmit[name] = fn
 
     def attach_fabric(self, fabric, bounds=None):
         """Wire the weight fabric (replay source + subscriber detach)
@@ -378,6 +388,15 @@ class Supervisor:
             version, params = member.seed_weights
             for ch in aux_chs:
                 ch.deliver(params, version=version)
+        with self._lock:
+            readmit = self._readmit.get(handle.name)
+        if readmit is not None:
+            # actor-side state (engine slots, ledger, parked pool rows)
+            # died with the process: rebuild it under the replayed
+            # weights, INSIDE the recovery window
+            batches = readmit()
+            self._note("readmitted", handle.name,
+                       batches=repr(list(batches or [])))
         recovery_s = obs_trace.now() - t0
         self._note("respawned", handle.name, attempt=attempt + 1,
                    version=replayed, recovery_s=recovery_s)

@@ -122,12 +122,22 @@ def build_controller(cfg, args):
             else FaultPlan.from_env()
         supervise = Supervisor(
             RestartPolicy(max_restarts=args.max_restarts), chaos=chaos)
+    pool = None
+    if args.engine:
+        from repro.core import PoolConfig
+        assert args.mode == "async" and not args.sequential, \
+            "--engine needs the threaded async loop (mode=async)"
+        assert args.rollout_chunk > 0, \
+            "--engine decodes in rounds: set --rollout-chunk >= 1"
+        pool = PoolConfig(engine=True,
+                          max_running_rows=args.max_running_rows)
     return ExecutorController(
         executors, channels,
         max_steps=args.steps, mode=args.mode, staleness=args.staleness,
         checkpoint_every=args.checkpoint_every,
         checkpoint_path=args.checkpoint_path, adaptive=adaptive,
-        overlap_publish=not args.no_overlap_publish, supervise=supervise)
+        overlap_publish=not args.no_overlap_publish, supervise=supervise,
+        pool=pool)
 
 
 def main():
@@ -153,6 +163,13 @@ def main():
     ap.add_argument("--rloo", action="store_true")
     ap.add_argument("--quantize-generator", action="store_true")
     ap.add_argument("--rollout-chunk", type=int, default=0)
+    ap.add_argument("--engine", action="store_true",
+                    help="continuous-batching rollout engine: row-level "
+                    "admission into an in-flight slot pool, rows "
+                    "harvested at EOS, groups emitted the moment they "
+                    "complete (needs --rollout-chunk)")
+    ap.add_argument("--max-running-rows", type=int, default=0,
+                    help="engine slot-pool size (0 = 2x one batch's rows)")
     ap.add_argument("--n-generators", type=int, default=1,
                     help="generator pool size (async mode): worker i "
                     "produces batches i, i+N, ... into the sample queue")

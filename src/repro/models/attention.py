@@ -161,15 +161,26 @@ def gqa_cross_forward(p, x, k, v, cfg):
 def gqa_decode(p, x, cache_k, cache_v, cache_pos, pos, cfg, *,
                window: int = 0, mrope_pos=None):
     """One-token decode.  x: [B, 1, D]; cache_[kv]: [B, Sc, K, hd];
-    cache_pos: [Sc] absolute position per slot (-1 = empty); pos: scalar.
+    cache_pos: [Sc] absolute position per slot (-1 = empty); pos: scalar
+    or [B] (one decode cursor per row).
 
     Keys are stored *already rotated*; the new KV is written at slot
     ``pos % Sc`` (ring buffer; for full caches Sc >= S so slot == pos).
-    Returns (y, new_k, new_v, new_cache_pos)."""
+
+    With per-row ``pos`` (the continuous-batching engine's slot pool)
+    each row writes its own slot and masks against its own cursor.  The
+    rows still share one ``cache_pos``, which is only consistent when
+    the ring never wraps (Sc > max pos): slot ``s`` then holds position
+    ``s`` for every row that wrote it, so a freshly-admitted row at a
+    low cursor masks out exactly the high-position slots it has not
+    written yet.  Returns (y, new_k, new_v, new_cache_pos)."""
     B = x.shape[0]
     H, K, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
     q, k, v = _qkv(p, x, cfg)
-    posb = jnp.broadcast_to(jnp.asarray(pos)[None, None], (B, 1))
+    pos = jnp.asarray(pos)
+    per_row = pos.ndim == 1
+    posb = pos[:, None] if per_row \
+        else jnp.broadcast_to(pos[None, None], (B, 1))
     if cfg.rope_kind == "rope":
         q = apply_rope(q, posb, cfg.rope_theta)
         k = apply_rope(k, posb, cfg.rope_theta)
@@ -178,21 +189,38 @@ def gqa_decode(p, x, cache_k, cache_v, cache_pos, pos, cfg, *,
         q = apply_mrope(q, mp, cfg.rope_theta)
         k = apply_mrope(k, mp, cfg.rope_theta)
     Sc = cache_k.shape[1]
-    slot = jnp.asarray(pos) % Sc
-    cache_k = jax.lax.dynamic_update_slice_in_dim(cache_k, k, slot, axis=1)
-    cache_v = jax.lax.dynamic_update_slice_in_dim(cache_v, v, slot, axis=1)
-    cache_pos = jax.lax.dynamic_update_slice_in_dim(
-        cache_pos, jnp.asarray(pos)[None].astype(cache_pos.dtype), slot, axis=0)
+    slot = pos % Sc
+    if per_row:
+        rows = jnp.arange(B)
+        cache_k = cache_k.at[rows, slot].set(k[:, 0])
+        cache_v = cache_v.at[rows, slot].set(v[:, 0])
+        # rows may scatter to the same slot, but under no-wraparound they
+        # all write value s at index s, so the order is irrelevant
+        cache_pos = cache_pos.at[slot].set(pos.astype(cache_pos.dtype))
+    else:
+        cache_k = jax.lax.dynamic_update_slice_in_dim(cache_k, k, slot,
+                                                      axis=1)
+        cache_v = jax.lax.dynamic_update_slice_in_dim(cache_v, v, slot,
+                                                      axis=1)
+        cache_pos = jax.lax.dynamic_update_slice_in_dim(
+            cache_pos, pos[None].astype(cache_pos.dtype), slot, axis=0)
 
     g = H // K
     qh = q.reshape(B, 1, K, g, hd)
     scale = hd ** -0.5
     scores = jnp.einsum("bqkgh,bskh->bkgqs", qh, cache_k,
                         preferred_element_type=jnp.float32) * scale
-    mask = (cache_pos <= pos) & (cache_pos >= 0)
-    if window:
-        mask &= cache_pos > pos - window
-    scores = jnp.where(mask[None, None, None, None], scores, NEG_INF)
+    if per_row:
+        mask = (cache_pos[None, :] <= posb) & (cache_pos >= 0)[None, :]
+        if window:
+            mask &= cache_pos[None, :] > posb - window
+        mask = mask[:, None, None, None, :]
+    else:
+        mask = (cache_pos <= pos) & (cache_pos >= 0)
+        if window:
+            mask &= cache_pos > pos - window
+        mask = mask[None, None, None, None]
+    scores = jnp.where(mask, scores, NEG_INF)
     probs = jax.nn.softmax(scores, axis=-1)
     y = jnp.einsum("bkgqs,bskh->bqkgh", probs.astype(cache_v.dtype), cache_v)
     y = y.reshape(B, 1, H * hd) @ p["wo"]

@@ -399,3 +399,81 @@ def _sin_pos_at(pos, d_model):
     i = jnp.arange(d_model // 2)
     ang = pos.astype(jnp.float32) / (10000 ** (2 * i / d_model))
     return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)])[None, None, :]
+
+
+# ------------------------------------------------ engine slot-pool helpers -
+
+class SlotPool:
+    """Host-side occupancy tracking for the batch axis of a running
+    decode cache: which rows are live and which are free for admission.
+    Pure bookkeeping -- the device arrays never shrink; a freed slot is
+    simply overwritten by the next ``stitch_cache_row``."""
+
+    def __init__(self, n_slots: int):
+        self.n_slots = n_slots
+        self._free = list(range(n_slots - 1, -1, -1))    # pop() -> slot 0
+        self._used: set = set()
+
+    def acquire(self):
+        """Claim a free slot index, or None when the pool is full."""
+        if not self._free:
+            return None
+        slot = self._free.pop()
+        self._used.add(slot)
+        return slot
+
+    def release(self, slot: int) -> None:
+        assert slot in self._used, f"slot {slot} not in use"
+        self._used.discard(slot)
+        self._free.append(slot)
+
+    @property
+    def used(self):
+        return frozenset(self._used)
+
+    @property
+    def free_count(self) -> int:
+        return len(self._free)
+
+    def __len__(self) -> int:
+        return len(self._used)
+
+
+def assert_engine_cache(cfg: ArchConfig) -> None:
+    """Per-row decode cursors need dense-family KV rings that never
+    wrap: unwindowed segments (a windowed ring is shorter than the
+    sequence, so slots alias across rows) and non-MLA caches.  The
+    paged-KV ROADMAP item lifts these by giving every row its own block
+    table instead of a shared ring."""
+    assert cfg.family in ("dense", "moe"), \
+        f"engine needs a dense-family KV cache, got family={cfg.family!r}"
+    assert cfg.attn_kind != "mla", \
+        "engine does not support MLA latent caches yet (paged KV item)"
+    for (_, w) in segment_layout(cfg):
+        assert not w, \
+            "engine needs unwindowed rings: a windowed segment wraps, " \
+            "which breaks the shared slot_pos across per-row cursors"
+
+
+@jax.jit
+def stitch_cache_row(cache: Cache, row_cache: Cache, slot) -> Cache:
+    """Graft a freshly-prefilled B=1 cache into batch row ``slot`` of a
+    running per-row-cursor cache (prefill-into-slot admission).
+
+    ``cache["pos"]`` must be a [B] vector of per-row cursors; the
+    donor's scalar ``pos`` becomes the admitted row's cursor.
+    ``slot_pos`` merges with ``maximum``: under the engine's
+    no-wraparound invariant both sides hold -1 or the slot's own index,
+    so the union is exact.  ``slot`` is traced, so admissions into
+    different slots share one compilation."""
+    slot = jnp.asarray(slot)
+    new_segs = []
+    for seg, rseg in zip(cache["segments"], row_cache["segments"]):
+        out = dict(seg)
+        for name in ("k", "v"):
+            out[name] = jax.lax.dynamic_update_slice_in_dim(
+                seg[name], rseg[name].astype(seg[name].dtype), slot, axis=1)
+        out["slot_pos"] = jnp.maximum(seg["slot_pos"], rseg["slot_pos"])
+        new_segs.append(out)
+    return {"pos": cache["pos"].at[slot].set(row_cache["pos"]),
+            "segments": new_segs}

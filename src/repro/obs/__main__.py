@@ -63,12 +63,21 @@ def summarize(events: List[Event]) -> dict:
     batch_durs: List[float] = []
     publish: Dict[str, Dict[str, float]] = {}
     recoveries: List[dict] = []
+    queue_waits: List[float] = []
+    ttfh: List[float] = []
     instants = 0
     for proc, tid, ph, name, cat, ts, dur, args in events:
         lo, hi = bounds.get(proc, (ts, ts))
         bounds[proc] = (min(lo, ts), max(hi, ts + dur))
         if ph == "i":
             instants += 1
+            # engine per-row marks: queue wait rides each harvest, time
+            # to first harvest rides each batch's first finished row
+            if cat == "engine" and args:
+                if name == "harvest-row" and "queue_wait_s" in args:
+                    queue_waits.append(float(args["queue_wait_s"]))
+                elif name == "first-harvest" and "ttfh_s" in args:
+                    ttfh.append(float(args["ttfh_s"]))
             continue
         if ph != "X":
             continue
@@ -104,6 +113,8 @@ def summarize(events: List[Event]) -> dict:
         procs[proc] = {"wall_s": wall, "busy_s": busy_s,
                        "idle_frac": 1.0 - busy_s / wall if wall > 0 else 0.0}
     batch_durs.sort()
+    queue_waits.sort()
+    ttfh.sort()
     return {
         "events": len(events),
         "instants": instants,
@@ -113,6 +124,11 @@ def summarize(events: List[Event]) -> dict:
         "batch_latency": {"count": len(batch_durs),
                           "p50_s": _quantile(batch_durs, 0.5),
                           "p99_s": _quantile(batch_durs, 0.99)},
+        "engine_rows": {"harvested": len(queue_waits),
+                        "queue_wait_p50_s": _quantile(queue_waits, 0.5),
+                        "queue_wait_p99_s": _quantile(queue_waits, 0.99),
+                        "ttfh_p50_s": _quantile(ttfh, 0.5),
+                        "ttfh_p99_s": _quantile(ttfh, 0.99)},
         "publish_by_subscriber": publish,
         "recoveries": recoveries,
     }
@@ -134,6 +150,13 @@ def summary_lines(events: List[Event]) -> List[str]:
     if bl["count"]:
         lines.append(f"  batch latency: n={bl['count']} "
                      f"p50={bl['p50_s']:.3f}s p99={bl['p99_s']:.3f}s")
+    er = s["engine_rows"]
+    if er["harvested"]:
+        lines.append(f"  engine rows: n={er['harvested']} "
+                     f"queue-wait p50={er['queue_wait_p50_s']:.3f}s "
+                     f"p99={er['queue_wait_p99_s']:.3f}s "
+                     f"first-harvest p50={er['ttfh_p50_s']:.3f}s "
+                     f"p99={er['ttfh_p99_s']:.3f}s")
     for sub, rec in s["publish_by_subscriber"].items():
         lines.append(f"  publish -> {sub:<15} n={rec['count']:<4d} "
                      f"stage={rec['stage_s']:.3f}s "

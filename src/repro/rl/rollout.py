@@ -44,14 +44,27 @@ jax.tree_util.register_pytree_node(
 )
 
 
+@functools.partial(jax.jit,
+                   static_argnames=("cfg", "total_len", "dtype",
+                                    "cache_len"))
 def start_rollout(params, cfg, prompts, total_len: int,
-                  dtype=jnp.float32, extra=None) -> RolloutState:
-    """prompts: [B, S_p] int32 (rectangular)."""
+                  dtype=jnp.float32, extra=None,
+                  cache_len: int = 0) -> RolloutState:
+    """prompts: [B, S_p] int32 (rectangular).  ``cache_len`` overrides
+    the ring size (the engine prefills donor rows one slot longer than
+    ``total_len`` so finished rows can park on a spare slot).
+
+    Jitted end-to-end: the eager ``models.prefill`` dispatches hundreds
+    of small ops per call, which dominated the engine's per-row B=1
+    admission prefills (and the pool's per-batch prefills) on CPU; one
+    compiled call per (cfg, shape) amortizes that away."""
     B, Sp = prompts.shape
     batch = {"tokens": prompts}
     if extra:
         batch.update(extra)
-    cache_len = total_len + (cfg.frontend_tokens if cfg.family == "vlm" else 0)
+    if not cache_len:
+        cache_len = total_len + (cfg.frontend_tokens
+                                 if cfg.family == "vlm" else 0)
     last_logits, cache = prefill(params, cfg, batch, cache_len=cache_len,
                                  dtype=dtype)
     tokens = jnp.zeros((B, total_len), jnp.int32).at[:, :Sp].set(prompts)
@@ -158,3 +171,87 @@ def action_mask(state: RolloutState) -> jax.Array:
     pos = jnp.arange(T)[None, :]
     gen = pos >= state.prompt_len
     return (gen & (state.tokens != PAD)).astype(jnp.float32)
+
+
+# ------------------------------------------- continuous-batching slot pool -
+#
+# The engine (repro.rl.engine) decodes a pool of rows at *divergent*
+# positions: ``cache["pos"]`` becomes a [R] vector of per-row cursors
+# (see ``gqa_decode``'s per-row mode), rows are admitted into freed
+# batch slots by grafting a B=1 prefill (``admit_row``), and finished
+# rows keep ticking harmlessly -- their cursor clamps onto the ring's
+# spare slot (``cache_len == total_len + 1``) until the slot is reused.
+
+def start_row_pool(cfg, n_rows: int, total_len: int, prompt_len: int,
+                   dtype=jnp.float32) -> RolloutState:
+    """Empty slot-pool state: every row starts done (a free slot) with
+    its decode cursor at 0.  No prefill runs here -- rows get real
+    content only via ``admit_row``."""
+    from repro.models.serve import assert_engine_cache, init_cache
+    assert_engine_cache(cfg)
+    cache = init_cache(cfg, n_rows, total_len + 1, dtype)
+    cache["pos"] = jnp.zeros((n_rows,), jnp.int32)
+    return RolloutState(
+        tokens=jnp.zeros((n_rows, total_len), jnp.int32),
+        behavior_logp=jnp.zeros((n_rows, total_len), jnp.float32),
+        cache=cache,
+        last_logits=jnp.zeros((n_rows, cfg.vocab), jnp.float32),
+        done=jnp.ones((n_rows,), bool),
+        prompt_len=prompt_len,
+    )
+
+
+@jax.jit
+def admit_row(state: RolloutState, row: RolloutState, slot) -> RolloutState:
+    """Graft a freshly-prefilled single-row state (``start_rollout`` on
+    a [1, Sp] prompt with ``cache_len = total_len + 1``) into pool row
+    ``slot``.  ``slot`` is traced: admissions into different slots share
+    one compilation."""
+    from repro.models.serve import stitch_cache_row
+    sl = jnp.asarray(slot)
+    tokens = jax.lax.dynamic_update_slice(state.tokens, row.tokens, (sl, 0))
+    blp = jax.lax.dynamic_update_slice(state.behavior_logp,
+                                       row.behavior_logp, (sl, 0))
+    logits = jax.lax.dynamic_update_slice(
+        state.last_logits, row.last_logits.astype(state.last_logits.dtype),
+        (sl, 0))
+    return RolloutState(tokens=tokens, behavior_logp=blp,
+                        cache=stitch_cache_row(state.cache, row.cache, sl),
+                        last_logits=logits,
+                        done=state.done.at[sl].set(False),
+                        prompt_len=state.prompt_len)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("cfg", "n_steps", "temperature"))
+def rollout_rows_chunk(params, cfg, state: RolloutState, key, *,
+                       n_steps: int, temperature: float = 1.0
+                       ) -> RolloutState:
+    """``rollout_chunk`` with per-row cursors: each row samples and
+    writes at its own ``cache["pos"][r]``.  Done (or free) rows emit PAD
+    and clamp their cursor at ``total_len`` -- the ring's spare slot --
+    so their zombie KV writes never touch a live row's slots, and the
+    token write at the out-of-range column drops."""
+    B, T = state.tokens.shape
+    rows = jnp.arange(B)
+
+    def body(carry, k):
+        tokens, blp, cache, logits, done = carry
+        tok, lp = _sample(logits, k, temperature)
+        tok = jnp.where(done, PAD, tok)
+        lp = jnp.where(tok == PAD, 0.0, lp)
+        new_done = done | (tok == EOS)
+        col = cache["pos"]                         # [B] per-row cursors
+        tokens = tokens.at[rows, col].set(tok, mode="drop")
+        blp = blp.at[rows, col].set(lp, mode="drop")
+        new_logits, cache = decode_step(params, cfg, cache, tok[:, None])
+        cache = {**cache, "pos": jnp.minimum(cache["pos"], T)}
+        return (tokens, blp, cache, new_logits, new_done), None
+
+    keys = jax.random.split(key, n_steps)
+    (tokens, blp, cache, last_logits, done), _ = jax.lax.scan(
+        body, (state.tokens, state.behavior_logp, state.cache,
+               state.last_logits, state.done), keys)
+    return RolloutState(tokens=tokens, behavior_logp=blp, cache=cache,
+                        last_logits=last_logits, done=done,
+                        prompt_len=state.prompt_len)

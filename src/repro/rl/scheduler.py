@@ -54,6 +54,29 @@ class RolloutJob:
     rid: Optional[int] = None  # PartialRolloutCache id while parked
 
 
+@dataclass
+class RowJob:
+    """Row-granular work ticket for the continuous-batching engine
+    (``repro.rl.engine``): one prompt's single completion, scheduled at
+    sequence rather than batch granularity.  ``(batch_index, group,
+    sib)`` identifies the row in its RLOO/AIPO group; ``weight_version``
+    pins the fabric's committed version at admission, the per-row leg of
+    the bounded-staleness contract ``0 <= version_floor - weight_version
+    <= bound``."""
+    batch_index: int           # the emitted batch this row's group feeds
+    group: int                 # prompt index within the batch
+    sib: int                   # sibling index within the group
+    prompt: Any                # [Sp] int32 prompt tokens
+    answer: Any                # passed through to the reward scorer
+    bound: int = 0             # staleness bound in effect at enqueue
+    weight_version: int = -1   # committed version pinned at admission
+    slot: int = -1             # running-pool row while decoding
+    chunks_done: int = 0
+    max_chunks: int = 0        # per-row decode budget (straggler injection)
+    enqueue_t: float = 0.0     # for queue-wait percentiles
+    admit_t: float = 0.0
+
+
 class RolloutScheduler:
     """Drives ``rollout_chunk`` over a work heap of resumable jobs.
 
@@ -156,22 +179,46 @@ class RolloutScheduler:
         self._seq += 1
         return None
 
+    def _release(self, job):
+        """Best-effort release of executor-side resources (params pins)
+        for a job dropped without emitting.  ``clear()`` also runs
+        against *dead* actors (degraded mode), whose pins died with the
+        process -- transport errors are swallowed."""
+        rel = getattr(self.executor, "release_job", None)
+        if rel is None:
+            return
+        try:
+            rel(job)
+        except Exception:
+            pass
+
     def clear(self):
-        """Drop every in-flight job, evicting its parked state; returns
-        the dropped jobs (degraded mode: a lost worker's batches are
-        re-generated from scratch by the survivors)."""
+        """Drop every in-flight job, evicting its parked state and
+        releasing its executor-side params pin; returns the dropped jobs
+        (degraded mode: a lost worker's batches are re-generated from
+        scratch by the survivors)."""
         jobs = []
         while self._heap:
             _, _, job = heapq.heappop(self._heap)
             if job.rid is not None:
                 self.cache.get(job.rid)        # evict the parked state
                 job.rid = None
+            self._release(job)
             jobs.append(job)
         return jobs
 
     def drain(self):
-        """Step until the heap is empty, yielding batches as they finish."""
-        while self._heap:
-            done = self.step()
-            if done is not None:
-                yield done
+        """Step until the heap is empty, yielding batches as they finish.
+
+        A consumer that abandons the iteration mid-drain (early exit
+        between chunks) used to leak the remaining jobs' parked states
+        and executor-side ``PinnedParams``; now the leftovers are
+        cleared -- states evicted, pins released -- on the way out."""
+        try:
+            while self._heap:
+                done = self.step()
+                if done is not None:
+                    yield done
+        finally:
+            if self._heap:
+                self.clear()

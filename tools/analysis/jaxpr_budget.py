@@ -169,6 +169,66 @@ def _rollout_retrace() -> int:
     return jit_cache_entries(rollout.rollout_chunk) - before - 1
 
 
+def _engine_cfg_state():
+    import jax
+    import jax.numpy as jnp
+    from repro.configs.llama_paper import smoke
+    from repro.models import init_params
+    from repro.rl import rollout
+    # vocab large enough that the R*V threshold clears every KV-cache
+    # buffer ([R, Sc, KvH, D] is the legitimate bulk of the stitch) and
+    # only logits-sized materializations count
+    cfg = smoke().replace(n_layers=1, d_model=32, n_heads=2, n_kv_heads=2,
+                          head_dim=16, d_ff=64, vocab=4096)
+    params = init_params(cfg, jax.random.PRNGKey(0), jnp.float32)
+    pool = rollout.start_row_pool(cfg, 4, 9, 5)
+    donor = rollout.start_rollout(params, cfg, jnp.full((1, 5), 5, jnp.int32),
+                                  9, cache_len=10)
+    return cfg, params, pool, donor
+
+
+def _engine_admit_retrace() -> int:
+    """Slot-refill prefill grafts (``admit_row``) into *different* slots
+    must share one compilation -- the slot is traced data, not a static
+    argument; returns entries added minus the one legal compile."""
+    from repro.rl import rollout
+    cfg, params, pool, donor = _engine_cfg_state()
+    before = jit_cache_entries(rollout.admit_row)
+    pool = rollout.admit_row(pool, donor, 0)
+    pool = rollout.admit_row(pool, donor, 3)
+    return jit_cache_entries(rollout.admit_row) - before - 1
+
+
+def _engine_admit_vocab() -> int:
+    """The admission graft may materialize exactly one [R, V] float --
+    the stitched ``last_logits`` buffer itself; anything beyond that is
+    a reintroduced full-vocab intermediate."""
+    import jax
+    from repro.rl import rollout
+    cfg, params, pool, donor = _engine_cfg_state()
+    jx = jax.make_jaxpr(
+        lambda p, d: rollout.admit_row(p, d, 2))(pool, donor)
+    R, V = pool.last_logits.shape
+    return count_big_intermediates(jx.jaxpr, R * V)
+
+
+def _engine_rows_retrace() -> int:
+    """Decode rounds over the slot pool (``rollout_rows_chunk``) must
+    not retrace round-to-round: occupancy changes are data (done flags,
+    per-row cursors), never shapes."""
+    import jax
+    from repro.rl import rollout
+    cfg, params, pool, donor = _engine_cfg_state()
+    pool = rollout.admit_row(pool, donor, 0)
+    before = jit_cache_entries(rollout.rollout_rows_chunk)
+    pool = rollout.rollout_rows_chunk(params, cfg, pool,
+                                      jax.random.PRNGKey(1), n_steps=2)
+    pool = rollout.admit_row(pool, donor, 1)    # occupancy changed
+    rollout.rollout_rows_chunk(params, cfg, pool,
+                               jax.random.PRNGKey(2), n_steps=2)
+    return jit_cache_entries(rollout.rollout_rows_chunk) - before - 1
+
+
 HOT_PATHS: List[HotPath] = [
     HotPath("fused_logprob_fwd", 0, _logprob_fwd,
             "float intermediates >= T*V in the streamed logprob forward"),
@@ -185,6 +245,16 @@ HOT_PATHS: List[HotPath] = [
     HotPath("rollout_chunk_retrace", 0, _rollout_retrace,
             "extra rollout_chunk jit entries beyond one per ragged "
             "generate signature"),
+    HotPath("engine_admit_retrace", 0, _engine_admit_retrace,
+            "extra admit_row jit entries across admissions into "
+            "different slots (slot must stay traced data)"),
+    HotPath("engine_admit_vocab", 2, _engine_admit_vocab,
+            "float intermediates >= R*V in the admission graft beyond "
+            "the stitched last_logits write (1 dynamic_update_slice + "
+            "its pjit-boundary alias)"),
+    HotPath("engine_rows_retrace", 0, _engine_rows_retrace,
+            "extra rollout_rows_chunk jit entries across decode rounds "
+            "with changed slot occupancy"),
 ]
 
 
