@@ -1,0 +1,212 @@
+"""Paged KV cache vs dense rings -> BENCH_paged.json.
+
+Three measurements, sized for the 1-core CPU dev box:
+
+  * **Capacity** -- max concurrent rows inside a fixed KV arena byte
+    budget.  The dense ring reserves ``total_len + 1`` token slots per
+    row up front; the paged allocator hands out ``page_size``-token
+    blocks on demand and maps radix-shared prompt-prefix blocks into
+    sibling rows instead of duplicating them, so the same bytes hold
+    strictly more rows whenever prompts are long or shared
+    (``n_per_prompt`` siblings per prompt, the paper's GRPO shape).
+    The gate is ``capacity_ratio_ge_2x``.
+
+  * **Admission cost with/without a radix hit** -- compiled-model FLOPs
+    (``cost_analysis``) and wall latency of ``admit_row_paged`` at
+    ``n_cached=0`` (fresh prefill) vs a radix hit covering every full
+    prompt block.  A hit prefills only the un-cached suffix, skipping
+    the prefix's attention/FFN work entirely; the gate is
+    ``radix_flops_skip_ge_90``.
+
+  * **Decode parity** -- tokens/s of ``rollout_rows_chunk`` over
+    matched dense/paged pools, plus a bitwise comparison of the decoded
+    tokens and logits (``paged_equals_dense``): page-table indirection
+    reorders memory, never math, and must not cost decode throughput.
+"""
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, timeit
+from repro.configs.llama_paper import smoke
+from repro.models import init_params
+from repro.models.paging import (PagePool, RadixCache, paged_blocks,
+                                 plan_admission)
+from repro.rl.rollout import (admit_row, admit_row_paged,
+                              rollout_rows_chunk, start_rollout,
+                              start_row_pool)
+
+# capacity sim: long shared prompts, short generations -- the regime the
+# paper's n_per_prompt sibling groups put the generator in
+CAP_PAGE = 8
+CAP_PROMPT = 56
+CAP_TOTAL = 64
+CAP_SIBS = 4
+CAP_PAGES = 64                       # fixed arena: 64 * 8 = 512 KV slots
+
+# admission cost: one long prompt, all full blocks radix-cached on a hit
+ADM_PAGE = 4
+ADM_PROMPT = 88
+ADM_TOTAL = 96
+
+
+def micro_cfg(vocab=64):
+    return smoke().replace(n_layers=1, d_model=32, n_heads=2, n_kv_heads=2,
+                           head_dim=16, d_ff=64, vocab=vocab)
+
+
+def measure_capacity() -> dict:
+    """Admit sibling groups until the fixed arena backpressures; the
+    dense ring's capacity is the same byte budget divided by its fixed
+    per-row reservation."""
+    mb = paged_blocks(CAP_TOTAL, CAP_PAGE)
+    pool = PagePool(CAP_PAGES)
+    radix = RadixCache(pool, CAP_PAGE)
+    rng = np.random.RandomState(0)
+    paged_rows = 0
+    while True:
+        prompt = tuple(int(t) for t in rng.randint(1, 64, CAP_PROMPT))
+        admitted = 0
+        for _ in range(CAP_SIBS):
+            plan = plan_admission(pool, radix, prompt, mb, CAP_PAGE)
+            if plan is None:
+                break
+            radix.insert(prompt, plan.table)
+            admitted += 1
+        paged_rows += admitted
+        if admitted < CAP_SIBS:
+            break
+    arena_tokens = CAP_PAGES * CAP_PAGE
+    dense_rows = arena_tokens // (CAP_TOTAL + 1)
+    return {
+        "arena_kv_token_slots": arena_tokens,
+        "page_size": CAP_PAGE,
+        "prompt_len": CAP_PROMPT,
+        "total_len": CAP_TOTAL,
+        "n_per_prompt": CAP_SIBS,
+        "dense_max_rows": dense_rows,
+        "paged_max_rows": paged_rows,
+        "capacity_ratio": paged_rows / max(dense_rows, 1),
+    }
+
+
+def _flops(fn, *args, **static) -> float:
+    jitted = jax.jit(fn, static_argnames=tuple(static))
+    ca = jitted.lower(*args, **static).compile().cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0]
+    return float(ca.get("flops", 0.0))
+
+
+def measure_admission() -> dict:
+    cfg = micro_cfg()
+    params = init_params(cfg, jax.random.PRNGKey(0), jnp.float32)
+    mb = paged_blocks(ADM_TOTAL, ADM_PAGE)
+    n_cached = (ADM_PROMPT - 1) // ADM_PAGE * ADM_PAGE
+    pool = start_row_pool(cfg, 2, ADM_TOTAL, ADM_PROMPT, kv_layout="paged",
+                          kv_page_size=ADM_PAGE, kv_pages=2 * mb)
+    trash = 2 * mb
+    prompt = jnp.asarray(np.random.RandomState(1).randint(
+        1, cfg.vocab, (1, ADM_PROMPT)), jnp.int32)
+    pages = jnp.asarray(list(range(mb)) + [trash], jnp.int32)
+
+    def admit(state, n):
+        return admit_row_paged(params, cfg, state, prompt, pages, 0,
+                               n_cached=n)
+
+    flops_miss = _flops(lambda s: admit(s, 0), pool)
+    flops_hit = _flops(lambda s: admit(s, n_cached), pool)
+    lat_miss = timeit(lambda: jax.block_until_ready(admit(pool, 0)))
+    lat_hit = timeit(lambda: jax.block_until_ready(admit(pool, n_cached)))
+    return {
+        "prompt_len": ADM_PROMPT,
+        "page_size": ADM_PAGE,
+        "n_cached_on_hit": n_cached,
+        "prefill_flops_miss": flops_miss,
+        "prefill_flops_hit": flops_hit,
+        "flops_skip_frac": 1.0 - flops_hit / max(flops_miss, 1.0),
+        "admit_latency_miss_s": lat_miss,
+        "admit_latency_hit_s": lat_hit,
+    }
+
+
+def measure_decode() -> dict:
+    cfg = micro_cfg()
+    params = init_params(cfg, jax.random.PRNGKey(0), jnp.float32)
+    R, T, Sp, P = 4, 15, 6, 4            # mb * P = 16 = T + 1: parity
+    dense = start_row_pool(cfg, R, T, Sp)
+    paged = start_row_pool(cfg, R, T, Sp, kv_layout="paged", kv_page_size=P)
+    mb = paged_blocks(T, P)
+    alloc = PagePool(R * mb)
+    rng = np.random.RandomState(2)
+    for slot in range(R):
+        pr = jnp.asarray(rng.randint(1, cfg.vocab, (1, Sp)), jnp.int32)
+        row = start_rollout(params, cfg, pr, T, cache_len=T + 1)
+        dense = admit_row(dense, row, slot)
+        plan = plan_admission(alloc, None, tuple(int(t) for t in pr[0]),
+                              mb, P)
+        paged = admit_row_paged(
+            params, cfg, paged, pr,
+            jnp.asarray(plan.table + (alloc.trash_page,), jnp.int32),
+            slot, n_cached=0)
+    key = jax.random.PRNGKey(9)
+    n_steps = 8
+    t_dense = timeit(lambda: rollout_rows_chunk(params, cfg, dense, key,
+                                                n_steps=n_steps))
+    t_paged = timeit(lambda: rollout_rows_chunk(params, cfg, paged, key,
+                                                n_steps=n_steps))
+    d = rollout_rows_chunk(params, cfg, dense, key, n_steps=n_steps)
+    p = rollout_rows_chunk(params, cfg, paged, key, n_steps=n_steps)
+    equal = bool(
+        (np.asarray(d.tokens) == np.asarray(p.tokens)).all()
+        and (np.asarray(d.last_logits) == np.asarray(p.last_logits)).all())
+    return {
+        "rows": R,
+        "n_steps": n_steps,
+        "dense_tokens_per_s": R * n_steps / t_dense,
+        "paged_tokens_per_s": R * n_steps / t_paged,
+        "paged_over_dense": t_dense / t_paged,
+        "paged_equals_dense": equal,
+    }
+
+
+def main() -> None:
+    report = {
+        "capacity": measure_capacity(),
+        "admission": measure_admission(),
+        "decode": measure_decode(),
+    }
+    report["capacity_ratio_ge_2x"] = \
+        report["capacity"]["capacity_ratio"] >= 2.0
+    report["radix_flops_skip_ge_90"] = \
+        report["admission"]["flops_skip_frac"] >= 0.90
+    report["paged_equals_dense"] = report["decode"]["paged_equals_dense"]
+    out = os.environ.get("REPRO_PAGED_JSON", "BENCH_paged.json")
+    with open(out, "w") as f:
+        json.dump(report, f, indent=2)
+    cap = report["capacity"]
+    emit("paged_capacity", 0.0,
+         f"dense={cap['dense_max_rows']};paged={cap['paged_max_rows']};"
+         f"ratio={cap['capacity_ratio']:.2f}")
+    adm = report["admission"]
+    emit("paged_admit_miss", adm["admit_latency_miss_s"] * 1e6,
+         f"flops={adm['prefill_flops_miss']:.0f}")
+    emit("paged_admit_hit", adm["admit_latency_hit_s"] * 1e6,
+         f"flops={adm['prefill_flops_hit']:.0f};"
+         f"skip={adm['flops_skip_frac']:.3f}")
+    dec = report["decode"]
+    emit("paged_decode", 0.0,
+         f"dense_tok_s={dec['dense_tokens_per_s']:.1f};"
+         f"paged_tok_s={dec['paged_tokens_per_s']:.1f};"
+         f"speed_ratio={dec['paged_over_dense']:.2f}")
+    for gate in ("capacity_ratio_ge_2x", "radix_flops_skip_ge_90",
+                 "paged_equals_dense"):
+        emit(f"paged_{gate}", 0.0, str(report[gate]))
+    emit("paged_json", 0.0, out)
+
+
+if __name__ == "__main__":
+    main()

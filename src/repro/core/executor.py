@@ -342,17 +342,23 @@ class GeneratorExecutor(Executor):
     def engine_configure(self, *, max_running_rows: int = 0,
                          row_budgets=None, round_delay_s: float = 0.0,
                          scorer: str = "numeric",
-                         leave_one_out: bool = False):
+                         leave_one_out: bool = False,
+                         kv_layout: str = "", kv_page_size: int = 0,
+                         kv_pages: int = 0):
         """(Re)build the in-flight engine.  Called once at worker start
         and again after a respawn (the old engine died with the
-        process); any live engine's in-flight work is aborted first."""
+        process); any live engine's in-flight work is aborted first.
+        A rebuild starts with an empty radix cache in paged mode --
+        re-enqueued batches repopulate it on their first admission."""
         from repro.rl.engine import RolloutEngine
         if self._engine is not None:
             self._engine.abort()
         self._engine = RolloutEngine(
             self, max_running_rows=max_running_rows,
             row_budgets=row_budgets, round_delay_s=round_delay_s,
-            scorer=scorer, leave_one_out=leave_one_out)
+            scorer=scorer, leave_one_out=leave_one_out,
+            kv_layout=kv_layout, kv_page_size=kv_page_size,
+            kv_pages=kv_pages)
 
     def engine_enqueue(self, batch_index: int, bound: int = 0) -> int:
         return self._engine.enqueue(batch_index, bound)

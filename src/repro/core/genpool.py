@@ -395,6 +395,14 @@ class PoolConfig:
     max_running_rows: int = 0
     engine_row_budgets: Optional[List[int]] = None
     engine_round_delay_s: float = 0.0
+    # paged KV cache (models/paging.py): ``kv_layout="paged"`` replaces
+    # the dense per-row ring with a shared page arena + per-row page
+    # tables and radix prefix reuse ("" defers to $REPRO_KV_LAYOUT, then
+    # dense).  kv_page_size=0 -> 16; kv_pages=0 -> sized so every slot
+    # fits a full row (no admission backpressure).
+    kv_layout: str = ""
+    kv_page_size: int = 0
+    kv_pages: int = 0
 
     def __post_init__(self):
         # the delay hook lives in RolloutScheduler.step: a monolithic
@@ -728,7 +736,10 @@ class GeneratorPool:
         gen.call("engine_configure",
                  max_running_rows=cfg.max_running_rows,
                  row_budgets=cfg.engine_row_budgets,
-                 round_delay_s=cfg.engine_round_delay_s)
+                 round_delay_s=cfg.engine_round_delay_s,
+                 kv_layout=cfg.kv_layout,
+                 kv_page_size=cfg.kv_page_size,
+                 kv_pages=cfg.kv_pages)
 
     def _worker_engine(self, gen, stop):
         """Continuous-batching worker: the engine lives actor-side

@@ -310,6 +310,30 @@ def attention(q, k, v, *, causal: bool = True, window: int = 0,
                       backend == "pallas_compile")
 
 
+def paged_attention(q, arena_k, arena_v, page_table, pos, *, window: int = 0):
+    """Paged decode attention: one query per row against the row's page
+    table over a shared KV arena (``models/paging.py`` layout).
+
+    q: [B, H, hd]; arena_[kv]: [n_pages + 1, P, K, hd]; page_table:
+    [B, max_blocks + 1] int32; pos: [B] int32 -> [B, H, hd].  Routing
+    follows the attention seq-len threshold on the row's *logical*
+    length ``max_blocks * P`` (what one program actually streams); the
+    jnp route is the gather reference that is bitwise-equal to dense
+    ``gqa_decode``, the kernel route streams pages via scalar-prefetched
+    index maps without materializing the gather.
+    """
+    from repro.kernels.paged_attention import (paged_attention_kernel,
+                                               paged_attention_ref)
+    S = (page_table.shape[1] - 1) * arena_k.shape[1]
+    backend = _route(S, q.dtype, "REPRO_KERNEL_MIN_SEQ", 512)
+    if backend == "jnp":
+        return paged_attention_ref(q, arena_k, arena_v, page_table, pos,
+                                   window=window)
+    return paged_attention_kernel(q, arena_k, arena_v, page_table, pos,
+                                  window=window,
+                                  interpret=backend != "pallas_compile")
+
+
 # --------------------------------------------------------------- matmul ---
 
 def int8_matmul(x, w_q, scale, *, block_m: int = 256, block_n: int = 256,

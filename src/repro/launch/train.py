@@ -130,7 +130,10 @@ def build_controller(cfg, args):
         assert args.rollout_chunk > 0, \
             "--engine decodes in rounds: set --rollout-chunk >= 1"
         pool = PoolConfig(engine=True,
-                          max_running_rows=args.max_running_rows)
+                          max_running_rows=args.max_running_rows,
+                          kv_layout=args.kv_layout,
+                          kv_page_size=args.kv_page_size,
+                          kv_pages=args.kv_pages)
     return ExecutorController(
         executors, channels,
         max_steps=args.steps, mode=args.mode, staleness=args.staleness,
@@ -170,6 +173,17 @@ def main():
                     "complete (needs --rollout-chunk)")
     ap.add_argument("--max-running-rows", type=int, default=0,
                     help="engine slot-pool size (0 = 2x one batch's rows)")
+    ap.add_argument("--kv-layout", default="",
+                    choices=["", "dense", "paged"],
+                    help="engine KV layout: paged = shared page arena + "
+                    "per-row page tables + radix prefix reuse "
+                    "(default: $REPRO_KV_LAYOUT, then dense)")
+    ap.add_argument("--kv-page-size", type=int, default=0,
+                    help="tokens per KV page (0 = 16)")
+    ap.add_argument("--kv-pages", type=int, default=0,
+                    help="KV arena pages shared by all rows (0 = every "
+                    "slot fits a full row, i.e. no admission "
+                    "backpressure; smaller = backpressure, not OOM)")
     ap.add_argument("--n-generators", type=int, default=1,
                     help="generator pool size (async mode): worker i "
                     "produces batches i, i+N, ... into the sample queue")

@@ -227,6 +227,73 @@ def gqa_decode(p, x, cache_k, cache_v, cache_pos, pos, cfg, *,
     return y, cache_k, cache_v, cache_pos
 
 
+def gqa_decode_paged(p, x, arena_k, arena_v, page_table, pos, cfg, *,
+                     window: int = 0):
+    """One-token decode against a paged KV arena (``models/paging.py``).
+
+    x: [B, 1, D]; arena_[kv]: [n_pages + 1, P, K, hd] (last page is the
+    trash page); page_table: [B, max_blocks + 1] int32 with the last
+    entry always trash; pos: [B] decode cursor per row.
+
+    The new rotated KV is scattered into page ``table[row, pos // P]``
+    at offset ``pos % P``; a cursor clamped to ``max_blocks * P`` indexes
+    the trailing trash entry, so finished rows' zombie writes can never
+    touch a page that may have been reallocated.  Attention itself goes
+    through ``dispatch.paged_attention`` (gather reference or Pallas
+    kernel), whose jnp route mirrors ``gqa_decode`` bit-for-bit.
+    Returns (y, new_arena_k, new_arena_v)."""
+    assert cfg.rope_kind != "mrope", "paged decode is rope/none only"
+    B = x.shape[0]
+    H, hd = cfg.n_heads, cfg.hd
+    q, k, v = _qkv(p, x, cfg)
+    posb = pos[:, None]
+    if cfg.rope_kind == "rope":
+        q = apply_rope(q, posb, cfg.rope_theta)
+        k = apply_rope(k, posb, cfg.rope_theta)
+    P = arena_k.shape[1]
+    W = page_table.shape[1]
+    rows = jnp.arange(B)
+    blk = jnp.minimum(pos // P, W - 1)
+    pg = page_table[rows, blk]
+    off = pos % P
+    # distinct live rows write distinct private pages (shared radix pages
+    # cover only the block-aligned prompt prefix, below every decode
+    # cursor); trash-page collisions between done rows are unread garbage
+    arena_k = arena_k.at[pg, off].set(k[:, 0].astype(arena_k.dtype))
+    arena_v = arena_v.at[pg, off].set(v[:, 0].astype(arena_v.dtype))
+    y = dispatch.paged_attention(q[:, 0], arena_k, arena_v, page_table, pos,
+                                 window=window)
+    y = y.reshape(B, 1, H * hd) @ p["wo"]
+    return y, arena_k, arena_v
+
+
+def gqa_extend(p, x, prefix_k, prefix_v, cfg, *, q_offset: int,
+               window: int = 0):
+    """Prefill continuation over a cached prefix (radix-hit admission).
+
+    x: [B, S, D] embeds of the *suffix* tokens (absolute positions
+    ``q_offset .. q_offset + S``); prefix_[kv]: [B, q_offset, K, hd]
+    already-rotated KVs gathered from cached pages.  Runs the identical
+    math a full prefill would for the suffix rows -- per-query-row
+    attention is independent of the other rows in the block, and the
+    cached prefix KVs are exactly what full prefill produced -- so the
+    suffix KVs/logits are bit-for-bit equal to re-prefilling from
+    token 0.  Returns (y, (k, v)) with k/v the suffix KVs only."""
+    assert cfg.rope_kind != "mrope", "paged extend is rope/none only"
+    B, S, _ = x.shape
+    q, k, v = _qkv(p, x, cfg)
+    if cfg.rope_kind == "rope":
+        positions = jnp.broadcast_to(jnp.arange(S) + q_offset, (B, S))
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    q, k, v = constrain_attn(q, k, v)
+    cat_k = jnp.concatenate([prefix_k.astype(k.dtype), k], axis=1)
+    cat_v = jnp.concatenate([prefix_v.astype(v.dtype), v], axis=1)
+    y = dispatch.attention(q, cat_k, cat_v, causal=True, window=window,
+                           q_offset=q_offset, unroll=cfg.unroll_scans)
+    return y.reshape(B, S, -1) @ p["wo"], (k, v)
+
+
 # ------------------------------------------------------------------- MLA ---
 
 def mla_params(key, cfg, dtype):

@@ -36,6 +36,18 @@ def _kv_seg(cfg, n_layers, B, Sc, dtype):
     }
 
 
+def _kv_seg_paged(cfg, n_layers, n_pages, page_size, dtype):
+    """Paged arena for one segment: ``n_pages`` allocatable pages of
+    ``page_size`` KV slots plus the trash page at index ``n_pages``.
+    No ``slot_pos``: validity is per-row (col <= row cursor), carried by
+    the page table + ``pos`` vector at the cache top level."""
+    K, hd = cfg.n_kv_heads, cfg.hd
+    return {
+        "k": jnp.zeros((n_layers, n_pages + 1, page_size, K, hd), dtype),
+        "v": jnp.zeros((n_layers, n_pages + 1, page_size, K, hd), dtype),
+    }
+
+
 def _mla_seg(cfg, n_layers, B, Sc, dtype):
     m = cfg.mla
     return {
@@ -64,9 +76,25 @@ def segment_layout(cfg: ArchConfig):
 
 
 def init_cache(cfg: ArchConfig, B: int, cache_len: int,
-               dtype=jnp.bfloat16) -> Cache:
+               dtype=jnp.bfloat16, *, layout: str = "dense",
+               page_size: int = 0, n_pages: int = 0) -> Cache:
     cache: Cache = {"pos": jnp.zeros((), jnp.int32)}
     mk_seg = _mla_seg if cfg.attn_kind == "mla" else _kv_seg
+
+    if layout == "paged":
+        from repro.models.paging import paged_blocks
+        assert cfg.family in ("dense", "moe") and cfg.attn_kind != "mla", \
+            f"paged layout covers dense/moe GQA only, got {cfg.family!r}"
+        assert page_size > 0 and n_pages > 0, (page_size, n_pages)
+        mb = paged_blocks(cache_len, page_size)
+        cache["segments"] = [
+            _kv_seg_paged(cfg, n, n_pages, page_size, dtype)
+            for (n, _) in segment_layout(cfg)]
+        # one table shared by every segment: block b of row r lives in
+        # physical page table[r, b] of each segment's arena; the last
+        # entry is pinned to the trash page (= n_pages)
+        cache["page_table"] = jnp.full((B, mb + 1), n_pages, jnp.int32)
+        return cache
 
     if cfg.family in ("dense", "vlm", "moe"):
         cache["segments"] = [
@@ -131,6 +159,47 @@ def _prefill_collect(params, cfg, x, mrope_pos=None):
                                           mrope_pos=mrope_pos,
                                           collect_kv=True)
         kv_segs.extend(kvs)
+    return x, kv_segs
+
+
+def _extend_collect(params, cfg, x, prefix_kvs, q_offset: int):
+    """Prefill *continuation*: run suffix embeds ``x`` (absolute positions
+    ``q_offset ..``) through the decoder stacks attending over cached
+    prefix KVs, collecting the suffix KVs per segment.
+
+    ``prefix_kvs``: one (k, v) pair per cache segment, each
+    [L_seg, B, q_offset, K, hd] gathered from the radix-shared pages.
+    Per-query-row attention is independent of the other rows, so the
+    result is bit-for-bit what ``_prefill_collect`` computes for the
+    same positions of the full prompt."""
+    if cfg.family == "moe":
+        stacks = []
+        fkd = cfg.moe.first_k_dense
+        if fkd:
+            stacks.append((params["dense_layers"], fkd, 0))
+        stacks.append((params["moe_layers"], cfg.n_layers - fkd, fkd))
+    else:
+        stacks = [(params["layers"], cfg.n_layers, 0)]
+    kv_segs = []
+    si = 0
+    for stacked, n, off in stacks:
+        for (i, j, w) in attn_segments(cfg, n, off):
+            seg = jax.tree.map(lambda a: a[i:j], stacked)
+            pk, pv = prefix_kvs[si]
+
+            def body(h, inputs, w=w):
+                lp, pk_l, pv_l = inputs
+                h = constrain_batch(h)
+                hh = norm(h, lp["ln1"], cfg.norm)
+                y, kv = attn.gqa_extend(lp["attn"], hh, pk_l, pv_l, cfg,
+                                        q_offset=q_offset, window=w)
+                h = h + y
+                h, _ = bb._ffn_block(lp, h, cfg)
+                return h, kv
+
+            x, kvs = bb._scan(body, x, (seg, pk, pv), cfg)
+            kv_segs.append(kvs)
+            si += 1
     return x, kv_segs
 
 
@@ -276,6 +345,26 @@ def _decode_seg(stacked_params, seg, x, pos, cfg, window, mrope_pos=None):
     return x, new_seg
 
 
+def _decode_seg_paged(stacked_params, seg, x, page_table, pos, cfg, window):
+    """Scan one attention segment during paged decode: every layer
+    scatters its new KV into the row's mapped page and attends through
+    the page table (``dispatch.paged_attention``)."""
+    def body(h, inputs):
+        lp, ak, av = inputs
+        h = constrain_batch(h)
+        hh = norm(h, lp["ln1"], cfg.norm)
+        y, ak, av = attn.gqa_decode_paged(lp["attn"], hh, ak, av,
+                                          page_table, pos, cfg,
+                                          window=window)
+        h = h + y
+        h, _ = bb._ffn_block(lp, h, cfg)
+        return h, (ak, av)
+
+    x, (ak, av) = bb._scan(body, x, (stacked_params, seg["k"], seg["v"]),
+                           cfg)
+    return x, {"k": ak, "v": av}
+
+
 def decode_step(params, cfg: ArchConfig, cache: Cache, tokens):
     """tokens: [B, 1].  Returns (logits [B, V], new cache)."""
     pos = cache["pos"]
@@ -297,16 +386,25 @@ def decode_step(params, cfg: ArchConfig, cache: Cache, tokens):
             stacks.append((params["moe_layers"], cfg.n_layers - fkd, fkd))
         else:
             stacks = [(params["layers"], cfg.n_layers, 0)]
+        paged = "page_table" in cache
         new_segs = []
         si = 0
         for stacked, n, off in stacks:
             for (i, j, w) in attn_segments(cfg, n, off):
                 lp = jax.tree.map(lambda a: a[i:j], stacked)
-                x, new_seg = _decode_seg(lp, cache["segments"][si], x, pos,
-                                         cfg, w, mrope_pos=mrope_pos)
+                if paged:
+                    x, new_seg = _decode_seg_paged(
+                        lp, cache["segments"][si], x, cache["page_table"],
+                        pos, cfg, w)
+                else:
+                    x, new_seg = _decode_seg(lp, cache["segments"][si], x,
+                                             pos, cfg, w,
+                                             mrope_pos=mrope_pos)
                 new_segs.append(new_seg)
                 si += 1
         new_cache = {"pos": pos + 1, "segments": new_segs}
+        if paged:
+            new_cache["page_table"] = cache["page_table"]
         return bb._logits(params, cfg, x[:, -1]), new_cache
 
     if cfg.family == "hybrid":
@@ -439,20 +537,31 @@ class SlotPool:
         return len(self._used)
 
 
-def assert_engine_cache(cfg: ArchConfig) -> None:
-    """Per-row decode cursors need dense-family KV rings that never
-    wrap: unwindowed segments (a windowed ring is shorter than the
-    sequence, so slots alias across rows) and non-MLA caches.  The
-    paged-KV ROADMAP item lifts these by giving every row its own block
-    table instead of a shared ring."""
+def assert_engine_cache(cfg: ArchConfig, layout: str = "dense") -> None:
+    """Which cache families the engine's per-row decode cursors support.
+
+    Dense layout needs dense-family KV rings that never wrap: unwindowed
+    segments only (a windowed ring is shorter than the sequence, so
+    slots alias across rows) and non-MLA caches.  The paged layout's
+    per-row page tables remove the shared-``slot_pos`` constraint, so
+    windowed segments (llama4 iRoPE ring families) are admitted there --
+    masking enforces the window; per-page reclamation of slid-past
+    windows stays a paged follow-up.  MLA latent caches (need latent-
+    shaped pages) and ssm/hybrid/vlm state families (no KV pages at all)
+    stay rejected under both layouts."""
     assert cfg.family in ("dense", "moe"), \
-        f"engine needs a dense-family KV cache, got family={cfg.family!r}"
+        f"engine needs a dense-family KV cache, got family={cfg.family!r} " \
+        "(ssm/hybrid state caches are not paged KV; vlm needs mrope decode)"
     assert cfg.attn_kind != "mla", \
-        "engine does not support MLA latent caches yet (paged KV item)"
+        "engine does not support MLA latent caches yet " \
+        "(paged follow-up: latent-shaped pages for ckv/krope)"
+    if layout == "paged":
+        return
     for (_, w) in segment_layout(cfg):
         assert not w, \
             "engine needs unwindowed rings: a windowed segment wraps, " \
-            "which breaks the shared slot_pos across per-row cursors"
+            "which breaks the shared slot_pos across per-row cursors " \
+            "(use the paged layout -- per-row page tables admit windows)"
 
 
 @jax.jit

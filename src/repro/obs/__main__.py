@@ -65,6 +65,10 @@ def summarize(events: List[Event]) -> dict:
     recoveries: List[dict] = []
     queue_waits: List[float] = []
     ttfh: List[float] = []
+    paged = {"pages_in_use_last": 0, "pages_in_use_max": 0,
+             "pages_total": 0, "radix_nodes_last": 0,
+             "prefix_reuse_rows": 0, "prefix_tokens_reused": 0,
+             "admission_backpressure": 0}
     instants = 0
     for proc, tid, ph, name, cat, ts, dur, args in events:
         lo, hi = bounds.get(proc, (ts, ts))
@@ -72,12 +76,28 @@ def summarize(events: List[Event]) -> dict:
         if ph == "i":
             instants += 1
             # engine per-row marks: queue wait rides each harvest, time
-            # to first harvest rides each batch's first finished row
+            # to first harvest rides each batch's first finished row;
+            # paged-KV gauges ride each round ("pages") and each
+            # radix-hit admission ("prefix-reuse")
             if cat == "engine" and args:
                 if name == "harvest-row" and "queue_wait_s" in args:
                     queue_waits.append(float(args["queue_wait_s"]))
                 elif name == "first-harvest" and "ttfh_s" in args:
                     ttfh.append(float(args["ttfh_s"]))
+                elif name == "pages":
+                    used = int(args.get("pages_in_use", 0))
+                    paged["pages_in_use_last"] = used
+                    paged["pages_in_use_max"] = max(
+                        paged["pages_in_use_max"], used)
+                    paged["pages_total"] = int(args.get("pages_total", 0))
+                    paged["radix_nodes_last"] = int(
+                        args.get("radix_nodes", 0))
+                elif name == "prefix-reuse":
+                    paged["prefix_reuse_rows"] += 1
+                    paged["prefix_tokens_reused"] += int(
+                        args.get("cached_tokens", 0))
+                elif name == "admission-backpressure":
+                    paged["admission_backpressure"] += 1
             continue
         if ph != "X":
             continue
@@ -115,6 +135,12 @@ def summarize(events: List[Event]) -> dict:
     batch_durs.sort()
     queue_waits.sort()
     ttfh.sort()
+    # radix hit rate: radix-hit admissions over all prefill-into-slot
+    # spans (every admission opens one, hit or miss)
+    admissions = sum(agg["count"] for (cat, name), agg in phases.items()
+                     if cat == "engine" and name == "prefill-into-slot")
+    paged["radix_hit_rate"] = (paged["prefix_reuse_rows"] / admissions
+                               if admissions else 0.0)
     return {
         "events": len(events),
         "instants": instants,
@@ -129,6 +155,7 @@ def summarize(events: List[Event]) -> dict:
                         "queue_wait_p99_s": _quantile(queue_waits, 0.99),
                         "ttfh_p50_s": _quantile(ttfh, 0.5),
                         "ttfh_p99_s": _quantile(ttfh, 0.99)},
+        "paged_kv": paged,
         "publish_by_subscriber": publish,
         "recoveries": recoveries,
     }
@@ -157,6 +184,15 @@ def summary_lines(events: List[Event]) -> List[str]:
                      f"p99={er['queue_wait_p99_s']:.3f}s "
                      f"first-harvest p50={er['ttfh_p50_s']:.3f}s "
                      f"p99={er['ttfh_p99_s']:.3f}s")
+    pk = s["paged_kv"]
+    if pk["pages_total"] or pk["prefix_reuse_rows"]:
+        lines.append(f"  paged kv: pages {pk['pages_in_use_last']}"
+                     f"/{pk['pages_total']} in use "
+                     f"(peak {pk['pages_in_use_max']}) "
+                     f"radix-hit {pk['radix_hit_rate']:.1%} "
+                     f"reused {pk['prefix_tokens_reused']} prefix tok "
+                     f"over {pk['prefix_reuse_rows']} row(s) "
+                     f"backpressure {pk['admission_backpressure']}")
     for sub, rec in s["publish_by_subscriber"].items():
         lines.append(f"  publish -> {sub:<15} n={rec['count']:<4d} "
                      f"stage={rec['stage_s']:.3f}s "

@@ -35,6 +35,7 @@ shared state is the executor's lock-guarded ports.
 """
 from __future__ import annotations
 
+import os
 import time
 from collections import deque
 from typing import Any, Dict, List, Optional
@@ -44,11 +45,13 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.offpolicy import PartialRolloutCache
+from repro.models.paging import PagePool, RadixCache, paged_blocks, \
+    plan_admission, release_plan
 from repro.obs import trace as obs_trace
 from repro.rl import data as rl_data
 from repro.rl import rewards as rl_rewards
-from repro.rl.rollout import admit_row, rollout_rows_chunk, start_rollout, \
-    start_row_pool
+from repro.rl.rollout import admit_row, admit_row_paged, release_row, \
+    rollout_rows_chunk, start_rollout, start_row_pool
 from repro.rl.scheduler import RowJob
 
 
@@ -152,12 +155,18 @@ class RolloutEngine:
     def __init__(self, executor, *, max_running_rows: int = 0,
                  row_budgets: Optional[List[int]] = None,
                  round_delay_s: float = 0.0, scorer: str = "numeric",
-                 leave_one_out: bool = False):
+                 leave_one_out: bool = False, kv_layout: str = "",
+                 kv_page_size: int = 0, kv_pages: int = 0):
         ex = executor
         assert ex.chunk and ex.chunk > 0, \
             "engine needs chunk scheduling: set chunk >= 1 (--rollout-chunk)"
         from repro.models.serve import SlotPool, assert_engine_cache
-        assert_engine_cache(ex.cfg)
+        self.kv_layout = (kv_layout
+                          or os.environ.get("REPRO_KV_LAYOUT", "")
+                          or "dense").strip().lower()
+        assert self.kv_layout in ("dense", "paged"), \
+            f"kv_layout={self.kv_layout!r}: expected dense|paged"
+        assert_engine_cache(ex.cfg, self.kv_layout)
         self.executor = ex
         self.chunk = ex.chunk
         self.n_chunks = -(-ex.max_new // ex.chunk)
@@ -168,6 +177,22 @@ class RolloutEngine:
         self.row_budgets = [int(b) for b in row_budgets] if row_budgets \
             else None
         self.round_delay_s = float(round_delay_s)
+        self.kv_page_size = int(kv_page_size) or 16
+        self._max_blocks = paged_blocks(self.total_len, self.kv_page_size)
+        # default arena: every slot can hold a full row (no backpressure);
+        # a smaller explicit kv_pages turns shortage into admission
+        # backpressure, but one row must always fit or admission livelocks
+        self.kv_pages = int(kv_pages) or \
+            self.max_running_rows * self._max_blocks
+        if self.kv_layout == "paged":
+            assert self.kv_pages >= self._max_blocks, \
+                f"kv_pages={self.kv_pages} cannot hold one row " \
+                f"({self._max_blocks} blocks of {self.kv_page_size})"
+            self.page_pool: Optional[PagePool] = PagePool(self.kv_pages)
+            self.radix = RadixCache(self.page_pool, self.kv_page_size)
+            self._row_pages: Dict[int, Any] = {}   # slot -> PagePlan
+        else:
+            self.page_pool = None
         self.ledger = GroupLedger(ex.n_per_prompt, scorer=scorer,
                                   leave_one_out=leave_one_out)
         self.waiting: deque = deque()
@@ -182,6 +207,8 @@ class RolloutEngine:
         self.stats: Dict[str, int] = {
             "rows_enqueued": 0, "rows_admitted": 0, "rows_harvested": 0,
             "batches_emitted": 0, "staleness_violations": 0,
+            "admission_backpressure": 0, "radix_hits": 0,
+            "radix_misses": 0, "prefix_tokens_reused": 0,
         }
 
     # ----------------------------------------------------------- admission --
@@ -224,20 +251,64 @@ class RolloutEngine:
         """Fill free slots from the waiting queue: one B=1 prefill per
         admitted row, grafted into its slot.  Each ticket pins the
         committed weight version at this moment -- the row's staleness
-        label."""
+        label.
+
+        Paged layout: admission first plans the row's pages --
+        radix-matched prefix pages are mapped (and only the suffix
+        prefilled), fresh pages allocated for the rest; a dry arena is
+        clean backpressure (the ticket requeues, retried after harvests
+        free pages).  The row's full-block prompt KVs are published to
+        the radix tree right after the prefill, so siblings and
+        re-admitted rows hit them."""
         ex = self.executor
         while self.waiting and self.slots.free_count:
             ticket = self.waiting.popleft()
-            slot = self.slots.acquire()
-            with obs_trace.span("prefill-into-slot", "engine",
-                                batch=ticket.batch_index,
-                                group=ticket.group, sib=ticket.sib,
-                                slot=slot):
-                row = start_rollout(ex.params, ex.cfg,
-                                    jnp.asarray(ticket.prompt)[None],
-                                    self.total_len,
-                                    cache_len=self.total_len + 1)
-                state = admit_row(state, row, slot)
+            if self.page_pool is not None:
+                prompt = tuple(int(t) for t in ticket.prompt)
+                plan = plan_admission(self.page_pool, self.radix, prompt,
+                                      self._max_blocks, self.kv_page_size)
+                if plan is None:
+                    self.waiting.appendleft(ticket)
+                    self.stats["admission_backpressure"] += 1
+                    obs_trace.instant(
+                        "admission-backpressure", "engine",
+                        waiting=len(self.waiting),
+                        pages_in_use=self.page_pool.pages_in_use)
+                    break
+                slot = self.slots.acquire()
+                if plan.n_cached:
+                    self.stats["radix_hits"] += 1
+                    self.stats["prefix_tokens_reused"] += plan.n_cached
+                    obs_trace.instant(
+                        "prefix-reuse", "engine", batch=ticket.batch_index,
+                        group=ticket.group, sib=ticket.sib, slot=slot,
+                        cached_tokens=plan.n_cached,
+                        prompt_tokens=len(prompt))
+                else:
+                    self.stats["radix_misses"] += 1
+                pages_row = jnp.asarray(
+                    plan.table + (self.page_pool.trash_page,), jnp.int32)
+                with obs_trace.span("prefill-into-slot", "engine",
+                                    batch=ticket.batch_index,
+                                    group=ticket.group, sib=ticket.sib,
+                                    slot=slot, cached=plan.n_cached):
+                    state = admit_row_paged(
+                        ex.params, ex.cfg, state,
+                        jnp.asarray(ticket.prompt)[None], pages_row, slot,
+                        n_cached=plan.n_cached)
+                self.radix.insert(prompt, plan.table)
+                self._row_pages[slot] = plan
+            else:
+                slot = self.slots.acquire()
+                with obs_trace.span("prefill-into-slot", "engine",
+                                    batch=ticket.batch_index,
+                                    group=ticket.group, sib=ticket.sib,
+                                    slot=slot):
+                    row = start_rollout(ex.params, ex.cfg,
+                                        jnp.asarray(ticket.prompt)[None],
+                                        self.total_len,
+                                        cache_len=self.total_len + 1)
+                    state = admit_row(state, row, slot)
             ticket.slot = slot
             ticket.weight_version = ex.weight_version
             ticket.admit_t = time.monotonic()
@@ -256,7 +327,10 @@ class RolloutEngine:
         t0 = time.monotonic()
         state = self.cache.get(self._rid) if self._rid is not None \
             else start_row_pool(ex.cfg, self.max_running_rows,
-                                self.total_len, self.prompt_len)
+                                self.total_len, self.prompt_len,
+                                kv_layout=self.kv_layout,
+                                kv_page_size=self.kv_page_size,
+                                kv_pages=self.kv_pages)
         self._rid = None
         with obs_trace.span("admit", "engine", waiting=len(self.waiting),
                             free=self.slots.free_count):
@@ -273,21 +347,28 @@ class RolloutEngine:
                                            temperature=ex.temperature)
             for t in self.tickets.values():
                 t.chunks_done += 1
-            emitted = self._harvest(state)
+            state, emitted = self._harvest(state)
+        if self.page_pool is not None:
+            obs_trace.instant("pages", "engine",
+                              pages_in_use=self.page_pool.pages_in_use,
+                              pages_total=self.page_pool.n_pages,
+                              radix_nodes=len(self.radix))
         self._rid = self.cache.put(state)
         self._busy_s += time.monotonic() - t0
         return emitted
 
-    def _harvest(self, state) -> List[dict]:
+    def _harvest(self, state):
         """Free every finished row (EOS, or per-row budget exhausted)
-        into the ledger; assemble and return batches whose groups all
-        completed."""
+        into the ledger; assemble the batches whose groups all
+        completed.  Returns ``(state, emitted)`` -- paged harvests also
+        release the row's page refs and remap its table to the trash
+        page (``release_row``), so the state changes here."""
         ex = self.executor
         done = np.asarray(state.done)
         ready = [s for s, t in self.tickets.items()
                  if done[s] or t.chunks_done >= t.max_chunks]
         if not ready:
-            return []
+            return state, []
         emitted = []
         keep = self.prompt_len + ex.max_new
         with obs_trace.span("harvest", "engine", rows=len(ready)):
@@ -296,6 +377,9 @@ class RolloutEngine:
             for s in ready:
                 t = self.tickets.pop(s)
                 self.slots.release(s)
+                if self.page_pool is not None:
+                    release_plan(self.page_pool, self._row_pages.pop(s))
+                    state = release_row(state, s)
                 row = {
                     "tokens": tokens_np[s, :keep].copy(),
                     "logp": blp_np[s, :keep].copy(),
@@ -320,7 +404,7 @@ class RolloutEngine:
                                       batch=t.batch_index, group=t.group)
                     if bk["groups_done"] == ex.n_prompts:
                         emitted.append(self._emit(t.batch_index))
-        return emitted
+        return state, emitted
 
     def _emit(self, batch_index: int) -> dict:
         """Assemble the trainer-shaped batch from a batch index's
@@ -393,15 +477,31 @@ class RolloutEngine:
         for s in list(self.tickets):
             self.tickets.pop(s)
             self.slots.release(s)
+            if self.page_pool is not None:
+                release_plan(self.page_pool, self._row_pages.pop(s))
         for b in list(self._batches):
             self.ledger.invalidate_batch(b)
             del self._batches[b]
+        if self.page_pool is not None:
+            # radix residency is the last class of page refs; after
+            # dropping it the arena must be fully free or pages leaked
+            self.radix.clear()
+            self.page_pool.assert_no_leaks()
         return dropped
 
     def snapshot_stats(self) -> Dict[str, Any]:
         """RPC-sized engine counters (includes the live occupancy)."""
-        return {**self.stats, "waiting": len(self.waiting),
-                "running": len(self.tickets),
-                "max_running_rows": self.max_running_rows,
-                "open_groups": self.ledger.open_groups,
-                "busy_s": self._busy_s}
+        out = {**self.stats, "waiting": len(self.waiting),
+               "running": len(self.tickets),
+               "max_running_rows": self.max_running_rows,
+               "open_groups": self.ledger.open_groups,
+               "busy_s": self._busy_s, "kv_layout": self.kv_layout}
+        if self.page_pool is not None:
+            lookups = self.stats["radix_hits"] + self.stats["radix_misses"]
+            out.update(
+                pages_in_use=self.page_pool.pages_in_use,
+                pages_total=self.page_pool.n_pages,
+                radix_nodes=len(self.radix),
+                radix_hit_rate=self.stats["radix_hits"] / lookups
+                if lookups else 0.0)
+        return out

@@ -183,13 +183,29 @@ def action_mask(state: RolloutState) -> jax.Array:
 # spare slot (``cache_len == total_len + 1``) until the slot is reused.
 
 def start_row_pool(cfg, n_rows: int, total_len: int, prompt_len: int,
-                   dtype=jnp.float32) -> RolloutState:
+                   dtype=jnp.float32, *, kv_layout: str = "dense",
+                   kv_page_size: int = 0, kv_pages: int = 0) -> RolloutState:
     """Empty slot-pool state: every row starts done (a free slot) with
     its decode cursor at 0.  No prefill runs here -- rows get real
-    content only via ``admit_row``."""
+    content only via ``admit_row`` (dense) / ``admit_row_paged``.
+
+    ``kv_layout="paged"`` swaps the dense per-row ring for the paged
+    arena: KV memory is ``kv_pages`` shared pages of ``kv_page_size``
+    slots (defaults: page size 16; enough pages for every row, i.e. no
+    admission backpressure) and each row owns a page table instead of a
+    ring stripe, with all tables starting on the trash page."""
     from repro.models.serve import assert_engine_cache, init_cache
-    assert_engine_cache(cfg)
-    cache = init_cache(cfg, n_rows, total_len + 1, dtype)
+    layout = kv_layout or "dense"
+    assert_engine_cache(cfg, layout)
+    if layout == "paged":
+        from repro.models.paging import paged_blocks
+        page_size = int(kv_page_size) or 16
+        mb = paged_blocks(total_len, page_size)
+        n_pages = int(kv_pages) or n_rows * mb
+        cache = init_cache(cfg, n_rows, total_len, dtype, layout="paged",
+                           page_size=page_size, n_pages=n_pages)
+    else:
+        cache = init_cache(cfg, n_rows, total_len + 1, dtype)
     cache["pos"] = jnp.zeros((n_rows,), jnp.int32)
     return RolloutState(
         tokens=jnp.zeros((n_rows, total_len), jnp.int32),
@@ -222,6 +238,80 @@ def admit_row(state: RolloutState, row: RolloutState, slot) -> RolloutState:
                         prompt_len=state.prompt_len)
 
 
+@functools.partial(jax.jit, static_argnames=("cfg", "n_cached"))
+def admit_row_paged(params, cfg, state: RolloutState, prompt, pages_row,
+                    slot, *, n_cached: int) -> RolloutState:
+    """Admit one prompt row into a *paged* pool: prefill only the
+    suffix past the ``n_cached`` radix-cached prompt tokens, reading
+    the cached prefix KVs straight out of the shared pages.
+
+    prompt: [1, Sp] int32; pages_row: [max_blocks + 1] int32 physical
+    pages for the row (last entry the trash page); ``n_cached`` is
+    static (block-aligned, < Sp) so admissions with the same hit length
+    share one compilation, and ``slot`` is traced like ``admit_row``'s.
+
+    With ``n_cached == 0`` the extend path degenerates to a full
+    prefill (empty prefix concat), so fresh admissions produce logits
+    and KVs bit-for-bit equal to the dense ``start_rollout`` graft."""
+    from repro.models import backbone as bb
+    from repro.models.serve import _extend_collect
+    sl = jnp.asarray(slot)
+    Sp = prompt.shape[1]
+    T = state.tokens.shape[1]
+    cache = state.cache
+    P = cache["segments"][0]["k"].shape[2]
+    ncb = n_cached // P
+    assert n_cached == ncb * P and n_cached < Sp, (n_cached, P, Sp)
+    prefix_kvs = []
+    for seg in cache["segments"]:
+        L = seg["k"].shape[0]
+        tail = seg["k"].shape[3:]
+        prefix_kvs.append(
+            (seg["k"][:, pages_row[:ncb]].reshape(L, 1, n_cached, *tail),
+             seg["v"][:, pages_row[:ncb]].reshape(L, 1, n_cached, *tail)))
+    x = bb._embed(params, cfg, prompt[:, n_cached:])
+    x, kv_segs = _extend_collect(params, cfg, x, prefix_kvs, n_cached)
+    last_logits = bb._logits(params, cfg, x[:, -1])
+
+    pos_sfx = n_cached + jnp.arange(Sp - n_cached)
+    pg = pages_row[pos_sfx // P]
+    off = pos_sfx % P
+    new_segs = []
+    for seg, (ks, vs) in zip(cache["segments"], kv_segs):
+        new_segs.append({
+            "k": seg["k"].at[:, pg, off].set(ks[:, 0].astype(seg["k"].dtype)),
+            "v": seg["v"].at[:, pg, off].set(vs[:, 0].astype(seg["v"].dtype)),
+        })
+    row_tokens = jnp.zeros((T,), jnp.int32).at[:Sp].set(prompt[0])
+    new_cache = {
+        "pos": cache["pos"].at[sl].set(Sp),
+        "page_table": cache["page_table"].at[sl].set(
+            pages_row.astype(jnp.int32)),
+        "segments": new_segs,
+    }
+    return RolloutState(
+        tokens=state.tokens.at[sl].set(row_tokens),
+        behavior_logp=state.behavior_logp.at[sl].set(0.0),
+        cache=new_cache,
+        last_logits=state.last_logits.at[sl].set(
+            last_logits[0].astype(state.last_logits.dtype)),
+        done=state.done.at[sl].set(False),
+        prompt_len=state.prompt_len)
+
+
+@jax.jit
+def release_row(state: RolloutState, slot) -> RolloutState:
+    """Remap a harvested row's page table to the trash page so its
+    zombie decode writes (the slot keeps ticking until readmitted) can
+    never land in pages the allocator may have handed to another row."""
+    pt = state.cache["page_table"]
+    trash = state.cache["segments"][0]["k"].shape[1] - 1
+    row = jnp.full((pt.shape[1],), trash, pt.dtype)
+    new_cache = {**state.cache,
+                 "page_table": pt.at[jnp.asarray(slot)].set(row)}
+    return state._replace(cache=new_cache)
+
+
 @functools.partial(jax.jit,
                    static_argnames=("cfg", "n_steps", "temperature"))
 def rollout_rows_chunk(params, cfg, state: RolloutState, key, *,
@@ -231,9 +321,17 @@ def rollout_rows_chunk(params, cfg, state: RolloutState, key, *,
     writes at its own ``cache["pos"][r]``.  Done (or free) rows emit PAD
     and clamp their cursor at ``total_len`` -- the ring's spare slot --
     so their zombie KV writes never touch a live row's slots, and the
-    token write at the out-of-range column drops."""
+    token write at the out-of-range column drops.  Paged pools clamp at
+    ``max_blocks * page_size`` instead: the block index then selects the
+    table's trailing trash entry (same zombie-write guarantee, and the
+    clamp is >= total_len so token writes still drop)."""
     B, T = state.tokens.shape
     rows = jnp.arange(B)
+    if "page_table" in state.cache:
+        clamp = (state.cache["page_table"].shape[1] - 1) \
+            * state.cache["segments"][0]["k"].shape[2]
+    else:
+        clamp = T
 
     def body(carry, k):
         tokens, blp, cache, logits, done = carry
@@ -245,7 +343,7 @@ def rollout_rows_chunk(params, cfg, state: RolloutState, key, *,
         tokens = tokens.at[rows, col].set(tok, mode="drop")
         blp = blp.at[rows, col].set(lp, mode="drop")
         new_logits, cache = decode_step(params, cfg, cache, tok[:, None])
-        cache = {**cache, "pos": jnp.minimum(cache["pos"], T)}
+        cache = {**cache, "pos": jnp.minimum(cache["pos"], clamp)}
         return (tokens, blp, cache, new_logits, new_done), None
 
     keys = jax.random.split(key, n_steps)

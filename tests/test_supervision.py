@@ -13,9 +13,9 @@ import pytest
 
 from repro.core import (ActorDied, CommType, CommunicationChannel,
                         ExecutorController, FaultPlan, GeneratorExecutor,
-                        RefPolicyExecutor, RestartPolicy, RewardExecutor,
-                        Supervisor, TrainerExecutor, WeightFabric,
-                        WeightsCommunicationChannel, as_handle,
+                        PoolConfig, RefPolicyExecutor, RestartPolicy,
+                        RewardExecutor, Supervisor, TrainerExecutor,
+                        WeightFabric, WeightsCommunicationChannel, as_handle,
                         build_generator_pool, spawn_actor)
 from repro.core.fabric import payload_key
 from repro.core.genpool import WorkAssignment
@@ -400,3 +400,53 @@ def test_attach_and_detach_generators_midrun():
     assert [e["n_workers"] for e in
             ctl.supervisor.events("pool-resized")] == [3, 2]
     assert max(ctl.staleness_hist) <= 2
+
+
+# -------------------------------------------- paged engine re-admission --
+
+def test_paged_engine_kill_respawns_with_radix_reuse():
+    """Chaos-kill a proc-backed *paged* engine worker: the respawned
+    engine starts from an empty arena and radix, and the readmit hook's
+    re-enqueued batches must flow through the radix cache -- sibling
+    re-admissions hit the republished prompt prefix instead of
+    re-prefilling it -- while the per-row staleness contract holds."""
+    cfg = micro_cfg()
+    rew = RewardExecutor(n_per_prompt=2)
+    trn = TrainerExecutor(cfg, lr=5e-2, seed=0)
+    gens, chans = build_generator_pool(
+        cfg, trn,
+        lambda g: ArithmeticTasks(prompt_len=8, max_operand=4, ops="+",
+                                  seed=100 + g),
+        n_generators=2, seed=100, n_prompts=2, n_per_prompt=2,
+        max_new=4, temperature=1.0, chunk=2, transport="proc")
+    chans += [CommunicationChannel("completions", gens[0], rew,
+                                   CommType.GATHER),
+              CommunicationChannel("completions_with_reward", rew, trn,
+                                   CommType.SCATTER)]
+    chaos = FaultPlan.parse("kill:generator1@batch=3")
+    ctl = ExecutorController(
+        gens + [rew, trn], chans, max_steps=8, mode="async", staleness=2,
+        timeout=300.0, supervise=Supervisor(chaos=chaos),
+        pool=PoolConfig(engine=True, max_inflight=3, kv_layout="paged",
+                        kv_page_size=4))
+    hist = ctl.run()
+    try:
+        assert chaos.unfired() == []
+        sup = ctl.supervisor
+        assert [e["actor"] for e in sup.events("respawned")] == \
+            ["generator1"]
+        assert [e["actor"] for e in sup.events("readmitted")] == \
+            ["generator1"]
+        assert [h["step"] for h in hist] == list(range(8))
+        for gen in gens:
+            st = gen.call("engine_stats")
+            assert st["kv_layout"] == "paged"
+            assert st["staleness_violations"] == 0
+            assert st["waiting"] == 0 and st["running"] == 0
+            # every admitted prompt has a sibling: the prefix is
+            # recomputed at most once per prompt, the rest hit the radix
+            assert st["radix_hits"] > 0
+            assert st["prefix_tokens_reused"] > 0
+    finally:
+        for gen in gens:
+            gen.close()

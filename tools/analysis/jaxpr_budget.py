@@ -229,6 +229,81 @@ def _engine_rows_retrace() -> int:
     return jit_cache_entries(rollout.rollout_rows_chunk) - before - 1
 
 
+def _paged_cfg_state():
+    import jax
+    import jax.numpy as jnp
+    from repro.configs.llama_paper import smoke
+    from repro.models import init_params
+    from repro.rl import rollout
+    cfg = smoke().replace(n_layers=1, d_model=32, n_heads=2, n_kv_heads=2,
+                          head_dim=16, d_ff=64, vocab=4096)
+    params = init_params(cfg, jax.random.PRNGKey(0), jnp.float32)
+    # n_pages well beyond what 4 rows need: a full-arena materialization
+    # is then strictly larger than any legitimate per-row gather
+    pool = rollout.start_row_pool(cfg, 4, 9, 5, kv_layout="paged",
+                                  kv_page_size=5, kv_pages=16)
+    return cfg, params, pool
+
+
+def _paged_admit(cfg, params, pool, slot, pages):
+    import jax.numpy as jnp
+    from repro.rl import rollout
+    prompt = jnp.full((1, 5), 5, jnp.int32)
+    trash = pool.cache["segments"][0]["k"].shape[1] - 1
+    pages_row = jnp.asarray(list(pages) + [trash], jnp.int32)
+    return rollout.admit_row_paged(params, cfg, pool, prompt, pages_row,
+                                   slot, n_cached=0)
+
+
+def _paged_admit_retrace() -> int:
+    """Paged admissions into different slots with different page tables
+    must share one compilation per (cfg, n_cached): slot and table are
+    traced data; returns entries added minus the one legal compile."""
+    from repro.rl import rollout
+    cfg, params, pool = _paged_cfg_state()
+    before = jit_cache_entries(rollout.admit_row_paged)
+    pool = _paged_admit(cfg, params, pool, 0, (0, 1))
+    pool = _paged_admit(cfg, params, pool, 3, (7, 2))
+    return jit_cache_entries(rollout.admit_row_paged) - before - 1
+
+
+def _paged_rows_retrace() -> int:
+    """Paged decode rounds must not retrace as occupancy or page-table
+    contents change: both are data, never shapes."""
+    import jax
+    from repro.rl import rollout
+    cfg, params, pool = _paged_cfg_state()
+    pool = _paged_admit(cfg, params, pool, 0, (0, 1))
+    before = jit_cache_entries(rollout.rollout_rows_chunk)
+    pool = rollout.rollout_rows_chunk(params, cfg, pool,
+                                      jax.random.PRNGKey(1), n_steps=2)
+    pool = _paged_admit(cfg, params, pool, 2, (5, 3))   # occupancy+tables
+    rollout.rollout_rows_chunk(params, cfg, pool,
+                               jax.random.PRNGKey(2), n_steps=2)
+    return jit_cache_entries(rollout.rollout_rows_chunk) - before - 1
+
+
+def _paged_attn_gather() -> int:
+    """The paged-attention jnp route gathers per-row pages ([B, mb*P]
+    logical rows); an intermediate as large as the whole arena means
+    someone materialized every page for every row."""
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from repro.kernels import dispatch
+    B, H, K, hd, P, mb, n_pages = 4, 4, 2, 16, 5, 2, 64
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (B, H, hd))
+    ak = jax.random.normal(ks[1], (n_pages + 1, P, K, hd))
+    av = jax.random.normal(ks[2], (n_pages + 1, P, K, hd))
+    pt = jnp.asarray(np.arange(B * (mb + 1)).reshape(B, mb + 1) % n_pages,
+                     jnp.int32)
+    pos = jnp.asarray([3, 5, 7, 9], jnp.int32)
+    jx = jax.make_jaxpr(
+        lambda q_: dispatch.paged_attention(q_, ak, av, pt, pos))(q)
+    return count_big_intermediates(jx.jaxpr, (n_pages + 1) * P * K * hd)
+
+
 HOT_PATHS: List[HotPath] = [
     HotPath("fused_logprob_fwd", 0, _logprob_fwd,
             "float intermediates >= T*V in the streamed logprob forward"),
@@ -255,6 +330,17 @@ HOT_PATHS: List[HotPath] = [
     HotPath("engine_rows_retrace", 0, _engine_rows_retrace,
             "extra rollout_rows_chunk jit entries across decode rounds "
             "with changed slot occupancy"),
+    HotPath("paged_admit_retrace", 0, _paged_admit_retrace,
+            "extra admit_row_paged jit entries across admissions into "
+            "different slots with different page tables (both must stay "
+            "traced data)"),
+    HotPath("paged_rows_retrace", 0, _paged_rows_retrace,
+            "extra rollout_rows_chunk jit entries across paged decode "
+            "rounds with changed occupancy and page-table contents"),
+    HotPath("paged_attn_gather", 0, _paged_attn_gather,
+            "float intermediates >= the full KV arena in paged "
+            "attention (per-row page gathers must stay [B, mb*P]-sized, "
+            "never arena-sized)"),
 ]
 
 
